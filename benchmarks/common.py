@@ -1,0 +1,104 @@
+"""Shared harness for the per-paper-table benchmarks.
+
+Every module exposes run(quick: bool) -> list[(name, us_per_call, derived)].
+
+Calibration note (EXPERIMENTS.md §Table-2): availability bias only moves
+final accuracy when (a) the model is capacity-limited (an interpolating
+model reaches the same minimizer under any positive client weighting) and
+(b) availability is strongly class-correlated. The container-scale stand-in
+for the paper's SVHN/CIFAR setting is therefore a 10-class Gaussian task
+with heavy class overlap (margin 0.3), a linear classifier, Dirichlet(0.05)
+label skew, and phi-contrast ~10x between the first and second half of the
+classes (p_i = <nu_i, phi>, the paper's own construction) — under which the
+paper's Table-2 ordering reproduces cleanly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                        make_round_fn)
+from repro.data import FederatedDataset, dirichlet_partition, \
+    make_image_classification
+from repro.models import cnn
+
+
+def build_fl_image_harness(m=32, alpha=0.05, seed=0, n=12000,
+                           shape=(8, 8, 1), margin=0.3, noise=1.0,
+                           model="linear"):
+    task = make_image_classification(seed=seed, n=n, shape=shape,
+                                     margin=margin, noise=noise)
+    nprng = np.random.default_rng(seed)
+    idx, nu = dirichlet_partition(nprng, task.labels, m, alpha=alpha,
+                                  min_per_client=32)
+    ds = FederatedDataset(dict(images=task.images, labels=task.labels), idx,
+                          seed=seed)
+    # p_i = <nu_i, phi> with a strong class contrast (paper's construction,
+    # Appendix J.3, pushed to the regime where the bias is visible)
+    prng = np.random.default_rng(seed + 2)
+    C = task.n_classes
+    phi = np.concatenate([prng.uniform(0.3, 1.0, C // 2),
+                          prng.uniform(0.02, 0.12, C - C // 2)])
+    base_p = jnp.asarray(np.clip(nu @ phi, 0.02, 1.0).astype(np.float32))
+
+    d_in = int(np.prod(shape))
+    if model == "linear":
+        params = cnn.init_mlp(jax.random.PRNGKey(seed), d_in=d_in,
+                              n_classes=C, hidden=())
+        apply_fn = cnn.mlp_apply
+    elif model == "mlp":
+        params = cnn.init_mlp(jax.random.PRNGKey(seed), d_in=d_in,
+                              n_classes=C, hidden=(64,))
+        apply_fn = cnn.mlp_apply
+    else:
+        params = cnn.init_cnn(jax.random.PRNGKey(seed), in_shape=shape,
+                              n_classes=C, channels=(16, 16), hidden=(64,))
+        apply_fn = cnn.cnn_apply
+    loss_fn = cnn.make_image_loss_fn(apply_fn)
+    eval_batch = {k: jnp.asarray(v) for k, v in ds.eval_batch(1024).items()}
+    train_batch = {k: jnp.asarray(v)
+                   for k, v in ds.eval_batch(1024, seed=3).items()}
+    return dict(params=params, loss_fn=loss_fn, apply_fn=apply_fn, ds=ds,
+                base_p=base_p, eval_batch=eval_batch,
+                train_batch=train_batch)
+
+
+def run_fl(harness, strategy, dynamics, rounds, *, s=4, b=16, gamma=0.3,
+           eta_l=0.05, eta_g=1.0, seed=0, eval_every=0):
+    """Returns (tail_train_acc, tail_test_acc, history, us_per_round).
+
+    Accuracies follow the paper's Table-2 protocol: averaged over the last
+    ~1/3 of the rounds (the paper averages the final 50 of 2000)."""
+    m = len(harness["ds"].client_indices)
+    apply_fn = harness["apply_fn"]
+    fl = FLConfig(m=m, s=s, eta_l=eta_l, eta_g=eta_g, strategy=strategy)
+    av = AvailabilityCfg(kind=dynamics, gamma=gamma)
+    state = init_fl_state(jax.random.PRNGKey(seed), fl, harness["params"])
+    rf = jax.jit(make_round_fn(fl, harness["loss_fn"], {}, av,
+                               harness["base_p"]))
+    t_round = []
+    hist = []
+    tail_start = max(0, rounds - max(10, rounds // 3))
+    tail_tr, tail_te = [], []
+    for t in range(rounds):
+        batches = {k: jnp.asarray(v) for k, v in
+                   harness["ds"].round_batches(t, s, b).items()}
+        t0 = time.time()
+        state, metrics = rf(state, batches)
+        jax.block_until_ready(state.global_tr)
+        t_round.append(time.time() - t0)
+        if eval_every and (t + 1) % eval_every == 0:
+            acc = float(cnn.accuracy(apply_fn, state.global_tr,
+                                     harness["eval_batch"]))
+            hist.append((t + 1, acc))
+        if t >= tail_start and (t % 3 == 0 or t == rounds - 1):
+            tail_te.append(float(cnn.accuracy(
+                apply_fn, state.global_tr, harness["eval_batch"])))
+            tail_tr.append(float(cnn.accuracy(
+                apply_fn, state.global_tr, harness["train_batch"])))
+    return (float(np.mean(tail_tr)), float(np.mean(tail_te)), hist,
+            float(np.mean(t_round[1:]) * 1e6))

@@ -1,0 +1,19 @@
+"""Fig. 3 / Example 2: FedAvg accuracy degradation as the sine
+non-stationarity gamma grows (p_i^t = p*[gamma sin + (1-gamma)]).
+derived = final test accuracy (%)."""
+from __future__ import annotations
+
+from benchmarks.common import build_fl_image_harness, run_fl
+
+
+def run(quick=False):
+    rounds = 100 if quick else 400
+    harness = build_fl_image_harness(m=32)
+    rows = []
+    for gamma in (0.1, 0.5):
+        for algo in ("fedavg_active", "fedawe"):
+            tr, te, _, us = run_fl(harness, algo, "sine", rounds,
+                                   gamma=gamma)
+            rows.append((f"fig3/gamma{gamma}/{algo}", round(us, 1),
+                         round(te * 100, 2)))
+    return rows

@@ -1,0 +1,71 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative of Mosaic-compiled TPU perf), so the timed comparison is the
+FUSED jnp echo-aggregate (one pass, what the kernel implements) vs the naive
+two-op formulation (materialize x† then reduce) — the HBM-traffic argument
+behind the kernel. derived = fused/naive time ratio (<1 = win)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.echo_aggregate.ref import echo_aggregate_ref
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def _time(f, *args, iters=20):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(quick=False):
+    rows = []
+    m, N = 16, (1 << 20 if quick else 1 << 22)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, N)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(m, N)).astype(np.float32))
+    mask = jnp.asarray((rng.random(m) < 0.6).astype(np.float32))
+    echo = jnp.asarray(rng.integers(1, 8, m).astype(np.float32))
+
+    fused = jax.jit(lambda x, y: echo_aggregate_ref(x, y, mask, echo, 1.5))
+
+    @jax.jit
+    def naive(x, y):
+        xd = x - 1.5 * echo[:, None] * (x - y)          # materialize x†
+        xd = xd * mask[:, None]                          # materialize masked
+        return xd.sum(0) / jnp.maximum(mask.sum(), 1.0)
+
+    t_fused = _time(fused, x, y)
+    t_naive = _time(naive, x, y)
+    rows.append(("kernels/echo_aggregate/fused_us", round(t_fused, 1),
+                 round(t_fused / t_naive, 3)))
+
+    # flash-style (chunked, O(L*S) streamed) vs full-materialization attention
+    B, H, L, D = 1, 4, (512 if quick else 1024), 64
+    q = jnp.asarray(rng.normal(size=(B, H, L, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, H, L, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, H, L, D)).astype(np.float32))
+    full = jax.jit(lambda q, k, v: mha_ref(q, k, v))
+
+    from repro.models.layers import attention
+
+    qm = q.transpose(0, 2, 1, 3)
+    km = k.transpose(0, 2, 1, 3)
+    vm = v.transpose(0, 2, 1, 3)
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    chunked = jax.jit(lambda q, k, v: attention(q, k, v, pos, pos,
+                                                q_chunk=128))
+    t_full = _time(full, q, k, v, iters=5)
+    t_chunk = _time(chunked, qm, km, vm, iters=5)
+    rows.append(("kernels/attention/chunked_us", round(t_chunk, 1),
+                 round(t_chunk / t_full, 3)))
+    return rows

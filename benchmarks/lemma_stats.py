@@ -1,0 +1,44 @@
+"""Lemma 2 (unavailability moments) and Lemma 4 (spectral gap of the
+implicit-gossip mixing matrix) numerical checks.
+derived = measured/bound ratio (must be <= ~1)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.mixing import lemma4_bound, rho_monte_carlo
+
+
+def run(quick=False):
+    rows = []
+    # Lemma 2
+    rng = np.random.default_rng(0)
+    T, n = (200, 100) if quick else (400, 300)
+    for delta in (0.2, 0.5, 0.8):
+        t0 = time.time()
+        ts = np.arange(T)
+        p_t = delta + (1 - delta) * 0.5 * (1 + np.sin(0.3 * ts))
+        gaps, gaps2 = [], []
+        for _ in range(n):
+            avail = rng.random(T) < p_t
+            tau = -1
+            for t in range(T):
+                gaps.append(t - tau)
+                gaps2.append((t - tau) ** 2)
+                if avail[t]:
+                    tau = t
+        us = (time.time() - t0) * 1e6 / (T * n)
+        rows.append((f"lemma2/first-moment/d{delta}", round(us, 3),
+                     round(np.mean(gaps) * delta, 3)))
+        rows.append((f"lemma2/second-moment/d{delta}", round(us, 3),
+                     round(np.mean(gaps2) * delta ** 2 / 2, 3)))
+    # Lemma 4
+    for delta, m in ((0.3, 8), (0.6, 8)):
+        t0 = time.time()
+        rho, _ = rho_monte_carlo(lambda t: np.full(m, delta), m,
+                                 n_samples=800 if quick else 3000)
+        us = (time.time() - t0) * 1e6
+        rows.append((f"lemma4/rho-vs-bound/d{delta}-m{m}", round(us, 1),
+                     round(rho / lemma4_bound(delta, m), 4)))
+    return rows

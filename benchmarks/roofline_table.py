@@ -1,0 +1,30 @@
+"""Roofline report: reads results/dryrun.json (produced by
+launch/dryrun.py) and emits one row per (arch x shape x mesh).
+derived = dominant-term seconds; us_per_call = compile seconds * 1e6."""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN = os.environ.get("REPRO_DRYRUN_JSON", "results/dryrun.json")
+
+
+def run(quick=False):
+    rows = []
+    if not os.path.exists(DRYRUN):
+        rows.append(("roofline/missing-dryrun-json", 0.0, -1))
+        return rows
+    with open(DRYRUN) as f:
+        recs = json.load(f)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if not r.get("ok"):
+            rows.append((name, 0.0, -1))
+            continue
+        rl = r["roofline"]
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        rows.append((name, round(r.get("compile_s", 0) * 1e6, 0),
+                     round(dom, 4)))
+    n_ok = sum(1 for r in recs if r.get("ok"))
+    rows.append(("roofline/combinations-ok", 0.0, n_ok))
+    return rows

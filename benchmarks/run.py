@@ -1,0 +1,47 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "fig2_bias",             # Fig. 2 / Example 1
+    "fig3_nonstationarity",  # Fig. 3 / Example 2
+    "table2_comparison",     # Table 2
+    "table8_staleness",      # Table 8
+    "table9_10_ablations",   # Tables 9-10 (gamma / alpha ablations)
+    "lemma_stats",           # Lemma 2 + Lemma 4
+    "corollary1_speedup",    # Corollary 1 linear speedup in m
+    "kernels_bench",         # kernel hot-spot micro-benches
+    "roofline_table",        # §Roofline report from the dry-run artifacts
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced rounds (CI budget)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args(argv)
+
+    mods = MODULES if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run(quick=args.quick):
+                print(f"{row[0]},{row[1]},{row[2]}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Table 8: first round to reach fractions of the best test accuracy under
+the sine dynamics (staleness study of implicit gossiping). Reuses the cached
+histories from table2_comparison. derived = first round reaching 3/4 of the
+best accuracy (0 = never)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.table2_comparison import ALGOS, CACHE
+
+
+def run(quick=False):
+    if not os.path.exists(CACHE):
+        from benchmarks import table2_comparison
+
+        table2_comparison.run(quick=quick)
+    with open(CACHE) as f:
+        cache = json.load(f)
+    dyn = "sine"
+    best = max(v["test"] for k, v in cache.items()
+               if k.startswith(dyn + "/"))
+    rows = []
+    for algo in ALGOS:
+        key = f"{dyn}/{algo}"
+        if key not in cache:
+            continue
+        target = 0.75 * best
+        first = 0
+        for t, acc in cache[key]["hist"]:
+            if acc >= target:
+                first = t
+                break
+        rows.append((f"table8/{dyn}/{algo}", 0.0, first))
+    return rows

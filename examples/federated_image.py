@@ -1,0 +1,46 @@
+"""End-to-end driver: federated image classification under non-stationary
+client unavailability (the paper's Table-2 setting at container scale).
+
+100 clients, Dirichlet(0.1) label skew, data-correlated base availability
+probabilities, sine non-stationarity; compares FedAWE against FedAvg over
+active clients for a few hundred rounds and writes metrics + a checkpoint.
+
+Run:  PYTHONPATH=src python examples/federated_image.py [--rounds 300]
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=300)
+    ap.add_argument("--m", type=int, default=100)
+    ap.add_argument("--dynamics", default="sine")
+    args = ap.parse_args()
+
+    results = {}
+    for strategy in ("fedawe", "fedavg_active"):
+        print(f"\n=== {strategy} / {args.dynamics} / m={args.m} ===")
+        final = train.main([
+            "--preset", "image", "--strategy", strategy,
+            "--dynamics", args.dynamics, "--rounds", str(args.rounds),
+            "--m", str(args.m), "--s", "5", "--batch", "32",
+            "--out", f"results/example_image_{strategy}.json",
+            "--ckpt", f"results/example_image_{strategy}_ckpt",
+        ])
+        results[strategy] = final["eval_acc"]
+
+    print("\n==== summary ====")
+    for k, v in results.items():
+        print(f"{k:16s} test acc = {100*v:.2f}%")
+    if results["fedawe"] >= results["fedavg_active"]:
+        print("FedAWE >= FedAvg under non-stationary unavailability ✓")
+    else:
+        print("note: FedAvg won this seed — increase --rounds; the gap "
+              "emerges as availability bias accumulates", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

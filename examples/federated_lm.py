@@ -1,0 +1,81 @@
+"""Federated language-model training with FedAWE on the unified transformer
+substrate (the same model code the pod tier dry-runs at 2.6B-140B scale).
+
+--scale tiny  (default): 2-layer d=64 transformer, CPU-friendly demo.
+--scale 100m           : GPT-style ~100M decoder (12L, d=768, 12H) — the
+                         deliverable-(b) end-to-end config; run it on real
+                         accelerators (a CPU container takes ~30s/round).
+
+Run:  PYTHONPATH=src python examples/federated_lm.py --rounds 100
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AvailabilityCfg, FLConfig, base_probs,
+                        init_fl_state, make_round_fn, run_rounds)
+from repro.data import FederatedDataset, dirichlet_partition, make_lm_tokens
+from repro.models import BlockCfg, ModelConfig, init_params, lm_loss
+from repro.models.model import count_params
+
+SCALES = {
+    "tiny": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                 head_dim=16, d_ff=128),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                 head_dim=64, d_ff=3072),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny", choices=list(SCALES))
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--m", type=int, default=16)
+    ap.add_argument("--s", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--dynamics", default="sine")
+    args = ap.parse_args()
+
+    dims = SCALES[args.scale]
+    cfg = ModelConfig("fl-lm", vocab=1024, pattern=(BlockCfg("attn"),),
+                      dtype="float32", remat=False, **dims)
+    print(f"model: {cfg.name} ({count_params(cfg)/1e6:.1f}M params)")
+
+    lm = make_lm_tokens(seed=0, n_seq=4096, seq_len=args.seq, vocab=cfg.vocab)
+    tokens, labels = lm.tokens[:, :-1], lm.tokens[:, 1:]
+    pseudo = tokens.mean(axis=1).astype(np.int64) % 10
+    idx, nu = dirichlet_partition(np.random.default_rng(0), pseudo, args.m,
+                                  alpha=0.1, min_per_client=args.batch)
+    ds = FederatedDataset(dict(tokens=tokens, labels=labels), idx)
+    from repro.core.availability import base_probs_from_data
+    base_p = base_probs_from_data(jax.random.PRNGKey(1), jnp.asarray(nu))
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def loss_fn(tr, frozen, batch, key):
+        b = dict(tokens=batch["tokens"], labels=batch["labels"],
+                 mask=jnp.ones_like(batch["labels"], jnp.float32))
+        return lm_loss(tr, cfg, b)
+
+    fl = FLConfig(m=args.m, s=args.s, eta_l=0.1, strategy="fedawe")
+    av = AvailabilityCfg(kind=args.dynamics, gamma=0.3)
+    state = init_fl_state(jax.random.PRNGKey(0), fl, params)
+    rf = make_round_fn(fl, loss_fn, {}, av, base_p)
+
+    def batch_fn(t):
+        return {k: jnp.asarray(v) for k, v in
+                ds.round_batches(t, args.s, args.batch).items()}
+
+    state, hist = run_rounds(state, rf, batch_fn, args.rounds,
+                             log_every=max(1, args.rounds // 10))
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {args.rounds} rounds")
+    assert last < first, "federated LM training must reduce the loss"
+    print("federated LM training OK ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: the paper's Example 1 in 60 lines.
+
+Two clients hold quadratic objectives with minimizers u1=0, u2=100; the
+global optimum is x* = 50. Client 1 is available 90% of rounds, client 2
+only 30%. Plain FedAvg converges to the availability-weighted point
+(p1*u1 + p2*u2)/(p1+p2) = 25; FedAWE's adaptive innovation echoing +
+implicit gossiping removes the bias.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                        make_round_fn)
+
+U = jnp.array([0.0, 100.0])      # per-client minimizers
+BASE_P = jnp.array([0.9, 0.3])   # heterogeneous availability
+T = 2000
+
+
+def loss_fn(trainable, frozen, batch, rng):
+    return 0.5 * (trainable["x"] - batch["u"]) ** 2
+
+
+def run(strategy):
+    cfg = FLConfig(m=2, s=2, eta_l=0.05, eta_g=1.0, strategy=strategy,
+                   lr_schedule=False, grad_clip=0.0)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, {"x": jnp.zeros(())})
+    round_fn = jax.jit(make_round_fn(
+        cfg, loss_fn, {}, AvailabilityCfg(kind="stationary"), BASE_P))
+    batches = {"u": jnp.broadcast_to(U[:, None], (2, cfg.s))}
+    tail = []
+    for t in range(T):
+        state, _ = round_fn(state, batches)
+        if t > T // 2:
+            tail.append(float(state.global_tr["x"]))
+    return float(np.mean(tail))
+
+
+if __name__ == "__main__":
+    x_avg = run("fedavg_active")
+    x_awe = run("fedawe")
+    print(f"optimum x*                      = 50.0")
+    print(f"availability-weighted bias point = 25.0")
+    print(f"FedAvg  long-run output          = {x_avg:6.2f}  "
+          f"(bias {abs(x_avg-50):.1f})")
+    print(f"FedAWE  long-run output          = {x_awe:6.2f}  "
+          f"(bias {abs(x_awe-50):.1f})")
+    assert abs(x_awe - 50) < abs(x_avg - 50), "FedAWE must reduce the bias"
+    print("FedAWE corrects the unavailability bias ✓")

@@ -1,0 +1,6 @@
+from repro.checkpointing.io import (  # noqa: F401
+    load_pytree,
+    restore_fl_state,
+    save_fl_state,
+    save_pytree,
+)

@@ -1,0 +1,80 @@
+"""Checkpointing: pytree <-> .npz with a JSON manifest (orbax-free,
+pickle-free). Leaves are keyed by their tree path so restores are
+structure-checked against a template."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _path_str(path):
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree, extra_meta: dict | None = None):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays, manifest = {}, {"leaves": [], "meta": extra_meta or {}}
+    for i, (kp, leaf) in enumerate(flat):
+        key = f"leaf_{i}"
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if arr.dtype.isbuiltin != 1:  # ml_dtypes (bfloat16, fp8) -> f32 store
+            arr = arr.astype(np.float32)
+        arrays[key] = arr
+        manifest["leaves"].append(
+            {"key": key, "path": _path_str(kp),
+             "shape": list(np.shape(leaf)), "dtype": dtype})
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_pytree(path: str, template):
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    leaves = []
+    for kp, leaf in flat:
+        ps = _path_str(kp)
+        if ps not in by_path:
+            raise KeyError(f"checkpoint missing leaf {ps!r}")
+        arr = data[by_path[ps]["key"]]
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch at {ps}: ckpt {arr.shape} vs "
+                f"template {np.shape(leaf)}")
+        import jax.numpy as jnp
+
+        tgt = np.asarray(leaf).dtype
+        if arr.dtype != tgt:
+            leaves.append(jnp.asarray(arr).astype(tgt))  # handles bf16
+        else:
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+def save_fl_state(path: str, state, round_t: int | None = None):
+    meta = {"t": int(state.t) if round_t is None else round_t}
+    save_pytree(path, state._asdict(), extra_meta=meta)
+
+
+def restore_fl_state(path: str, template):
+    d = load_pytree(path, template._asdict())
+    return type(template)(**d)

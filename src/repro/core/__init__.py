@@ -1,0 +1,13 @@
+"""The paper's primary contribution: FedAWE and its federated-round system
+(availability processes, strategies, the round engine, mixing analysis)."""
+from repro.core.availability import AvailabilityCfg, base_probs  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    FLConfig,
+    FLState,
+    init_fl_state,
+    local_sgd,
+    make_round_fn,
+    make_round_fn_with_frozen,
+    run_rounds,
+)
+from repro.core.strategies import REGISTRY, get_strategy  # noqa: F401

@@ -1,0 +1,108 @@
+"""Client availability processes (Section 7 / Appendix J.3 of the paper).
+
+p_i^t = p_i * f_i(t) with
+  stationary:        f(t) = 1
+  staircase:         f(t) = 1 on the first half-period, 0.4 on the second
+  sine:              f(t) = gamma*sin(2*pi*t/P) + (1-gamma)
+  interleaved_sine:  f(t) = g(t) * 1{p_i*g(t) >= cutoff}   (zeros allowed!)
+  markov:            2-state Gilbert-Elliott chain per client (beyond-paper;
+                     matches the F3AST/Ribero et al. setting)
+
+Base probabilities follow the paper's construction: p_i = <nu_i, phi> where
+nu_i ~ Dirichlet(alpha) is client i's label distribution and phi has
+per-class scales Uniform(0, Phi_c) with Phi_c = 1 for the first half of the
+classes and 0.5 for the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("stationary", "staircase", "sine", "interleaved_sine", "markov")
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityCfg:
+    kind: str = "stationary"
+    gamma: float = 0.3
+    period: int = 20
+    staircase_low: float = 0.4
+    cutoff: float = 0.1
+    delta_floor: float = 0.0      # optional clamp to keep Assumption 1
+    markov_up: float = 0.2        # P(off -> on)
+    markov_down: float = 0.2      # P(on -> off)
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+
+
+def base_probs_from_data(rng, nu):
+    """nu: [m, C] per-client label distributions. Returns p [m] in (0, 1]."""
+    m, C = nu.shape
+    half = C // 2
+    scales = jnp.concatenate([jnp.ones(half), 0.5 * jnp.ones(C - half)])
+    phi = jax.random.uniform(rng, (C,)) * scales
+    p = nu @ phi
+    return jnp.clip(p, 1e-3, 1.0)
+
+
+def base_probs(rng, m, alpha=0.1, n_classes=10):
+    k1, k2 = jax.random.split(rng)
+    nu = jax.random.dirichlet(k1, jnp.full((n_classes,), alpha), (m,))
+    return base_probs_from_data(k2, nu), nu
+
+
+def f_t(cfg: AvailabilityCfg, t):
+    """Time modulation f(t) (scalar or array t)."""
+    t = jnp.asarray(t, jnp.float32)
+    P = cfg.period
+    if cfg.kind in ("stationary", "markov"):
+        return jnp.ones_like(t)
+    if cfg.kind == "staircase":
+        phase = jnp.mod(t, P)
+        return jnp.where(phase < P / 2, 1.0, cfg.staircase_low)
+    # sine family
+    return cfg.gamma * jnp.sin(2 * jnp.pi * t / P) + (1 - cfg.gamma)
+
+
+def probs_at(cfg: AvailabilityCfg, base_p, t):
+    """p_i^t for every client. base_p: [m]."""
+    f = f_t(cfg, t)
+    p = base_p * f
+    if cfg.kind == "interleaved_sine":
+        p = jnp.where(p >= cfg.cutoff, p, 0.0)
+    if cfg.delta_floor:
+        p = jnp.clip(p, cfg.delta_floor, 1.0)
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def sample_active(rng, cfg: AvailabilityCfg, base_p, t, markov_state=None):
+    """Returns (mask [m] float32, new_markov_state)."""
+    if cfg.kind == "markov":
+        assert markov_state is not None
+        u = jax.random.uniform(rng, markov_state.shape)
+        on = markov_state > 0.5
+        stay_on = u > cfg.markov_down
+        turn_on = u < cfg.markov_up * base_p / jnp.maximum(base_p.mean(), 1e-6)
+        new = jnp.where(on, stay_on, turn_on)
+        return new.astype(jnp.float32), new.astype(jnp.float32)
+    p = probs_at(cfg, base_p, t)
+    mask = (jax.random.uniform(rng, p.shape) < p).astype(jnp.float32)
+    return mask, markov_state
+
+
+def availability_trace(rng, cfg: AvailabilityCfg, base_p, T):
+    """Simulate T rounds; returns mask [T, m] (host-side convenience)."""
+    m = base_p.shape[0]
+    state = jnp.ones((m,), jnp.float32)
+
+    def step(carry, t):
+        st, key = carry
+        key, sub = jax.random.split(key)
+        mask, st = sample_active(sub, cfg, base_p, t, st)
+        return (st, key), mask
+
+    (_, _), masks = jax.lax.scan(step, (state, rng), jnp.arange(T))
+    return masks

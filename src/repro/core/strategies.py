@@ -1,0 +1,282 @@
+"""Aggregation strategies: FedAWE (the paper) + all compared baselines.
+
+Uniform interface — every strategy consumes the per-round quantities
+(client-stacked innovations ``G`` = x_start − x_end over trainables, the
+availability mask, true probabilities for the known-p baseline) and produces
+the new global trainables, the new client-stacked trainables, the new τ
+vector and its own auxiliary state.
+
+  stateful (per-client model persists):  FedAWE
+  stateless (clients restart from the broadcast global): all baselines
+  memory-aided (O(m·d) server memory):   MIFA, FedVARP
+
+All math follows the cited papers: FedAWE Alg. 1; FedAU (Wang & Ji 2024,
+interval-estimate reweighting with cutoff K); F3AST (Ribero et al., EMA rate
+estimates); MIFA (Gu et al. 2021); FedVARP (Jhunjhunwala et al. 2022);
+known-p importance weighting (Perazzone et al. 2022).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_util as tu
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str
+    stateful_clients: bool
+    init_extra: Callable[[Any, int], Any]
+    aggregate: Callable[..., Any]
+    # echoes the paper's grouping (Table 2)
+    memory_aided: bool = False
+    uses_true_probs: bool = False
+
+
+# ---------------------------------------------------------------------------
+# FedAWE — Algorithm 1
+# ---------------------------------------------------------------------------
+
+def _fedawe_init(template, m):
+    return ()
+
+
+def _fedawe_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
+                      extra, eta_g, use_kernel=False):
+    """Adaptive innovation echoing + implicit gossiping.
+
+    x_i^† = x_i − η_g (t − τ_i) G_i            (echo, active clients)
+    x^{t+1} = mean_{i∈A} x_i^†                  (gossip mean)
+    x_i^{t+1} = x^{t+1} for i∈A, else x_i^t     (postponed multicast)
+    τ_i ← t for i∈A.
+    Empty rounds keep the previous global (W = I).
+    """
+    echo = (t - tau).astype(jnp.float32)  # [m] ; (t - τ_i(t))
+    if use_kernel:
+        from repro.kernels.echo_aggregate import ops as ea_ops
+        new_global = ea_ops.echo_aggregate_tree(
+            clients_tr, G, mask, echo, eta_g)
+    else:
+        x_dagger = jax.tree.map(
+            lambda x, g: (x.astype(jnp.float32)
+                          - eta_g * tu._bshape(echo * mask, g)
+                          * g.astype(jnp.float32)).astype(x.dtype),
+            clients_tr, G)
+        new_global = tu.tree_masked_mean(x_dagger, mask)
+    any_active = jnp.sum(mask) > 0
+    new_global = jax.tree.map(
+        lambda n, o: jnp.where(any_active, n, o.astype(n.dtype)),
+        new_global, global_tr)
+    new_clients = tu.tree_select_broadcast(mask, new_global, clients_tr)
+    new_tau = jnp.where(mask > 0, t, tau)
+    return new_global, new_clients, new_tau, extra
+
+
+FEDAWE = Strategy("fedawe", True, _fedawe_init, _fedawe_aggregate)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg variants
+# ---------------------------------------------------------------------------
+
+def _stateless_wrap(new_global, clients_tr, mask, t, tau):
+    # stateless clients always restart from the global; client stack mirrors it
+    m = tau.shape[0]
+    new_clients = tu.tree_broadcast(new_global, m) if clients_tr is not None \
+        else None
+    return new_clients, jnp.where(mask > 0, t, tau)
+
+
+def _mk_weighted_fedavg(weight_fn, name, uses_true_probs=False):
+    def init(template, m):
+        return ()
+
+    def agg(*, global_tr, clients_tr, G, mask, t, tau, probs, extra, eta_g,
+            use_kernel=False):
+        w = weight_fn(mask, probs) * mask  # [m]
+        upd = jax.tree.map(
+            lambda g: jnp.sum(g.astype(jnp.float32) * tu._bshape(w, g), axis=0),
+            G)
+        denom = jnp.maximum(jnp.sum(mask), 1.0) if name == "fedavg_active" \
+            else jnp.float32(mask.shape[0])
+        new_global = jax.tree.map(
+            lambda x, u: (x.astype(jnp.float32) - eta_g * u / denom).astype(x.dtype),
+            global_tr, upd)
+        new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask,
+                                               t, tau)
+        return new_global, new_clients, new_tau, extra
+
+    return Strategy(name, False, init, agg, uses_true_probs=uses_true_probs)
+
+
+FEDAVG_ACTIVE = _mk_weighted_fedavg(lambda mask, p: jnp.ones_like(mask),
+                                    "fedavg_active")
+FEDAVG_ALL = _mk_weighted_fedavg(lambda mask, p: jnp.ones_like(mask),
+                                 "fedavg_all")
+FEDAVG_KNOWN_P = _mk_weighted_fedavg(
+    lambda mask, p: 1.0 / jnp.clip(p, 1e-2, 1.0), "fedavg_known_p",
+    uses_true_probs=True)
+
+
+# ---------------------------------------------------------------------------
+# FedAU — online participation-interval estimates (cutoff K)
+# ---------------------------------------------------------------------------
+
+def _fedau_init(template, m, K=50):
+    return dict(
+        interval=jnp.zeros((m,), jnp.float32),   # rounds since last active
+        omega=jnp.ones((m,), jnp.float32),       # est. mean interval
+        n_intervals=jnp.zeros((m,), jnp.float32),
+        K=jnp.float32(K),
+    )
+
+
+def _fedau_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
+                     eta_g, use_kernel=False):
+    interval = extra["interval"] + 1.0
+    capped = jnp.minimum(interval, extra["K"])
+    n = extra["n_intervals"]
+    # online mean of completed intervals for active clients
+    new_n = jnp.where(mask > 0, n + 1.0, n)
+    new_omega = jnp.where(
+        mask > 0, (extra["omega"] * n + capped) / jnp.maximum(new_n, 1.0),
+        extra["omega"])
+    w = new_omega * mask  # weight = estimated interval ≈ 1/p̂_i
+    m = jnp.float32(mask.shape[0])
+    upd = jax.tree.map(
+        lambda g: jnp.sum(g.astype(jnp.float32) * tu._bshape(w, g), axis=0) / m,
+        G)
+    new_global = jax.tree.map(
+        lambda x, u: (x.astype(jnp.float32) - eta_g * u).astype(x.dtype),
+        global_tr, upd)
+    new_extra = dict(interval=jnp.where(mask > 0, 0.0, interval),
+                     omega=new_omega, n_intervals=new_n, K=extra["K"])
+    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
+    return new_global, new_clients, new_tau, new_extra
+
+
+FEDAU = Strategy("fedau", False, _fedau_init, _fedau_aggregate)
+
+
+# ---------------------------------------------------------------------------
+# F3AST — EMA availability-rate estimates
+# ---------------------------------------------------------------------------
+
+def _f3ast_init(template, m, beta=0.001):
+    return dict(rate=jnp.full((m,), 0.5, jnp.float32), beta=jnp.float32(beta))
+
+
+def _f3ast_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
+                     eta_g, use_kernel=False):
+    rate = (1 - extra["beta"]) * extra["rate"] + extra["beta"] * mask
+    w = mask / jnp.clip(rate, 1e-2, 1.0)
+    m = jnp.float32(mask.shape[0])
+    upd = jax.tree.map(
+        lambda g: jnp.sum(g.astype(jnp.float32) * tu._bshape(w, g), axis=0) / m,
+        G)
+    new_global = jax.tree.map(
+        lambda x, u: (x.astype(jnp.float32) - eta_g * u).astype(x.dtype),
+        global_tr, upd)
+    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
+    return new_global, new_clients, new_tau, dict(rate=rate, beta=extra["beta"])
+
+
+F3AST = Strategy("f3ast", False, _f3ast_init, _f3ast_aggregate)
+
+
+# ---------------------------------------------------------------------------
+# MIFA — memorize last innovation of every client (O(m·d) memory)
+# ---------------------------------------------------------------------------
+
+def _mifa_init(template, m):
+    return dict(mem=tu.tree_zeros_like(tu.tree_broadcast(template, m)))
+
+
+def _mifa_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
+                    eta_g, use_kernel=False):
+    mem = tu.tree_select(mask, G, extra["mem"])
+    upd = tu.tree_mean(mem)
+    new_global = jax.tree.map(
+        lambda x, u: (x.astype(jnp.float32)
+                      - eta_g * u.astype(jnp.float32)).astype(x.dtype),
+        global_tr, upd)
+    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
+    return new_global, new_clients, new_tau, dict(mem=mem)
+
+
+MIFA = Strategy("mifa", False, _mifa_init, _mifa_aggregate, memory_aided=True)
+
+
+# ---------------------------------------------------------------------------
+# FedVARP — server-side variance reduction with per-client memory
+# ---------------------------------------------------------------------------
+
+def _fedvarp_init(template, m):
+    return dict(y=tu.tree_zeros_like(tu.tree_broadcast(template, m)))
+
+
+def _fedvarp_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
+                       extra, eta_g, use_kernel=False):
+    y = extra["y"]
+    diff_mean = tu.tree_masked_mean(tu.tree_sub(G, y), mask)
+    y_mean = tu.tree_mean(y)
+    any_active = (jnp.sum(mask) > 0).astype(jnp.float32)
+    new_global = jax.tree.map(
+        lambda x, d, ym: (x.astype(jnp.float32)
+                          - eta_g * (any_active * d.astype(jnp.float32)
+                                     + ym.astype(jnp.float32))).astype(x.dtype),
+        global_tr, diff_mean, y_mean)
+    new_y = tu.tree_select(mask, G, y)
+    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
+    return new_global, new_clients, new_tau, dict(y=new_y)
+
+
+FEDVARP = Strategy("fedvarp", False, _fedvarp_init, _fedvarp_aggregate,
+                   memory_aided=True)
+
+
+# ---------------------------------------------------------------------------
+# FedAWE-M — beyond-paper extension (the paper's Limitations §A2 asks for a
+# variance-reduced update): server-side momentum on the gossip delta.
+# Still O(1) extra memory per CLIENT (one velocity tree on the server).
+# beta = 0 recovers FedAWE exactly.
+# ---------------------------------------------------------------------------
+
+def _fedawe_m_init(template, m, beta=0.9):
+    return dict(v=tu.tree_zeros_like(template), beta=jnp.float32(beta))
+
+
+def _fedawe_m_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
+                        extra, eta_g, use_kernel=False):
+    gossip, _, new_tau, _ = _fedawe_aggregate(
+        global_tr=global_tr, clients_tr=clients_tr, G=G, mask=mask, t=t,
+        tau=tau, probs=probs, extra=(), eta_g=eta_g, use_kernel=use_kernel)
+    beta = extra["beta"]
+    delta = tu.tree_sub(gossip, global_tr)
+    v = jax.tree.map(
+        lambda vv, d: beta * vv + d.astype(jnp.float32), extra["v"], delta)
+    new_global = jax.tree.map(
+        lambda x, vv: (x.astype(jnp.float32) + vv).astype(x.dtype),
+        global_tr, v)
+    any_active = jnp.sum(mask) > 0
+    new_global = jax.tree.map(
+        lambda n, o: jnp.where(any_active, n, o), new_global, global_tr)
+    # (empty round: delta = 0, so v decays by beta through the line above)
+    new_clients = tu.tree_select_broadcast(mask, new_global, clients_tr)
+    return new_global, new_clients, new_tau, dict(v=v, beta=beta)
+
+
+FEDAWE_M = Strategy("fedawe_m", True, _fedawe_m_init, _fedawe_m_aggregate)
+
+
+REGISTRY = {s.name: s for s in
+            (FEDAWE, FEDAWE_M, FEDAVG_ACTIVE, FEDAVG_ALL, FEDAVG_KNOWN_P,
+             FEDAU, F3AST, MIFA, FEDVARP)}
+
+
+def get_strategy(name: str) -> Strategy:
+    return REGISTRY[name]

@@ -1,0 +1,107 @@
+"""Pytree helpers for client-stacked federated state.
+
+Client-stacked trees have a leading client axis ``m`` on every leaf. On the
+pod tier that axis carries the sharding ``P(('pod','data'))`` and the masked
+mean below lowers to the implicit-gossip all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(tree, m):
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(m)]
+
+
+def tree_broadcast(tree, m):
+    """Replicate a tree along a new leading client axis."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), tree)
+
+
+def tree_axpy(a, x, y):
+    """a*x + y elementwise over matching trees."""
+    return jax.tree.map(lambda xx, yy: (a * xx.astype(jnp.float32)
+                                        + yy.astype(jnp.float32)).astype(yy.dtype),
+                        x, y)
+
+
+def tree_sub(x, y):
+    return jax.tree.map(lambda a, b: a - b, x, y)
+
+
+def tree_add(x, y):
+    return jax.tree.map(lambda a, b: a + b, x, y)
+
+
+def tree_scale(s, x):
+    return jax.tree.map(lambda a: (s * a.astype(jnp.float32)).astype(a.dtype), x)
+
+
+def tree_zeros_like(x):
+    return jax.tree.map(jnp.zeros_like, x)
+
+
+def _bshape(v, leaf):
+    """Reshape per-client vector v [m] to broadcast against leaf [m, ...]."""
+    return v.reshape((v.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+def tree_client_scale(v, tree):
+    """Multiply each client's slice by v[i]. tree leaves: [m, ...]."""
+    return jax.tree.map(
+        lambda x: (x.astype(jnp.float32) * _bshape(v, x)).astype(x.dtype), tree)
+
+
+def tree_masked_mean(tree, mask):
+    """Mean over the client axis restricted to mask==1.
+
+    If no client is active the result is zeros (callers guard with the
+    empty-round rule). Returns a tree without the client axis.
+    """
+    denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+
+    def f(x):
+        w = _bshape(mask.astype(jnp.float32), x)
+        return (jnp.sum(x.astype(jnp.float32) * w, axis=0) / denom).astype(x.dtype)
+
+    return jax.tree.map(f, tree)
+
+
+def tree_mean(tree):
+    return jax.tree.map(
+        lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype), tree)
+
+
+def tree_select(mask, a, b):
+    """Per-client select: mask[i] ? a[i] : b[i]. a/b leaves [m, ...]."""
+    return jax.tree.map(
+        lambda x, y: jnp.where(_bshape(mask, x).astype(bool), x, y), a, b)
+
+
+def tree_select_broadcast(mask, new_global, old_stack):
+    """Active clients receive the (broadcast) new global; others keep state."""
+    def f(g, o):
+        m = _bshape(mask, o).astype(bool)
+        return jnp.where(m, g[None].astype(o.dtype), o)
+
+    return jax.tree.map(f, new_global, old_stack)
+
+
+def tree_dot(a, b):
+    return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def global_norm_finite(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.all(jnp.array([jnp.all(jnp.isfinite(x)) for x in leaves]))

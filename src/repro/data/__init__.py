@@ -1,0 +1,8 @@
+from repro.data.partition import dirichlet_partition  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticImageTask,
+    SyntheticLMTask,
+    make_image_classification,
+    make_lm_tokens,
+)
+from repro.data.federated import FederatedDataset  # noqa: F401

@@ -1,0 +1,39 @@
+"""Federated batching: per-client shards -> [m, s, b, ...] round batches.
+
+The round engine consumes one fresh minibatch per local step (the paper's
+setting: each local update uses an independent stochastic sample), so a
+round batch has leading dims [clients, local_steps, batch].
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class FederatedDataset:
+    """Holds per-client index shards over a backing array store."""
+
+    def __init__(self, arrays: Dict[str, np.ndarray],
+                 client_indices: List[np.ndarray], seed: int = 0):
+        self.arrays = arrays
+        self.client_indices = client_indices
+        self.m = len(client_indices)
+        self._rng = np.random.default_rng(seed)
+
+    def round_batches(self, t: int, s: int, b: int) -> Dict[str, np.ndarray]:
+        """Sample [m, s, b, ...] batches for round t (with replacement within
+        each client shard — clients hold few samples under Dirichlet skew)."""
+        out = {k: np.empty((self.m, s, b) + v.shape[1:], v.dtype)
+               for k, v in self.arrays.items()}
+        for i, idx in enumerate(self.client_indices):
+            pick = self._rng.choice(idx, size=(s, b), replace=True)
+            for k, v in self.arrays.items():
+                out[k][i] = v[pick]
+        return out
+
+    def eval_batch(self, n: int = 1024, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        all_idx = np.concatenate(self.client_indices)
+        pick = rng.choice(all_idx, size=min(n, len(all_idx)), replace=False)
+        return {k: v[pick] for k, v in self.arrays.items()}

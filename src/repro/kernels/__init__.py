@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the system's compute hot-spots.
+
+echo_aggregate  — the paper's own operator: fused adaptive-innovation echo +
+                  implicit-gossip masked mean over client-stacked params.
+flash_attention — blockwise online-softmax attention for the serving tier.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with backend dispatch) and ref.py (pure-jnp oracle used by the
+shape/dtype-sweep allclose tests)."""

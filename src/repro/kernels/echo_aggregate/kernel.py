@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused FedAWE echo + implicit-gossip aggregation.
+
+The per-round server update touches every byte of the client-stacked
+parameters (read x_i, read y_i, write mean) and is purely memory-bound — the
+paper's own hot loop. Fusing echo + masked mean into one pass halves HBM
+traffic vs. the two-op jnp formulation (materializing x† then reducing).
+
+Tiling: grid over the flattened parameter dimension N; each step streams an
+[m, BN] tile of x and y through VMEM (m = clients per shard, 16-32; BN sized
+so 2 * m * BN * 2B + BN * 4B fits comfortably in v5e's ~16 MB VMEM) and
+reduces over the client (sublane) axis. mask/echo/denominator are tiny [m]
+f32 operands kept resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(mask_ref, echo_ref, denom_ref, x_ref, y_ref, o_ref, *, eta_g):
+    x = x_ref[...].astype(jnp.float32)          # [m, BN]
+    y = y_ref[...].astype(jnp.float32)
+    w = mask_ref[...].astype(jnp.float32)       # [m]
+    e = echo_ref[...].astype(jnp.float32)       # [m]
+    xd = x - eta_g * e[:, None] * (x - y)       # adaptive innovation echoing
+    acc = jnp.sum(w[:, None] * xd, axis=0)      # implicit-gossip masked sum
+    o_ref[...] = (acc / denom_ref[0]).astype(o_ref.dtype)
+
+
+def echo_aggregate_pallas(x, y, mask, echo, eta_g, *, block_n=4096,
+                          interpret=True):
+    """x, y: [m, N]; mask, echo: [m]. Returns [N] f32 gossip mean.
+
+    interpret=True executes the kernel body on CPU (this container);
+    on TPU pass interpret=False for the compiled Mosaic kernel.
+    """
+    m, N = x.shape
+    denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)[None]
+
+    pad = (-N) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+    Np = N + pad
+    grid = (Np // block_n,)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eta_g=float(eta_g)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m,), lambda j: (0,)),          # mask
+            pl.BlockSpec((m,), lambda j: (0,)),          # echo
+            pl.BlockSpec((1,), lambda j: (0,)),          # denom
+            pl.BlockSpec((m, block_n), lambda j: (0, j)),  # x
+            pl.BlockSpec((m, block_n), lambda j: (0, j)),  # y
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), jnp.float32),
+        interpret=interpret,
+    )(mask.astype(jnp.float32), echo.astype(jnp.float32), denom, x, y)
+    return out[:N]

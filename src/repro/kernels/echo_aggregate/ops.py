@@ -1,0 +1,48 @@
+"""jit'd wrappers: flatten pytrees -> kernel -> unflatten.
+
+``echo_aggregate_tree`` is the drop-in used by the FedAWE strategy when
+FLConfig.use_kernel is set; the jnp reference path stays the default inside
+the 512-device dry-run lowering (Pallas-on-CPU requires interpret mode)."""
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.echo_aggregate.kernel import echo_aggregate_pallas
+from repro.kernels.echo_aggregate.ref import echo_aggregate_ref
+
+
+def _use_interpret():
+    # TPU runs the Mosaic kernel; everywhere else interpret mode.
+    return jax.default_backend() != "tpu"
+
+
+def echo_aggregate(x, y, mask, echo, eta_g, *, use_pallas=True, block_n=4096):
+    """x, y: [m, ...]; returns aggregated [...] (f32)."""
+    m = x.shape[0]
+    flat_x = x.reshape(m, -1)
+    flat_y = y.reshape(m, -1)
+    if use_pallas:
+        out = echo_aggregate_pallas(flat_x, flat_y, mask, echo, eta_g,
+                                    block_n=block_n,
+                                    interpret=_use_interpret())
+    else:
+        out = echo_aggregate_ref(flat_x, flat_y, mask, echo, eta_g)
+    return out.reshape(x.shape[1:])
+
+
+def echo_aggregate_tree(clients_tr, G, mask, echo, eta_g, *, use_pallas=True):
+    """Tree version over client-stacked trainables.
+
+    clients_tr: x_i start models [m, ...]; G: innovations x_i - x_i^(t,s).
+    Returns the new global trainable tree (gossip mean of x†, leaf dtype
+    preserved)."""
+    def f(x, g):
+        y = x - g.astype(x.dtype)  # reconstruct x_end
+        out = echo_aggregate(x, y, mask, echo, eta_g, use_pallas=use_pallas)
+        return out.astype(x.dtype)
+
+    return jax.tree.map(f, clients_tr, G)

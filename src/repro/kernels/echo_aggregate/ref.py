@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused echo-aggregate operator (FedAWE lines
+10-11 + line 4 of Algorithm 1, fused over the client axis)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def echo_aggregate_ref(x, y, mask, echo, eta_g):
+    """x, y: [m, N] (client start / post-local-SGD params); mask, echo: [m].
+
+    Returns [N]: mean over active clients of
+        x_i - eta_g * echo_i * (x_i - y_i).
+    Empty mask returns zeros (callers apply the W=I empty-round rule).
+    """
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    w = mask.astype(jnp.float32)
+    e = echo.astype(jnp.float32)
+    xd = x32 - eta_g * e[:, None] * (x32 - y32)
+    denom = jnp.maximum(w.sum(), 1.0)
+    return (w[:, None] * xd).sum(axis=0) / denom

@@ -1,0 +1,129 @@
+"""Pallas TPU flash attention (forward).
+
+TPU adaptation of the memory-lean attention insight: blockwise online
+softmax sized for the VMEM/MXU hierarchy —
+  * [BL, D] query tile stays resident; [BS, D] key/value tiles stream in;
+  * scores live only as a [BL, BS] MXU tile (128-aligned by default);
+  * running (max, sum, acc) statistics in f32 VMEM scratch;
+  * causal / sliding-window tiles that are fully masked are skipped via
+    pl.when on the block indices, so SWA costs O(L * window) not O(L^2).
+
+Supports GQA through the kv-head index map (kv head = q head // group) and
+gemma-style score soft-capping. Forward-only: training uses the q-chunked
+rematerialized jnp path (layers.attention); this kernel targets serving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, block_l, block_s, seq_k_start):
+    il, is_ = pl.program_id(2), pl.program_id(3)
+    ns = pl.num_programs(3)
+
+    @pl.when(is_ == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip tiles that the causal / sliding-window mask voids entirely
+    q_lo = il * block_l + seq_k_start
+    q_hi = q_lo + block_l - 1
+    k_lo = is_ * block_s
+    k_hi = k_lo + block_s - 1
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (k_lo <= q_hi)
+    if window is not None:
+        live = live & (k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]  # [BL, D]
+        k = k_ref[0, 0]  # [BS, D]
+        v = v_ref[0, 0]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+
+        q_idx = il * block_l + jax.lax.broadcasted_iota(
+            jnp.int32, (block_l, block_s), 0) + seq_k_start
+        k_idx = is_ * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, (block_l, block_s), 1)
+        mask = jnp.ones((block_l, block_s), bool)
+        if causal:
+            mask = mask & (q_idx >= k_idx)
+        if window is not None:
+            mask = mask & (q_idx - k_idx < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]          # [BL, 1]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(is_ == ns - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=0.0,
+                    block_l=128, block_s=128, interpret=True):
+    """q: [B, H, L, D]; k, v: [B, K, S, D] with H % K == 0.
+
+    Queries are end-aligned with keys (q position i attends keys up to
+    i + S - L), matching decode/suffix semantics; L == S is standard
+    self-attention. Returns [B, H, L, D]."""
+    B, H, L, D = q.shape
+    K, S = k.shape[1], k.shape[2]
+    G = H // K
+    block_l = min(block_l, L)
+    block_s = min(block_s, S)
+    assert L % block_l == 0 and S % block_s == 0, (L, S, block_l, block_s)
+    grid = (B, H, L // block_l, S // block_s)
+
+    kern = functools.partial(
+        _kernel, scale=D ** -0.5, causal=causal, window=window,
+        softcap=softcap, block_l=block_l, block_s=block_s,
+        seq_k_start=S - L)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_l, D), lambda b, h, il, is_: (b, h, il, 0)),
+            pl.BlockSpec((1, 1, block_s, D),
+                         lambda b, h, il, is_, G=G: (b, h // G, is_, 0)),
+            pl.BlockSpec((1, 1, block_s, D),
+                         lambda b, h, il, is_, G=G: (b, h // G, is_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_l, D),
+                               lambda b, h, il, is_: (b, h, il, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_l, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_l, 1), jnp.float32),   # running sum
+            pltpu.VMEM((block_l, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

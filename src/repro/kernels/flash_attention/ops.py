@@ -1,0 +1,31 @@
+"""jit'd wrapper for the flash-attention kernel with automatic layout
+conversion from the model's [B, L, H, D] activations and a backend switch
+(Mosaic on TPU, interpret on CPU, jnp oracle under vmap/grad)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def _use_interpret():
+    return jax.default_backend() != "tpu"
+
+
+def flash_mha(q, k, v, *, causal=True, window=None, softcap=0.0,
+              block_l=128, block_s=128, use_pallas=True):
+    """q: [B, L, H, D]; k, v: [B, S, K, D] (model layout). -> [B, L, H, D]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_pallas:
+        ot = flash_attention(qt, kt, vt, causal=causal, window=window,
+                             softcap=softcap, block_l=block_l,
+                             block_s=block_s, interpret=_use_interpret())
+    else:
+        G = qt.shape[1] // kt.shape[1]
+        ot = mha_ref(qt, jnp.repeat(kt, G, 1), jnp.repeat(vt, G, 1),
+                     causal=causal, window=window, softcap=softcap)
+    return ot.transpose(0, 2, 1, 3)

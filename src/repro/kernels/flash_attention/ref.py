@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: causal (optionally sliding-window, soft-capped)
+multi-head attention with full score materialization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def mha_ref(q, k, v, *, causal=True, window=None, softcap=0.0):
+    """q: [B, H, L, D]; k, v: [B, H, S, D] -> [B, H, L, D]."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhld,bhsd->bhls", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    L, S = s.shape[-2], s.shape[-1]
+    qp = jnp.arange(L)[:, None] + (S - L)  # queries end-aligned with keys
+    kp = jnp.arange(S)[None, :]
+    m = jnp.ones((L, S), bool)
+    if causal:
+        m = m & (qp >= kp)
+    if window is not None:
+        m = m & (qp - kp < window)
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhls,bhsd->bhld", p.astype(v.dtype), v)

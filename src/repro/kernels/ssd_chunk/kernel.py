@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Mamba2/SSD intra-chunk block.
+
+The SSD duality's compute hot-spot is the per-chunk quadratic block
+  Y_diag = (L ⊙ (C B^T)) X,   states = (decay ⊙ B)^T X
+— two MXU matmuls per (batch, head, chunk) over a [K, K] tile, with the
+1-semiseparable mask L = exp(segsum(dA)) built in-register from a cumulative
+sum (no HBM traffic for L). Chunk size K is the MXU tiling knob (128
+default); per-tile VMEM = K*(P+2N) inputs + K*K scores, well under v5e VMEM
+for K=128, P=64, N=128.
+
+The inter-chunk state recurrence (linear scan, memory-bound) stays in jnp —
+see ops.ssd_chunked_pallas.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, st_ref, dec_ref, *, K):
+    x = x_ref[0, 0, 0].astype(jnp.float32)   # [K, P]
+    da = da_ref[0, 0, 0].astype(jnp.float32)  # [K]
+    B = b_ref[0, 0, 0].astype(jnp.float32)   # [K, N]
+    C = c_ref[0, 0, 0].astype(jnp.float32)   # [K, N]
+
+    a_cs = jnp.cumsum(da)                     # [K]
+    # L[i, j] = exp(a_cs[i] - a_cs[j] + da[j]) for i >= j ... note
+    # segsum(x)[i,j] = sum_{k=j+1..i} x_k = a_cs[i] - a_cs[j]
+    li = a_cs[:, None] - a_cs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (K, K), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (K, K), 1)
+    L = jnp.where(tri, jnp.exp(li), 0.0)
+
+    S = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * L
+    y = jax.lax.dot_general(S, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    decay = jnp.exp(a_cs[-1] - a_cs)          # [K]
+    Bd = B * decay[:, None]
+    st = jax.lax.dot_general(Bd, x, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [N, P]
+    st_ref[0, 0, 0] = st
+    dec_ref[0, 0, 0] = jnp.exp(a_cs[-1])
+
+
+def ssd_chunk_pallas(xdt, dA, B_, C_, *, interpret=True):
+    """xdt: [b,h,c,K,P]; dA: [b,h,c,K]; B_, C_: [b,h,c,K,N].
+
+    Returns (y_diag [b,h,c,K,P], states f32 [b,h,c,N,P], decay f32 [b,h,c]).
+    """
+    b, h, c, K, P = xdt.shape
+    N = B_.shape[-1]
+    grid = (b, h, c)
+
+    def im(i, j, k):
+        return (i, j, k, 0, 0)
+
+    def im3(i, j, k):
+        return (i, j, k, 0)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, K=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, K, P), im),
+            pl.BlockSpec((1, 1, 1, K), im3),
+            pl.BlockSpec((1, 1, 1, K, N), im),
+            pl.BlockSpec((1, 1, 1, K, N), im),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, K, P), im),
+            pl.BlockSpec((1, 1, 1, N, P), im),
+            pl.BlockSpec((1, 1, 1), lambda i, j, k: (i, j, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, c, K, P), xdt.dtype),
+            jax.ShapeDtypeStruct((b, h, c, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, dA, B_, C_)

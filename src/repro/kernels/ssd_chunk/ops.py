@@ -1,0 +1,59 @@
+"""Full SSD scan assembled from the Pallas intra-chunk kernel + a jnp
+inter-chunk recurrence. Drop-in equivalent of models.ssm.ssd_chunked
+(layout [b, l, h, p] -> same outputs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
+
+
+def _use_interpret():
+    return jax.default_backend() != "tpu"
+
+
+def ssd_chunked_pallas(xdt, dA, B_, C_, chunk, initial_state=None):
+    """xdt: [b,l,h,p]; dA: [b,l,h]; B_, C_: [b,l,h,n].
+    Returns (y [b,l,h,p], final_state [b,h,p,n]) — matches ssm.ssd_chunked."""
+    b, l, h, p = xdt.shape
+    n = B_.shape[-1]
+    assert l % chunk == 0
+    c = l // chunk
+
+    # regroup to [b, h, c, K, *]
+    def grp(v, feat):
+        v = v.reshape((b, c, chunk, h) + ((feat,) if feat else ()))
+        return v.transpose((0, 3, 1, 2, 4) if feat else (0, 3, 1, 2))
+
+    X = grp(xdt, p)
+    A = grp(dA, 0)
+    Bm = grp(B_, n)
+    Cm = grp(C_, n)
+
+    y_diag, states, decay = ssd_chunk_pallas(X, A, Bm, Cm,
+                                             interpret=_use_interpret())
+
+    # inter-chunk recurrence (linear scan over c)
+    f32 = jnp.float32
+    s0 = jnp.zeros((b, h, n, p), f32) if initial_state is None else \
+        initial_state.transpose(0, 1, 3, 2).astype(f32)
+
+    def step(carry, inp):
+        st, dec = inp  # [b,h,n,p], [b,h]
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step, s0, (states.transpose(2, 0, 1, 3, 4),
+                   decay.transpose(2, 0, 1)))
+    prev = prev.transpose(1, 2, 0, 3, 4)  # [b,h,c,n,p]
+
+    # chunk-input contribution: Y_off[k] = (C_k * exp(A_cs_k)) @ prev_state
+    A_cs = jnp.cumsum(A.astype(f32), axis=-1)
+    y_off = jnp.einsum("bhckn,bhcnp,bhck->bhckp", Cm.astype(f32), prev,
+                       jnp.exp(A_cs))
+
+    y = (y_diag.astype(f32) + y_off)  # [b,h,c,K,p]
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, l, h, p).astype(xdt.dtype)
+    return y, final.transpose(0, 1, 3, 2)  # [b,h,p,n]

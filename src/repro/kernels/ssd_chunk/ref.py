@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel: per (batch, head, chunk)
+compute the diagonal-block output, the chunk's end-state contribution and
+the chunk decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import segsum
+
+
+def ssd_chunk_ref(xdt, dA, B_, C_):
+    """xdt: [b,h,c,K,P]; dA: [b,h,c,K]; B_, C_: [b,h,c,K,N].
+
+    Returns (y_diag [b,h,c,K,P], states [b,h,c,N,P], decay [b,h,c]).
+    """
+    f32 = jnp.float32
+    A_cs = jnp.cumsum(dA.astype(f32), axis=-1)
+    L = jnp.exp(segsum(dA.astype(f32)))                     # [b,h,c,K,K]
+    S = jnp.einsum("bhcin,bhcjn->bhcij", C_.astype(f32),
+                   B_.astype(f32)) * L
+    y = jnp.einsum("bhcij,bhcjp->bhcip", S, xdt.astype(f32))
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)           # [b,h,c,K]
+    states = jnp.einsum("bhck,bhckn,bhckp->bhcnp",
+                        decay_states, B_.astype(f32), xdt.astype(f32))
+    return (y.astype(xdt.dtype), states.astype(f32),
+            jnp.exp(A_cs[..., -1]))

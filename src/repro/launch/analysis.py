@@ -1,0 +1,223 @@
+"""Roofline-term extraction from lowered/compiled XLA artifacts.
+
+Sources:
+  * compiled.cost_analysis()  -> HLO FLOPs and bytes accessed (per-device
+    SPMD module).
+  * lowered/compiled .as_text() -> collective operand bytes, by summing the
+    operand shapes of every all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute.
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|"
+                       r"u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Split an HLO module text into {computation_name: body_text}."""
+    comps: Dict[str, str] = {}
+    cur, buf = None, []
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*(\([^)]*\))?.*\{\s*$",
+                     line)
+        if m and ("(" in line and "->" in line or line.startswith("ENTRY")):
+            if cur is not None:
+                comps[cur] = "\n".join(buf)
+            cur, buf = m.group(2), []
+            continue
+        if line.strip() == "}" and cur is not None:
+            comps[cur] = "\n".join(buf)
+            cur, buf = None, []
+            continue
+        if cur is not None:
+            buf.append(line)
+    if cur is not None:
+        comps[cur] = "\n".join(buf)
+    return comps
+
+
+def _while_multipliers(hlo_text: str) -> Dict[str, int]:
+    """Execution-count multiplier per computation, honouring while-loop
+    nesting: XLA's cost analysis counts loop bodies once, so collectives
+    found inside a scan body must be scaled by the trip count (parsed from
+    the loop condition's s32 constant bound)."""
+    comps = _split_computations(hlo_text)
+    edges: Dict[str, list] = {name: [] for name in comps}
+    for name, body in comps.items():
+        for m in re.finditer(
+                r"while\([^)]*\)[^\n]*?condition=%?([\w.\-]+)[^\n]*?"
+                r"body=%?([\w.\-]+)", body):
+            cond, wbody = m.group(1), m.group(2)
+            trip = 1
+            ctext = comps.get(cond, "")
+            consts = [int(c) for c in
+                      re.findall(r"s32\[\]\s+constant\((\d+)\)", ctext)]
+            if consts:
+                trip = max(consts)
+            edges[name].append((wbody, max(trip, 1)))
+            edges[name].append((cond, max(trip, 1)))
+
+    mult = {name: 1 for name in comps}
+    entry = None
+    for name in comps:
+        if "entry" in name.lower() or name.endswith(".0") or entry is None:
+            pass
+    # propagate multipliers breadth-first from every root (computations are
+    # a DAG; non-while-called computations keep multiplier 1 which matches
+    # fusions/calls executing once per parent execution)
+    changed = True
+    iters = 0
+    while changed and iters < 50:
+        changed = False
+        iters += 1
+        for name, outs in edges.items():
+            for child, trip in outs:
+                want = mult[name] * trip
+                if child in mult and want > mult[child]:
+                    mult[child] = want
+                    changed = True
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from HLO text (one SPMD
+    per-device module => per-device bytes). Collectives inside while-loop
+    (scan) bodies are multiplied by the parsed trip count."""
+    comps = _split_computations(hlo_text)
+    mult = _while_multipliers(hlo_text)
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for cname, body in comps.items():
+        k_mult = mult.get(cname, 1)
+        for line in body.splitlines():
+            stripped = line.strip()
+            mkind = None
+            for k in _COLLECTIVES:
+                if re.search(rf"=\s*[^=]*\b{k}(-start)?\(", stripped):
+                    mkind = k
+                    break
+            if mkind is None or f"{mkind}-done" in stripped:
+                continue
+            call = stripped.split("(", 1)
+            if len(call) < 2:
+                continue
+            shapes = _SHAPE_RE.findall(call[1])
+            b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+            out[mkind] += b * k_mult
+            out["count"] += k_mult
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def collective_top(hlo_text: str, k: int = 12):
+    """Top collective ops by (trip-count-weighted) bytes — the §Perf
+    diagnosis view: which tensors dominate the interconnect."""
+    comps = _split_computations(hlo_text)
+    mult = _while_multipliers(hlo_text)
+    items = []
+    for cname, body in comps.items():
+        k_mult = mult.get(cname, 1)
+        for line in body.splitlines():
+            stripped = line.strip()
+            mkind = None
+            for kk in _COLLECTIVES:
+                if re.search(rf"=\s*[^=]*\b{kk}(-start)?\(", stripped):
+                    mkind = kk
+                    break
+            if mkind is None or f"{mkind}-done" in stripped:
+                continue
+            call = stripped.split("(", 1)
+            if len(call) < 2:
+                continue
+            shapes = _SHAPE_RE.findall(call[1])
+            b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+            sig = ",".join(f"{dt}[{dims}]" for dt, dims in shapes[:2])
+            items.append((b * k_mult, f"{mkind} {sig} x{k_mult}"))
+    items.sort(reverse=True)
+    return [f"{sig}: {by/1e9:.2f}GB" for by, sig in items[:k]]
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    compute_s = flops_per_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = coll_bytes_per_dev / ICI_BW
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    total = max(compute_s, memory_s, collective_s)
+    terms["bound_fraction"] = compute_s / total if total else 0.0
+    return terms
+
+
+def cost_analysis_numbers(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:  # pragma: no cover - backend quirks
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float))}
+
+
+def memory_analysis_numbers(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:  # pragma: no cover
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    if not out and ma is not None:
+        out["repr"] = 0.0
+    return out
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token: total minus the skipped expert FFNs
+    (MODEL_FLOPS uses 6·N_active·D for MoE)."""
+    from repro.models.model import count_params
+
+    total = count_params(cfg)
+    if not cfg.is_moe:
+        return total
+    n_moe = sum(1 for b in cfg.layer_blocks() if b.kind == "moe")
+    per_expert = 3 * cfg.d_model * cfg.expert_ff  # wi(2x) + wd
+    inactive = n_moe * per_expert * (cfg.n_experts - cfg.top_k)
+    return total - inactive
+
+
+def model_flops(cfg, n_tokens: int, kind: str) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = active params."""
+    n = active_param_count(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * n_tokens

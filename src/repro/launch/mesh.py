@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state. Target hardware: TPU v5e, 256 chips per pod;
+multi-pod = 2 pods = 512 chips over DCN.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+# v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for {axes}={shape}, have {len(devs)} — "
+            "run under launch/dryrun.py which forces 512 host devices")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Miniature mesh for CI: (2,2) or (2,2,1)... kept shape-compatible
+    with the production axis names."""
+    shape = (2, 2, 1) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def mesh_axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def n_chips(mesh):
+    return int(mesh.devices.size)

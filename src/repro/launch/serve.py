@@ -1,0 +1,133 @@
+"""Batched serving loop: continuous-batching style scheduler over the
+unified model substrate (prefill + decode with per-request positions).
+
+CPU-runnable with small configs; the production decode shapes are proven by
+launch/dryrun.py (decode_32k / long_500k lower serve_step on the 16x16 and
+2x16x16 meshes).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_cache, init_params, reduced, serve_step
+from repro.models.model import prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [Lp]
+    max_new: int
+    out: Optional[np.ndarray] = None
+
+
+class Server:
+    """Fixed-slot continuous batching: up to B concurrent sequences share
+    one KV cache; finished slots are refilled from the queue."""
+
+    def __init__(self, cfg, batch_slots=4, max_seq=128, seed=0):
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.params = init_params(jax.random.PRNGKey(seed), cfg)
+        self.cache = init_cache(cfg, batch_slots, max_seq,
+                                dtype=jnp.dtype(cfg.dtype))
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.remaining = np.zeros(batch_slots, np.int32)
+        self._step = jax.jit(
+            lambda p, c, t, q: serve_step(p, cfg, c, t, q))
+
+    def _prefill_one(self, slot, req):
+        """Per-slot prefill via serve_step. Other slots' rows receive dummy
+        writes at their CURRENT position, which the next real token
+        overwrites before any attention reads it — isolation verified by
+        tests/test_launchers.py::test_server_slots_isolated_vs_solo."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits = None
+        for i in range(len(req.prompt)):
+            tok = toks[:, i:i + 1]
+            tok_b = jnp.zeros((self.B, 1), jnp.int32).at[slot].set(tok[0])
+            pos_b = jnp.asarray(self.pos)
+            logits, self.cache = self._step(self.params, self.cache, tok_b,
+                                            pos_b)
+            self.pos[slot] += 1
+        # first generated token = greedy continuation of the prompt
+        req.out = np.array([int(jnp.argmax(logits[slot]))], np.int32)
+        return logits
+
+    def run(self, requests: List[Request], greedy=True):
+        queue = list(requests)
+        done, t0, steps = [], time.time(), 0
+        while queue or any(a is not None for a in self.active):
+            # admit
+            for slot in range(self.B):
+                if self.active[slot] is None and queue:
+                    req = queue.pop(0)
+                    self.pos[slot] = 0
+                    self._prefill_one(slot, req)
+                    self.active[slot] = req
+                    self.remaining[slot] = req.max_new - 1  # 1 from prefill
+            # one decode step for every active slot
+            tok_b = np.zeros((self.B, 1), np.int32)
+            for slot, req in enumerate(self.active):
+                if req is not None and len(req.out):
+                    tok_b[slot, 0] = req.out[-1]
+                elif req is not None:
+                    tok_b[slot, 0] = req.prompt[-1]
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(tok_b),
+                                            jnp.asarray(self.pos))
+            steps += 1
+            nxt = np.asarray(jnp.argmax(logits, -1) if greedy else
+                             jax.random.categorical(
+                                 jax.random.PRNGKey(steps), logits))
+            for slot, req in enumerate(self.active):
+                if req is None:
+                    continue
+                req.out = np.append(req.out, nxt[slot])
+                self.pos[slot] += 1
+                self.remaining[slot] -= 1
+                if self.remaining[slot] <= 0 or \
+                        self.pos[slot] >= self.max_seq - 1:
+                    done.append(req)
+                    self.active[slot] = None
+        dt = time.time() - t0
+        return done, dict(decode_steps=steps, wall_s=dt,
+                          tok_per_s=sum(len(r.out) for r in done) / max(dt, 1e-9))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, rng.integers(4, 10)),
+                    args.max_new) for i in range(args.requests)]
+    srv = Server(cfg, batch_slots=args.slots, max_seq=64)
+    done, stats = srv.run(reqs)
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req{r.rid}: prompt={len(r.prompt)}t -> {r.out.tolist()}")
+    print(stats)
+    assert len(done) == args.requests
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""FedAWE training launcher.
+
+Two tiers share this entry point:
+  * simulation tier (runs anywhere, incl. this CPU container):
+      python -m repro.launch.train --preset image --strategy fedawe \
+          --dynamics sine --rounds 300
+  * pod tier (TPU; the CPU container proves it via launch/dryrun.py):
+      python -m repro.launch.train --arch gemma2-2b --pod
+    which builds the same FedAWE round over the production mesh with the
+    sharding rules of sharding/rules.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing import save_fl_state
+from repro.core import (AvailabilityCfg, FLConfig, base_probs, init_fl_state,
+                        make_round_fn, run_rounds)
+from repro.core.availability import base_probs_from_data
+from repro.data import FederatedDataset, dirichlet_partition, \
+    make_image_classification, make_lm_tokens
+from repro.models import cnn
+from repro.models.config import BlockCfg, ModelConfig
+from repro.models import init_params, lm_loss
+
+
+def build_image_task(args, rng):
+    task = make_image_classification(seed=args.seed, n=args.n_samples,
+                                     shape=(8, 8, 1))
+    nprng = np.random.default_rng(args.seed)
+    idx, nu = dirichlet_partition(nprng, task.labels, args.m,
+                                  alpha=args.alpha, min_per_client=args.batch)
+    ds = FederatedDataset(dict(images=task.images, labels=task.labels), idx,
+                          seed=args.seed)
+    base_p = base_probs_from_data(rng, jnp.asarray(nu))
+    params = cnn.init_cnn(jax.random.PRNGKey(args.seed), in_shape=(8, 8, 1),
+                          n_classes=task.n_classes)
+    loss_fn = cnn.make_image_loss_fn(cnn.cnn_apply)
+
+    def eval_fn(state):
+        batch = ds.eval_batch(1024, seed=1)
+        acc = cnn.accuracy(cnn.cnn_apply, state.global_tr,
+                           {k: jnp.asarray(v) for k, v in batch.items()})
+        return {"eval_acc": float(acc)}
+
+    return params, loss_fn, ds, base_p, eval_fn
+
+
+def build_lm_task(args, rng):
+    lm = make_lm_tokens(seed=args.seed, n_seq=4096, seq_len=32, vocab=97)
+    cfg = ModelConfig("fl-lm-tiny", 2, 64, 4, 2, 16, 128, lm.vocab,
+                      pattern=(BlockCfg("attn"),), dtype="float32",
+                      remat=False)
+    labels = lm.tokens[:, 1:]
+    tokens = lm.tokens[:, :-1]
+    nprng = np.random.default_rng(args.seed)
+    # partition sequences by their dominant token as a 'label'
+    pseudo = tokens.mean(axis=1).astype(np.int64) % 10
+    idx, nu = dirichlet_partition(nprng, pseudo, args.m, alpha=args.alpha,
+                                  min_per_client=args.batch)
+    ds = FederatedDataset(dict(tokens=tokens, labels=labels), idx,
+                          seed=args.seed)
+    base_p = base_probs_from_data(rng, jnp.asarray(nu))
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    def loss_fn(tr, frozen, batch, key):
+        b = dict(tokens=batch["tokens"], labels=batch["labels"],
+                 mask=jnp.ones_like(batch["labels"], jnp.float32))
+        return lm_loss(tr, cfg, b)
+
+    def eval_fn(state):
+        batch = ds.eval_batch(256, seed=1)
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        b["mask"] = jnp.ones_like(b["labels"], jnp.float32)
+        return {"eval_loss": float(lm_loss(state.global_tr, cfg, b))}
+
+    return params, loss_fn, ds, base_p, eval_fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="image", choices=["image", "lm"])
+    ap.add_argument("--strategy", default="fedawe")
+    ap.add_argument("--dynamics", default="stationary",
+                    choices=["stationary", "staircase", "sine",
+                             "interleaved_sine", "markov"])
+    ap.add_argument("--gamma", type=float, default=0.3)
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--m", type=int, default=32)
+    ap.add_argument("--s", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--eta-l", type=float, default=0.05)
+    ap.add_argument("--eta-g", type=float, default=1.0)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--n-samples", type=int, default=20000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=50)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    rng = jax.random.PRNGKey(args.seed)
+    build = build_image_task if args.preset == "image" else build_lm_task
+    params, loss_fn, ds, base_p, eval_fn = build(args, rng)
+
+    fl = FLConfig(m=args.m, s=args.s, eta_l=args.eta_l, eta_g=args.eta_g,
+                  strategy=args.strategy)
+    av = AvailabilityCfg(kind=args.dynamics, gamma=args.gamma)
+    state = init_fl_state(rng, fl, params)
+    round_fn = make_round_fn(fl, loss_fn, {}, av, base_p)
+
+    def batch_fn(t):
+        return {k: jnp.asarray(v)
+                for k, v in ds.round_batches(t, args.s, args.batch).items()}
+
+    state, hist = run_rounds(state, round_fn, batch_fn, args.rounds,
+                             log_every=max(1, args.rounds // 10),
+                             eval_fn=eval_fn, eval_every=args.eval_every)
+    final = eval_fn(state)
+    print("final:", final)
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(dict(args=vars(args), final=final, history=hist), f)
+    if args.ckpt:
+        save_fl_state(args.ckpt, state)
+    return final
+
+
+if __name__ == "__main__":
+    main()

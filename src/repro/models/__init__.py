@@ -1,0 +1,11 @@
+from repro.models.config import BlockCfg, ModelConfig, reduced  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    count_params,
+    forward_hidden,
+    init_cache,
+    init_params,
+    lm_loss,
+    merge_trainable,
+    serve_step,
+    split_trainable,
+)

@@ -1,0 +1,99 @@
+"""Small CNN/MLP classifiers for the paper-faithful simulation tier
+(Table 6: C(3,32)-R-M-C(32,32)-R-M-L(...)-R-L(10), cross-entropy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_cnn(rng, in_shape=(8, 8, 1), n_classes=10, channels=(32, 32),
+             hidden=(128,)):
+    H, W, C = in_shape
+    ks = jax.random.split(rng, len(channels) + len(hidden) + 1)
+    params, cin, i = {}, C, 0
+    h, w = H, W
+    for j, cout in enumerate(channels):
+        params[f"conv{j}"] = dict(
+            w=jax.random.normal(ks[i], (3, 3, cin, cout)) *
+            (9 * cin) ** -0.5,
+            b=jnp.zeros((cout,)))
+        cin = cout
+        h, w = h // 2, w // 2
+        i += 1
+    din = h * w * cin
+    for j, dout in enumerate(hidden):
+        params[f"fc{j}"] = dict(
+            w=jax.random.normal(ks[i], (din, dout)) * din ** -0.5,
+            b=jnp.zeros((dout,)))
+        din = dout
+        i += 1
+    params["head"] = dict(
+        w=jax.random.normal(ks[i], (din, n_classes)) * din ** -0.5,
+        b=jnp.zeros((n_classes,)))
+    return params
+
+
+def cnn_apply(params, x):
+    """x: [B, H, W, C] -> logits [B, n_classes]."""
+    n_conv = sum(1 for k in params if k.startswith("conv"))
+    n_fc = sum(1 for k in params if k.startswith("fc"))
+    h = x
+    for j in range(n_conv):
+        p = params[f"conv{j}"]
+        h = jax.lax.conv_general_dilated(
+            h, p["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    for j in range(n_fc):
+        p = params[f"fc{j}"]
+        h = jax.nn.relu(h @ p["w"] + p["b"])
+    p = params["head"]
+    return h @ p["w"] + p["b"]
+
+
+def init_mlp(rng, d_in, n_classes=10, hidden=(64,)):
+    ks = jax.random.split(rng, len(hidden) + 1)
+    params, din = {}, d_in
+    for j, dout in enumerate(hidden):
+        params[f"fc{j}"] = dict(
+            w=jax.random.normal(ks[j], (din, dout)) * din ** -0.5,
+            b=jnp.zeros((dout,)))
+        din = dout
+    params["head"] = dict(
+        w=jax.random.normal(ks[-1], (din, n_classes)) * din ** -0.5,
+        b=jnp.zeros((n_classes,)))
+    return params
+
+
+def mlp_apply(params, x):
+    h = x.reshape(x.shape[0], -1)
+    n_fc = sum(1 for k in params if k.startswith("fc"))
+    for j in range(n_fc):
+        p = params[f"fc{j}"]
+        h = jax.nn.relu(h @ p["w"] + p["b"])
+    p = params["head"]
+    return h @ p["w"] + p["b"]
+
+
+def xent_loss(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def make_image_loss_fn(apply_fn):
+    """loss_fn(trainable, frozen, batch, rng) for the FL engine."""
+    def loss_fn(trainable, frozen, batch, rng):
+        logits = apply_fn(trainable, batch["images"])
+        return xent_loss(logits, batch["labels"])
+
+    return loss_fn
+
+
+def accuracy(apply_fn, params, batch):
+    logits = apply_fn(params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(
+        jnp.float32))

@@ -1,0 +1,245 @@
+"""Core neural layers: RMSNorm, RoPE, GQA attention (full / sliding-window /
+query-chunked), gated MLP. All functions are pure and shape-polymorphic.
+
+Conventions
+-----------
+  B batch, L query length, S key length, H query heads, K kv heads,
+  G = H // K query heads per kv head, D head dim.
+Activations flow in ``cfg.dtype`` (bf16 on pod tier); softmax statistics and
+norms accumulate in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# norms / elementwise
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def swiglu(x, wi, wd):
+    """Fused gate+up projection: wi [d, 2*ff], wd [ff, d]."""
+    gu = x @ wi
+    g, u = jnp.split(gu, 2, axis=-1)
+    return (jax.nn.silu(g) * u) @ wd
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., L, n_heads, D]; positions: [..., L] (int)."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., L, D/2]
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention masks
+# ---------------------------------------------------------------------------
+
+def causal_window_mask(q_pos, k_pos, window=None, causal=True):
+    """Boolean [.., L, S] mask: True = attend.
+
+    q_pos: [..., L], k_pos: [..., S] absolute positions.
+    """
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    m = jnp.ones(d.shape, dtype=bool)
+    if causal:
+        m = m & (d >= 0)
+    if window is not None:
+        m = m & (d < window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# grouped-query attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k, scale, cap):
+    """q: [B,L,K,G,D], k: [B,S,K,D] -> [B,K,G,L,S] (f32)."""
+    s = jnp.einsum("blkgd,bskd->bkgls", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if cap:
+        s = softcap(s, cap)
+    return s
+
+
+def _gqa_out(p, v):
+    """p: [B,K,G,L,S] , v: [B,S,K,D] -> [B,L,K*G,D]."""
+    o = jnp.einsum("bkgls,bskd->blkgd", p.astype(v.dtype), v)
+    B, L, K, G, D = o.shape
+    return o.reshape(B, L, K * G, D)
+
+
+def attention(q, k, v, q_pos, k_pos, *, window=None, causal=True,
+              attn_softcap=0.0, q_chunk=0, kv_valid=None):
+    """Grouped-query scaled dot-product attention.
+
+    q: [B, L, H, D]; k, v: [B, S, K, D]. Returns [B, L, H, D].
+    kv_valid: optional [B, S] bool — extra key validity mask (decode caches).
+    q_chunk > 0 enables query-chunked evaluation: peak memory drops from
+    O(L*S) to O(q_chunk*S) per (kv-)head without changing the math.
+    """
+    B, L, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, L, K, G, D)
+    scale = D ** -0.5
+
+    def block(q_blk, qp_blk):
+        s = _gqa_scores(q_blk, k, scale, attn_softcap)  # [B,K,G,l,S]
+        m = causal_window_mask(qp_blk, k_pos, window=window, causal=causal)
+        m = m[:, None, None]  # [B,1,1,l,S]
+        if kv_valid is not None:
+            m = m & kv_valid[:, None, None, None, :]
+        s = jnp.where(m, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return _gqa_out(p, v)
+
+    if q_chunk and L > q_chunk and L % q_chunk == 0:
+        n = L // q_chunk
+        qs = qg.reshape(B, n, q_chunk, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+
+        # checkpoint each chunk so backward recomputes its O(chunk*S) score
+        # block instead of stashing every chunk's residuals (flash-style).
+        blk = jax.checkpoint(block)
+
+        def body(_, xs):
+            qb, pb = xs
+            return None, blk(qb, pb)
+
+        _, outs = jax.lax.scan(body, None, (qs, ps))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, L, H, D)
+    else:
+        out = block(qg, q_pos)
+    return out
+
+
+def attention_decode(q, k_cache, v_cache, q_pos, cache_pos, *, window=None,
+                     attn_softcap=0.0):
+    """Single-token decode attention against a (possibly rolling) cache.
+
+    q: [B, 1, H, D]; caches: [B, Sc, K, D] where Sc = allocated cache length
+    (== window for rolling caches). cache_pos: [B, Sc] absolute position held
+    in each cache slot (-1 = empty). q_pos: [B, 1].
+    """
+    B, _, H, D = q.shape
+    K = k_cache.shape[2]
+    qg = q.reshape(B, 1, K, H // K, D)
+    s = _gqa_scores(qg, k_cache, D ** -0.5, attn_softcap)  # [B,K,G,1,Sc]
+    valid = (cache_pos >= 0) & (cache_pos <= q_pos)  # [B,Sc]
+    if window is not None:
+        valid = valid & (q_pos - cache_pos < window)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v_cache)  # [B,1,H,D]
+
+
+# ---------------------------------------------------------------------------
+# attention block application (shared by 'attn', 'moe', 'shared_attn')
+# ---------------------------------------------------------------------------
+
+def attn_qkvo(x, bp, cfg, positions, lora=None, *, kv_override=None,
+              decode_cache=None, prefill_cache=None, window=None,
+              causal=True):
+    """Compute one attention sub-block given params dict ``bp``.
+
+    kv_override: (k, v, k_pos) for cross-attention.
+    decode_cache: dict(k, v, pos, slot) for single-token decode.
+    prefill_cache: dict(k, v, pos) — full-sequence forward that also writes
+    the (last `alloc`) K/V entries into the cache.
+    Returns (out, new_cache_or_None).
+    """
+    B, L, d = x.shape
+
+    def proj(name, w):
+        y = x @ w
+        if lora is not None and f"a_{name}" in lora:
+            r = (x @ lora[f"a_{name}"]) @ lora[f"b_{name}"]
+            y = y + (cfg.lora_rank ** -0.5) * r.astype(y.dtype)
+        return y
+
+    q = proj("q", bp["wq"]).reshape(B, L, cfg.n_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+
+    if kv_override is not None:
+        k, v, k_pos = kv_override
+        out = attention(q, k, v, positions, k_pos, window=None, causal=False,
+                        attn_softcap=cfg.attn_softcap, q_chunk=cfg.attn_chunk)
+        new_cache = None
+    else:
+        k = proj("k", bp["wk"]).reshape(B, L, cfg.n_kv_heads, cfg.head_dim)
+        v = proj("v", bp["wv"]).reshape(B, L, cfg.n_kv_heads, cfg.head_dim)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if decode_cache is not None:
+            assert L == 1
+            slot = decode_cache["slot"]  # [B] int32 — write index
+            kc = jax.lax.dynamic_update_slice_in_dim  # noqa: F841
+            bidx = jnp.arange(B)
+            k_cache = decode_cache["k"].at[bidx, slot].set(k[:, 0])
+            v_cache = decode_cache["v"].at[bidx, slot].set(v[:, 0])
+            cache_pos = decode_cache["pos"].at[bidx, slot].set(positions[:, 0])
+            out = attention_decode(q, k_cache, v_cache, positions, cache_pos,
+                                   window=window, attn_softcap=cfg.attn_softcap)
+            sc = k_cache.shape[1]
+            new_cache = dict(k=k_cache, v=v_cache, pos=cache_pos,
+                             slot=(slot + 1) % sc)
+        else:
+            use_flash = (cfg.attn_backend == "flash"
+                         and prefill_cache is not None
+                         and L % 128 == 0 and cfg.head_dim % 8 == 0)
+            if use_flash:
+                from repro.kernels.flash_attention.ops import flash_mha
+
+                out = flash_mha(q, k, v, causal=causal, window=window,
+                                softcap=cfg.attn_softcap)
+            else:
+                out = attention(q, k, v, positions, positions, window=window,
+                                causal=causal, attn_softcap=cfg.attn_softcap,
+                                q_chunk=cfg.attn_chunk)
+            new_cache = None
+            if prefill_cache is not None:
+                alloc = prefill_cache["k"].shape[1]
+                take = min(L, alloc)
+                slots = positions[:, L - take:] % alloc  # [B, take]
+                bidx = jnp.arange(B)[:, None]
+                new_cache = dict(
+                    k=prefill_cache["k"].at[bidx, slots].set(k[:, L - take:]),
+                    v=prefill_cache["v"].at[bidx, slots].set(v[:, L - take:]),
+                    pos=prefill_cache["pos"].at[bidx, slots].set(
+                        positions[:, L - take:]),
+                )
+
+    out = out.reshape(B, L, cfg.q_dim)
+    y = out @ bp["wo"]
+    if lora is not None and "a_o" in lora:
+        y = y + (cfg.lora_rank ** -0.5) * ((out @ lora["a_o"]) @ lora["b_o"]).astype(y.dtype)
+    return y, new_cache

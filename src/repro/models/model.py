@@ -1,0 +1,575 @@
+"""Unified model: parameter init, unit-scan forward, LM loss, decode.
+
+The layer stack is grouped into repeating *units* (cfg.pattern). Full units
+run under one ``lax.scan`` (weights stacked on a leading unit axis); the
+remainder ("tail") is unrolled. Heterogeneous patterns (gemma local/global
+alternation, zamba mamba+shared-attention) therefore cost one unit body in
+HLO regardless of depth, and remat is applied per unit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.config import BlockCfg, ModelConfig
+from repro.models.layers import attn_qkvo, rms_norm, softcap, swiglu
+from repro.models.moe import moe_ffn
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# initialization
+# ===========================================================================
+
+def _norm_init(rng, shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def _dense_init(rng, shape, dtype, scale=None):
+    fan_in = shape[0]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(rng, shape, jnp.float32) * s).astype(dtype)
+
+
+def init_attn_block(rng, cfg: ModelConfig, cross: bool = False):
+    dt = _dt(cfg)
+    ks = jax.random.split(rng, 16)
+    d, qd, kd, ff = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.d_ff
+    p = {
+        "ln1": _norm_init(ks[0], (d,)),
+        "wq": _dense_init(ks[1], (d, qd), dt),
+        "wk": _dense_init(ks[2], (d, kd), dt),
+        "wv": _dense_init(ks[3], (d, kd), dt),
+        "wo": _dense_init(ks[4], (qd, d), dt),
+        "ln2": _norm_init(ks[5], (d,)),
+    }
+    if ff:
+        p["wi"] = _dense_init(ks[6], (d, 2 * ff), dt)
+        p["wd"] = _dense_init(ks[7], (ff, d), dt)
+    if cross:
+        p.update({
+            "ln_x": _norm_init(ks[8], (d,)),
+            "wq_x": _dense_init(ks[9], (d, qd), dt),
+            "wk_x": _dense_init(ks[10], (d, kd), dt),
+            "wv_x": _dense_init(ks[11], (d, kd), dt),
+            "wo_x": _dense_init(ks[12], (qd, d), dt),
+        })
+    return p
+
+
+def init_moe_block(rng, cfg: ModelConfig, cross: bool = False):
+    dt = _dt(cfg)
+    k0, k1, k2, k3, k4, k5 = jax.random.split(rng, 6)
+    p = init_attn_block(k0, cfg, cross=cross)
+    # replace the dense FFN by the MoE FFN
+    p.pop("wi", None), p.pop("wd", None)
+    d, eff, E = cfg.d_model, cfg.expert_ff, cfg.n_experts
+    p["router"] = _dense_init(k1, (d, E), jnp.float32)
+    p["wi_e"] = _dense_init(k2, (E, d, 2 * eff), dt, scale=d ** -0.5)
+    p["wd_e"] = _dense_init(k3, (E, eff, d), dt, scale=eff ** -0.5)
+    if cfg.n_shared_experts:
+        sff = cfg.n_shared_experts * eff
+        p["wi_s"] = _dense_init(k4, (d, 2 * sff), dt)
+        p["wd_s"] = _dense_init(k5, (sff, d), dt)
+    return p
+
+
+def init_mamba_block(rng, cfg: ModelConfig):
+    dt = _dt(cfg)
+    ks = jax.random.split(rng, 8)
+    d, di = cfg.d_model, cfg.ssm_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    proj_out = 2 * di + 2 * gn + cfg.ssm_heads
+    return {
+        "ln1": _norm_init(ks[0], (d,)),
+        "in_proj": _dense_init(ks[1], (d, proj_out), dt),
+        "conv_w": _dense_init(ks[2], (cfg.ssm_conv_dim, cfg.ssm_conv),
+                              jnp.float32, scale=0.3),
+        "conv_b": jnp.zeros((cfg.ssm_conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.ssm_heads)),
+        "D": jnp.ones((cfg.ssm_heads,), jnp.float32),
+        "dt_bias": jnp.full((cfg.ssm_heads,), -4.6, jnp.float32),  # ~softplus->0.01
+        "ln_out": _norm_init(ks[3], (di,)),
+        "out_proj": _dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _init_block(rng, blk: BlockCfg, cfg: ModelConfig, cross: bool):
+    if blk.kind == "attn":
+        return init_attn_block(rng, cfg, cross=cross)
+    if blk.kind == "moe":
+        return init_moe_block(rng, cfg, cross=cross)
+    if blk.kind == "mamba":
+        return init_mamba_block(rng, cfg)
+    if blk.kind == "shared_attn":
+        return {}  # weights live in params['shared']
+    raise ValueError(blk.kind)
+
+
+def _init_stack(rng, cfg: ModelConfig, pattern, n_units, n_tail, cross):
+    """Returns (stack, tail): stack leaves have leading [n_units] axis."""
+    rngs = jax.random.split(rng, (n_units + 1) * len(pattern) + 1)
+    stack = {}
+    it = iter(range(len(rngs)))
+    for j, blk in enumerate(pattern):
+        per_unit = [_init_block(rngs[next(it)], blk, cfg, cross)
+                    for _ in range(n_units)]
+        stack[f"pos{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit) \
+            if n_units else {}
+    tail = {}
+    for i in range(n_tail):
+        blk = pattern[i]
+        tail[f"blk{i}"] = _init_block(rngs[next(it)], blk, cfg, cross)
+    return stack, tail
+
+
+def init_params(rng, cfg: ModelConfig):
+    dt = _dt(cfg)
+    k_emb, k_stack, k_enc, k_shared, k_head, k_lora = jax.random.split(rng, 6)
+    params = {
+        "embed": _dense_init(k_emb, (cfg.vocab, cfg.d_model), dt, scale=0.02),
+        "ln_f": _norm_init(k_head, (cfg.d_model,)),
+    }
+    cross = cfg.enc_dec
+    stack, tail = _init_stack(k_stack, cfg, cfg.pattern, cfg.n_units,
+                              cfg.n_tail, cross)
+    params["stack"], params["tail"] = stack, tail
+    if any(b.kind == "shared_attn" for b in cfg.pattern):
+        params["shared"] = init_attn_block(k_shared, cfg, cross=False)
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense_init(k_head, (cfg.d_model, cfg.vocab), dt,
+                                        scale=0.02)
+    if cfg.enc_dec:
+        enc_pat = (BlockCfg("attn"),)
+        e_stack, e_tail = _init_stack(k_enc, cfg, enc_pat, cfg.n_enc_layers,
+                                      0, False)
+        params["enc"] = {"stack": e_stack, "tail": e_tail,
+                         "ln_f": _norm_init(k_enc, (cfg.d_model,))}
+    if cfg.fl_mode == "lora":
+        params["lora"] = init_lora(k_lora, cfg)
+    return params
+
+
+def _init_lora_block(rng, cfg):
+    dt = _dt(cfg)
+    r, d, qd, kd = cfg.lora_rank, cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(rng, 4)
+    out = {}
+    for k, (name, odim) in zip(ks, [("q", qd), ("k", kd), ("v", kd), ("o", d)]):
+        idim = qd if name == "o" else d
+        out[f"a_{name}"] = _dense_init(k, (idim, r), dt)
+        out[f"b_{name}"] = jnp.zeros((r, odim), dt)
+    return out
+
+
+def init_lora(rng, cfg: ModelConfig):
+    rngs = jax.random.split(rng, cfg.n_units * len(cfg.pattern) + cfg.n_tail + 1)
+    it = iter(range(len(rngs)))
+    stack = {}
+    for j, blk in enumerate(cfg.pattern):
+        if blk.kind == "mamba":
+            stack[f"pos{j}"] = {}
+            continue
+        per_unit = [_init_lora_block(rngs[next(it)], cfg)
+                    for _ in range(cfg.n_units)]
+        stack[f"pos{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit)
+    tail = {}
+    for i in range(cfg.n_tail):
+        if cfg.pattern[i].kind == "mamba":
+            tail[f"blk{i}"] = {}
+        else:
+            tail[f"blk{i}"] = _init_lora_block(rngs[next(it)], cfg)
+    return {"stack": stack, "tail": tail}
+
+
+# --- trainable / frozen split (FL integration point) ----------------------
+
+def split_trainable(params, cfg: ModelConfig):
+    if cfg.fl_mode == "lora":
+        frozen = {k: v for k, v in params.items() if k != "lora"}
+        return params["lora"], frozen
+    return params, {}
+
+
+def merge_trainable(trainable, frozen, cfg: ModelConfig):
+    if cfg.fl_mode == "lora":
+        return {**frozen, "lora": trainable}
+    return trainable
+
+
+def count_params(cfg: ModelConfig, trainable_only: bool = False) -> int:
+    import math
+
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if trainable_only:
+        shapes, _ = split_trainable(shapes, cfg)
+    return sum(math.prod(x.shape) if x.shape else 1
+               for x in jax.tree.leaves(shapes))
+
+
+# ===========================================================================
+# forward
+# ===========================================================================
+
+def _block_lora(lora_tree, key):
+    if lora_tree is None:
+        return None
+    sub = lora_tree.get(key) if isinstance(lora_tree, dict) else None
+    return sub if sub else None
+
+
+def _run_stack(h, params, cfg: ModelConfig, pattern, positions, *,
+               lora=None, enc_kv=None, caches=None, use_remat=True,
+               n_units=None, n_tail=None, mode="train"):
+    """Run scan-over-units + unrolled tail. Returns (h, new_caches, aux)."""
+    n_units = cfg.n_units if n_units is None else n_units
+    n_tail = cfg.n_tail if n_tail is None else n_tail
+    shared = params.get("shared")
+    stack_lora = (lora or {}).get("stack") if lora else None
+    tail_lora = (lora or {}).get("tail") if lora else None
+
+    def unit(h, uparams, ulora, ucaches):
+        # ulora is the per-unit slice of the lora stack (dict) or a dummy
+        lora_d = ulora if isinstance(ulora, dict) else None
+        new_caches, auxs = {}, jnp.zeros((), jnp.float32)
+        for j, blk in enumerate(pattern):
+            key = f"pos{j}"
+            c = ucaches.get(key) if ucaches else None
+            h, nc, aux = apply_block(
+                blk, uparams.get(key, {}), h, cfg, positions,
+                shared=shared, lora=_block_lora(lora_d, key),
+                enc_kv=enc_kv, cache=c, mode=mode)
+            auxs = auxs + aux
+            if nc is not None:
+                new_caches[key] = nc
+        return h, new_caches, auxs
+
+    stack_params = params["stack"]
+    have_stack = n_units > 0 and any(
+        len(jax.tree.leaves(stack_params.get(f"pos{j}", {}))) > 0
+        for j in range(len(pattern)))
+    have_lora = (stack_lora is not None
+                 and len(jax.tree.leaves(stack_lora)) > 0)
+    lora_xs = stack_lora if have_lora else jnp.zeros((n_units,), jnp.float32)
+
+    ckpt_kw = {}
+    if cfg.remat_policy == "dots":
+        ckpt_kw["policy"] = \
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+    total_aux = jnp.zeros((), jnp.float32)
+    new_stack_caches = None
+    if have_stack:
+        if caches is None:
+            def body2(carry, xs2):
+                hh = carry
+                uparams, ulora, _ = xs2
+                hh, ncs, aux = unit(hh, uparams, ulora, None)
+                return hh, aux
+
+            f2 = jax.checkpoint(body2, **ckpt_kw) if (use_remat and cfg.remat) \
+                else body2
+            xs = (stack_params, lora_xs, jnp.zeros((n_units,), jnp.float32))
+            h, auxs = jax.lax.scan(f2, h, xs)
+            total_aux = total_aux + jnp.sum(auxs)
+        else:
+            def body(carry, xs):
+                hh = carry
+                uparams, ulora, ucaches = xs
+                hh, ncs, aux = unit(hh, uparams, ulora, ucaches)
+                return hh, (ncs, aux)
+
+            f = jax.checkpoint(body, **ckpt_kw) if (use_remat and cfg.remat) \
+                else body
+            xs = (stack_params, lora_xs, caches["stack"])
+            h, (new_stack_caches, auxs) = jax.lax.scan(f, h, xs)
+            total_aux = total_aux + jnp.sum(auxs)
+
+    new_tail_caches = {}
+    for i in range(n_tail):
+        blk = pattern[i]
+        key = f"blk{i}"
+        c = caches["tail"].get(key) if caches else None
+        h, nc, aux = apply_block(
+            blk, params["tail"].get(key, {}), h, cfg, positions,
+            shared=shared, lora=_block_lora(tail_lora, key),
+            enc_kv=enc_kv, cache=c, mode=mode)
+        total_aux = total_aux + aux
+        if nc is not None:
+            new_tail_caches[key] = nc
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"stack": new_stack_caches, "tail": new_tail_caches}
+    return h, new_caches, total_aux
+
+
+def encode(params, cfg: ModelConfig, enc_embeds):
+    """Encoder pass (enc-dec models). enc_embeds: [B, Le, d]."""
+    B, Le, _ = enc_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(Le), (B, Le))
+    enc = params["enc"]
+    # bidirectional: attention() is called with causal=True in attn_qkvo; we
+    # emulate bidirectionality by passing window=None & causal via a huge
+    # trick: encoder uses full self-attention without causal mask.
+    h = enc_embeds
+    pat = (BlockCfg("attn"),)
+
+    def unit(h, uparams):
+        x = rms_norm(h, uparams["pos0"]["ln1"], cfg.norm_eps)
+        from repro.models.layers import apply_rope, attention
+        bpp = uparams["pos0"]
+        q = (x @ bpp["wq"]).reshape(B, Le, cfg.n_heads, cfg.head_dim)
+        k = (x @ bpp["wk"]).reshape(B, Le, cfg.n_kv_heads, cfg.head_dim)
+        v = (x @ bpp["wv"]).reshape(B, Le, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        o = attention(q, k, v, pos, pos, causal=False,
+                      attn_softcap=cfg.attn_softcap, q_chunk=cfg.attn_chunk)
+        h = h + o.reshape(B, Le, cfg.q_dim) @ bpp["wo"]
+        x2 = rms_norm(h, bpp["ln2"], cfg.norm_eps)
+        return h + swiglu(x2, bpp["wi"], bpp["wd"]), None
+
+    f = jax.checkpoint(lambda c, x: unit(c, x)) if cfg.remat else unit
+    h, _ = jax.lax.scan(f, h, enc["stack"])
+    return rms_norm(h, enc["ln_f"], cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, embeds=None,
+                   enc_embeds=None, positions=None):
+    """Training/prefill forward. tokens: [B, L]. Returns (h, aux)."""
+    B, L = tokens.shape
+    h = params["embed"][tokens].astype(_dt(cfg))
+    if embeds is not None:
+        F = embeds.shape[1]
+        h = jnp.concatenate([embeds.astype(h.dtype), h[:, F:]], axis=1)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+
+    enc_kv = None
+    if cfg.enc_dec:
+        enc_out = encode(params, cfg, enc_embeds)
+        Le = enc_out.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(Le), (B, Le))
+        enc_kv = ("enc_out", enc_out, k_pos)  # resolved per-block below
+
+    h, _, aux = _run_stack(
+        h, params, cfg, cfg.pattern, positions,
+        lora=params.get("lora"),
+        enc_kv=_make_enc_kv(enc_kv, cfg) if enc_kv else None)
+    return rms_norm(h, params["ln_f"], cfg.norm_eps), aux
+
+
+def _make_enc_kv(enc_kv, cfg):
+    # cross-attention projects K/V inside the block from enc_out; we pass
+    # enc_out through and let apply_block project. To keep attn_qkvo generic
+    # we pre-project here per call site instead: represented as raw enc_out.
+    return enc_kv
+
+
+# cross-attention needs per-block K/V projections of enc_out; attn_qkvo's
+# kv_override expects (k, v, k_pos). We therefore wrap apply_block's cross
+# path: it receives enc_kv = ("enc_out", enc_out, k_pos) and projects.
+_orig_attn_qkvo = attn_qkvo
+
+
+def _cross_attn(x, wp, cfg, positions, enc_kv):
+    tag, enc_out, k_pos = enc_kv
+    B, Le, _ = enc_out.shape
+    k = (enc_out @ wp["wk"]).reshape(B, Le, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ wp["wv"]).reshape(B, Le, cfg.n_kv_heads, cfg.head_dim)
+    return _orig_attn_qkvo(x, wp, cfg, positions, kv_override=(k, v, k_pos))
+
+
+# patch apply_block's cross path cleanly by re-defining it here
+def apply_block(blk, bp, h, cfg, positions, *, shared=None, lora=None,  # noqa: F811
+                enc_kv=None, cache=None, mode="train"):
+    aux = jnp.zeros((), jnp.float32)
+    if blk.kind == "mamba":
+        y, new_cache = ssm.mamba_block(
+            rms_norm(h, bp["ln1"], cfg.norm_eps), bp, cfg,
+            decode_cache=cache if mode == "decode" else None,
+            return_cache=(mode == "prefill"))
+        return h + y, new_cache, aux
+
+    wp = shared if blk.kind == "shared_attn" else bp
+    x = rms_norm(h, wp["ln1"], cfg.norm_eps)
+    dec = pre = None
+    if cache is not None and mode == "decode":
+        alloc = cache["k"].shape[1]
+        slot = positions[:, 0] % alloc
+        dec = dict(k=cache["k"], v=cache["v"], pos=cache["pos"], slot=slot)
+    elif cache is not None and mode == "prefill":
+        pre = cache
+    y, new_dec = _orig_attn_qkvo(x, wp, cfg, positions, lora=lora,
+                                 decode_cache=dec, prefill_cache=pre,
+                                 window=blk.window)
+    h = h + y
+    new_cache = None
+    if new_dec is not None:
+        new_cache = dict(k=new_dec["k"], v=new_dec["v"], pos=new_dec["pos"])
+
+    if enc_kv is not None and "wq_x" in wp:
+        xx = rms_norm(h, wp["ln_x"], cfg.norm_eps)
+        xp = {"wq": wp["wq_x"], "wk": wp["wk_x"], "wv": wp["wv_x"],
+              "wo": wp["wo_x"]}
+        y, _ = _cross_attn(xx, xp, cfg, positions, enc_kv)
+        h = h + y
+
+    x = rms_norm(h, wp["ln2"], cfg.norm_eps)
+    if blk.kind == "moe":
+        y, aux = moe_ffn(x, wp, cfg)
+    else:
+        y = swiglu(x, wp["wi"], wp["wd"])
+    return h + y, new_cache, aux
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+
+def _head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T  # [d, V]
+    return params["unembed"]
+
+
+def lm_logits(h, params, cfg: ModelConfig):
+    logits = h @ _head_weight(params, cfg)
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    """batch: tokens [B,L], labels [B,L], mask [B,L] (+embeds/enc_embeds).
+    Returns mean masked token cross-entropy (+ router aux)."""
+    h, aux = forward_hidden(params, cfg, batch["tokens"],
+                            embeds=batch.get("embeds"),
+                            enc_embeds=batch.get("enc_embeds"))
+    labels, mask = batch["labels"], batch["mask"].astype(jnp.float32)
+    W = _head_weight(params, cfg)
+
+    def ce(h_c, labels_c, mask_c):
+        logits = softcap((h_c @ W).astype(jnp.float32), cfg.logit_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - ll) * mask_c)
+
+    B, L, _ = h.shape
+    ck = cfg.loss_chunk
+    if ck and L > ck and L % ck == 0:
+        n = L // ck
+        hs = h.reshape(B, n, ck, -1).transpose(1, 0, 2, 3)
+        ls = labels.reshape(B, n, ck).transpose(1, 0, 2)
+        ms = mask.reshape(B, n, ck).transpose(1, 0, 2)
+
+        def body(acc, xs):
+            return acc + ce(*xs), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls, ms))
+    else:
+        total = ce(h, labels, mask)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = total / denom
+    if cfg.is_moe:
+        loss = loss + cfg.router_aux_coef * aux
+    return loss
+
+
+# ===========================================================================
+# decode / serving
+# ===========================================================================
+
+def init_block_cache(blk: BlockCfg, cfg: ModelConfig, batch, seq_len, dtype):
+    if blk.kind == "mamba":
+        return ssm.init_mamba_cache(cfg, batch, dtype)
+    alloc = seq_len if blk.window is None else min(blk.window, seq_len)
+    return dict(
+        k=jnp.zeros((batch, alloc, cfg.n_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, alloc, cfg.n_kv_heads, cfg.head_dim), dtype),
+        pos=jnp.full((batch, alloc), -1, jnp.int32),
+    )
+
+
+def init_cache(cfg: ModelConfig, batch, seq_len, dtype=None):
+    dtype = dtype or _dt(cfg)
+
+    def stacked(blk):
+        one = init_block_cache(blk, cfg, batch, seq_len, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_units,) + x.shape).copy(), one)
+
+    cache = {"stack": {f"pos{j}": stacked(blk)
+                       for j, blk in enumerate(cfg.pattern)},
+             "tail": {f"blk{i}": init_block_cache(cfg.pattern[i], cfg, batch,
+                                                  seq_len, dtype)
+                      for i in range(cfg.n_tail)}}
+    if cfg.enc_dec:
+        Le = cfg.enc_len
+        cache["enc_out"] = jnp.zeros((batch, Le, cfg.d_model), dtype)
+    return cache
+
+
+def serve_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One decode step. tokens: [B,1] int32; pos: [B] int32 (absolute index
+    of the new token). Returns (logits [B,V], new_cache)."""
+    B = tokens.shape[0]
+    h = params["embed"][tokens].astype(_dt(cfg))
+    positions = pos[:, None]
+
+    enc_kv = None
+    if cfg.enc_dec:
+        enc_out = cache["enc_out"]
+        Le = enc_out.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(Le), (B, Le))
+        enc_kv = ("enc_out", enc_out, k_pos)
+
+    h, new_caches, _ = _run_stack(
+        h, params, cfg, cfg.pattern, positions,
+        lora=params.get("lora"), enc_kv=enc_kv,
+        caches=cache, use_remat=False, mode="decode")
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = lm_logits(h[:, 0], params, cfg)
+    if cfg.enc_dec:
+        new_caches["enc_out"] = cache["enc_out"]
+    return logits, new_caches
+
+
+def prefill(params, cfg: ModelConfig, cache, tokens, *, embeds=None,
+            enc_embeds=None, start_pos=0):
+    """Full-sequence forward that also populates the decode cache.
+
+    tokens: [B, Lp]. Returns (last-position logits [B, V], new_cache)."""
+    B, L = tokens.shape
+    h = params["embed"][tokens].astype(_dt(cfg))
+    if embeds is not None:
+        F = embeds.shape[1]
+        h = jnp.concatenate([embeds.astype(h.dtype), h[:, F:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(start_pos, start_pos + L), (B, L))
+
+    enc_kv = None
+    if cfg.enc_dec:
+        enc_out = encode(params, cfg, enc_embeds)
+        cache = dict(cache)
+        cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype)
+        Le = enc_out.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(Le), (B, Le))
+        enc_kv = ("enc_out", enc_out, k_pos)
+
+    enc_out_saved = cache.get("enc_out")
+    run_cache = {k: v for k, v in cache.items() if k != "enc_out"}
+    h, new_caches, _ = _run_stack(
+        h, params, cfg, cfg.pattern, positions,
+        lora=params.get("lora"), enc_kv=enc_kv,
+        caches=run_cache, use_remat=False, mode="prefill")
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = lm_logits(h[:, -1], params, cfg)
+    if enc_out_saved is not None:
+        new_caches["enc_out"] = enc_out_saved
+    return logits, new_caches

@@ -1,0 +1,143 @@
+"""Mixture-of-Experts layer: sort-based capacity dispatch.
+
+Design notes (TPU adaptation): the classic GShard one-hot dispatch einsum
+costs O(T*E*C*d) matmul FLOPs — for small expert FFNs (olmoe: d_ff=1024,
+E=64) that is orders of magnitude more compute than the experts themselves
+and would poison the roofline. We instead use a sort-based dispatch
+(megablocks-style, XLA-friendly): argsort token->expert assignments, compute
+within-expert ranks via searchsorted, scatter into an [E, C, d] buffer, run a
+batched per-expert SwiGLU, gather back. Expert FLOPs are then the honest
+``T * top_k * capacity_factor`` multiple of a dense FFN; dispatch is pure
+data movement. Router math is f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import swiglu
+
+
+def router_topk(x, router_w, top_k):
+    """x: [T, d] -> (weights [T,k] f32, idx [T,k] int32, aux_loss scalar)."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, top_k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    # Switch-style load-balance auxiliary loss.
+    E = router_w.shape[-1]
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    one_hot = jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32)
+    fe = jnp.mean(one_hot, axis=0)  # fraction of tokens whose top1 is e
+    aux = E * jnp.sum(me * fe)
+    return topw, topi, aux
+
+
+def _constrain_expert_buffer(eb, E):
+    """§Perf knob: pin the [E, cap, d] dispatch buffer sharding.
+
+    REPRO_MOE_CONSTRAIN=1 -> P('model', None, None): expert-sharded dispatch
+        (all-to-all tokens to expert shards).
+    REPRO_MOE_CONSTRAIN=D -> P(None, None, 'data'): keep tokens put, shard
+        the feature dim to match FSDP ('data'-sharded) expert weights so the
+        expert einsum partial-sums + all-reduces instead of gathering the
+        weights (mixtral lora mode, EXPERIMENTS.md §Perf iter 4)."""
+    import os
+
+    mode = os.environ.get("REPRO_MOE_CONSTRAIN", "0")
+    if mode == "0":
+        return eb
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        spec = P(None, None, "data") if mode == "D" else P("model", None,
+                                                           None)
+        return jax.lax.with_sharding_constraint(eb, spec)
+    except Exception:  # no mesh context (unit tests) -> no-op
+        return eb
+
+
+def moe_ffn(x, bp, cfg):
+    """x: [B, L, d] -> (y, aux_loss).
+
+    bp: router [d,E], wi_e [E, d, 2*eff], wd_e [E, eff, d],
+        optional wi_s/wd_s shared-expert SwiGLU.
+
+    Routing is PER SEQUENCE (vmap over B): the argsort that ranks tokens
+    within experts then never crosses the batch sharding, so GSPMD keeps
+    dispatch local to each data shard instead of replicating + all-reducing
+    an [T*k, d] buffer (measured 1.1 TB/device/step on olmoe prefill_32k —
+    see EXPERIMENTS.md §Perf iter 3).
+    """
+    B, L, d = x.shape
+    if B > 1:
+        y, aux = jax.vmap(lambda xb: _moe_seq(xb, bp, cfg))(x)
+        if cfg.n_shared_experts and "wi_s" in bp:
+            y = y + swiglu(x.reshape(B * L, d), bp["wi_s"],
+                           bp["wd_s"]).reshape(B, L, d)
+        return y, jnp.mean(aux)
+    y, aux = _moe_seq(x[0], bp, cfg)
+    if cfg.n_shared_experts and "wi_s" in bp:
+        y = y + swiglu(x[0], bp["wi_s"], bp["wd_s"])
+    return y[None], aux
+
+
+def _moe_seq(xt, bp, cfg):
+    """Dispatch one sequence. xt: [T, d] -> (y [T, d], aux)."""
+    T, d = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    topw, topi, aux = router_topk(xt, bp["router"], k)
+
+    S = T * k
+    flat_e = topi.reshape(S)
+    order = jnp.argsort(flat_e)
+    se = flat_e[order]                      # sorted expert ids
+    st = order // k                         # source token of each slot
+    starts = jnp.searchsorted(se, jnp.arange(E))
+    rank = jnp.arange(S) - starts[se]       # within-expert rank
+
+    cap = int(max(1, round(cfg.capacity_factor * S / E)))
+    keep = rank < cap
+    dest = jnp.where(keep, se * cap + rank, E * cap)  # overflow -> trash row
+
+    buf = jnp.zeros((E * cap + 1, d), dtype=xt.dtype).at[dest].set(xt[st])
+    eb = buf[: E * cap].reshape(E, cap, d)
+    eb = _constrain_expert_buffer(eb, E)
+
+    h = jnp.einsum("ecd,edf->ecf", eb, bp["wi_e"])
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, bp["wd_e"]).reshape(E * cap, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], axis=0)
+
+    w_sorted = topw.reshape(S)[order].astype(xt.dtype)
+    contrib = out[dest] * (w_sorted * keep)[:, None]
+    y = jnp.zeros((T, d), dtype=xt.dtype).at[st].add(contrib)
+    return y, aux
+
+
+def moe_ffn_dense_ref(x, bp, cfg):
+    """Oracle: evaluate every expert densely and combine (O(E) compute).
+
+    Used only in tests; numerically identical when no token is dropped
+    (capacity_factor large enough). Aux loss averaged per sequence to match
+    moe_ffn's per-sequence routing.
+    """
+    B, L, d = x.shape
+    xt = x.reshape(B * L, d)
+    aux = jnp.mean(jax.vmap(
+        lambda xb: router_topk(xb, bp["router"], cfg.top_k)[2])(x))
+    topw, topi, _ = router_topk(xt, bp["router"], cfg.top_k)
+    h = jnp.einsum("td,edf->tef", xt, bp["wi_e"])
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    all_out = jnp.einsum("tef,efd->ted", h, bp["wd_e"])  # [T, E, d]
+    comb = jnp.zeros((xt.shape[0], cfg.n_experts), xt.dtype)
+    for j in range(cfg.top_k):
+        comb = comb + jax.nn.one_hot(topi[:, j], cfg.n_experts,
+                                     dtype=xt.dtype) * topw[:, j:j + 1].astype(xt.dtype)
+    y = jnp.einsum("te,ted->td", comb, all_out)
+    if cfg.n_shared_experts and "wi_s" in bp:
+        y = y + swiglu(xt, bp["wi_s"], bp["wd_s"])
+    return y.reshape(B, L, d), aux

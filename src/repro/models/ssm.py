@@ -1,0 +1,226 @@
+"""Mamba2 / SSD (state-space duality) blocks.
+
+TPU adaptation: the chunked SSD algorithm (intra-chunk quadratic attention-like
+einsums + inter-chunk state recurrence) maps naturally onto the MXU — the
+chunk size is the tiling knob (default 128, MXU-aligned). A naive sequential
+recurrence (`ssd_recurrence_ref`) is kept as the correctness oracle, and a
+single-step recurrence (`ssd_decode_step`) serves O(1)-per-token decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def segsum(x):
+    """x: [..., T] -> [..., T, T] with out[i, j] = sum_{k=j+1..i} x_k (i>=j),
+    -inf above the diagonal."""
+    T = x.shape[-1]
+    xx = jnp.broadcast_to(x[..., :, None], x.shape + (T,))  # out[..., i, j] = x_i
+    lower = jnp.tril(jnp.ones((T, T), bool), -1)
+    xx = jnp.where(lower, xx, 0.0)
+    seg = jnp.cumsum(xx, axis=-2)
+    keep = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(keep, seg, -jnp.inf)
+
+
+def ssd_chunked(xdt, dA, B_, C_, chunk, initial_state=None):
+    """Chunked SSD scan.
+
+    xdt: [b, l, h, p]   (inputs already multiplied by dt)
+    dA:  [b, l, h]      (dt * A, negative)
+    B_, C_: [b, l, h, n]
+    Returns (y [b, l, h, p], final_state [b, h, p, n]).
+    """
+    b, l, h, p = xdt.shape
+    n = B_.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+
+    f32 = jnp.float32
+    X = xdt.reshape(b, c, chunk, h, p).astype(f32)
+    A = dA.reshape(b, c, chunk, h).transpose(0, 3, 1, 2).astype(f32)  # [b,h,c,k]
+    Bm = B_.reshape(b, c, chunk, h, n).astype(f32)
+    Cm = C_.reshape(b, c, chunk, h, n).astype(f32)
+
+    A_cs = jnp.cumsum(A, axis=-1)  # [b,h,c,k]
+    L = jnp.exp(segsum(A))         # [b,h,c,k,k]
+
+    # 1. intra-chunk (diagonal blocks)
+    Y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Cm, Bm, L, X)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(A_cs[:, :, :, -1:] - A_cs)  # [b,h,c,k]
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bm, decay_states, X)
+
+    # 3. inter-chunk recurrence (linear scan over chunks)
+    chunk_decay = jnp.exp(A_cs[:, :, :, -1])  # [b,h,c]
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, p, n), f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def step(carry, inp):
+        st, dec = inp  # st: [b,h,p,n] chunk state, dec: [b,h]
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    sts = states.transpose(1, 0, 2, 3, 4)          # [c,b,h,p,n]
+    decs = chunk_decay.transpose(2, 0, 1)          # [c,b,h]
+    final, prev_states = jax.lax.scan(step, s0, (sts, decs))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b,c,h,p,n]
+
+    # 4. chunk-input contribution to outputs
+    state_decay_out = jnp.exp(A_cs)  # [b,h,c,k]
+    Y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cm, prev_states, state_decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return y.astype(xdt.dtype), final
+
+
+def ssd_recurrence_ref(xdt, dA, B_, C_, initial_state=None):
+    """Sequential oracle: h_t = exp(dA_t) h_{t-1} + B_t xdt_t^T ; y_t = C_t h_t."""
+    b, l, h, p = xdt.shape
+    n = B_.shape[-1]
+    f32 = jnp.float32
+    s0 = (jnp.zeros((b, h, p, n), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(hprev, inp):
+        x_t, a_t, b_t, c_t = inp  # [b,h,p], [b,h], [b,h,n], [b,h,n]
+        hnew = hprev * jnp.exp(a_t)[..., None, None] + \
+            x_t[..., :, None].astype(f32) * b_t[..., None, :].astype(f32)
+        y_t = jnp.einsum("bhpn,bhn->bhp", hnew, c_t.astype(f32))
+        return hnew, y_t
+
+    xs = (xdt.transpose(1, 0, 2, 3), dA.transpose(1, 0, 2),
+          B_.transpose(1, 0, 2, 3), C_.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(xdt.dtype), final
+
+
+def ssd_decode_step(state, xdt, dA, B_, C_):
+    """One-token recurrence. state: [b,h,p,n]; xdt: [b,h,p]; dA: [b,h];
+    B_, C_: [b,h,n]. Returns (y [b,h,p], new_state)."""
+    f32 = jnp.float32
+    new = state.astype(f32) * jnp.exp(dA.astype(f32))[..., None, None] + \
+        xdt[..., :, None].astype(f32) * B_[..., None, :].astype(f32)
+    y = jnp.einsum("bhpn,bhn->bhp", new, C_.astype(f32))
+    return y.astype(xdt.dtype), new.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def conv1d_causal(x, w, b):
+    """x: [B, L, C]; w: [C, W]; depthwise causal conv."""
+    W = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.T[:, None, :].astype(jnp.float32),  # [W, 1, C] -> spec below
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[0],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv1d_step(cache, x_t, w, b):
+    """cache: [B, W-1, C] previous inputs; x_t: [B, C]. Returns (y_t, cache)."""
+    W = w.shape[-1]
+    window = jnp.concatenate([cache, x_t[:, None, :]], axis=1)  # [B, W, C]
+    y = jnp.einsum("bwc,cw->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x_t.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _split_proj(proj, cfg):
+    di, gn, h = cfg.ssm_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * gn]
+    dt_raw = proj[..., di + di + 2 * gn:]
+    assert dt_raw.shape[-1] == h
+    return z, xBC, dt_raw
+
+
+def _expand_groups(v, cfg):
+    """[..., G, N] -> [..., H, N] by repeating each group."""
+    reps = cfg.ssm_heads // cfg.ssm_groups
+    return jnp.repeat(v, reps, axis=-2)
+
+
+def mamba_block(x, bp, cfg, decode_cache=None, return_cache=False):
+    """Mamba2 block. x: [B, L, d]. Returns (y, new_decode_cache)."""
+    B, L, d = x.shape
+    di, G, N, H, P = (cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    proj = x @ bp["in_proj"]
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+
+    new_cache = None
+    xBC_raw = xBC
+    if decode_cache is None:
+        xBC = conv1d_causal(xBC, bp["conv_w"], bp["conv_b"])
+    else:
+        assert L == 1
+        y1, conv_cache = conv1d_step(decode_cache["conv"], xBC[:, 0],
+                                     bp["conv_w"], bp["conv_b"])
+        xBC = y1[:, None, :]
+    xBC = jax.nn.silu(xBC)
+
+    xs = xBC[..., :di].reshape(B, L, H, P)
+    Bv = xBC[..., di:di + G * N].reshape(B, L, G, N)
+    Cv = xBC[..., di + G * N:].reshape(B, L, G, N)
+    Bv = _expand_groups(Bv, cfg)  # [B,L,H,N]
+    Cv = _expand_groups(Cv, cfg)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         bp["dt_bias"].astype(jnp.float32))  # [B,L,H]
+    A = -jnp.exp(bp["A_log"].astype(jnp.float32))  # [H]
+    dA = dt * A
+    xdt = xs * dt[..., None].astype(xs.dtype)
+
+    if decode_cache is None:
+        chunk = min(cfg.ssm_chunk, L)
+        if L % chunk:
+            chunk = 1  # fallback for odd tiny lengths
+        y, final = ssd_chunked(xdt, dA, Bv, Cv, chunk)
+        if return_cache:
+            W = cfg.ssm_conv
+            tail = xBC_raw[:, max(0, L - (W - 1)):]
+            if tail.shape[1] < W - 1:
+                pad = jnp.zeros((B, W - 1 - tail.shape[1], tail.shape[2]),
+                                tail.dtype)
+                tail = jnp.concatenate([pad, tail], axis=1)
+            new_cache = dict(conv=tail, state=final.astype(x.dtype))
+    else:
+        y, state = ssd_decode_step(decode_cache["state"], xdt[:, 0],
+                                   dA[:, 0], Bv[:, 0], Cv[:, 0])
+        y = y[:, None]
+        new_cache = dict(conv=conv_cache, state=state)
+
+    y = y + xs * bp["D"].astype(xs.dtype)[:, None]
+    y = y.reshape(B, L, di)
+    y = rms_norm(y * jax.nn.silu(z), bp["ln_out"], cfg.norm_eps)
+    return y @ bp["out_proj"], new_cache
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    return dict(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_conv_dim), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), dtype),
+    )

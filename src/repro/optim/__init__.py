@@ -1,0 +1,6 @@
+from repro.optim.optimizers import adam, momentum, sgd  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_schedule,
+    paper_schedule,
+)

@@ -1,0 +1,82 @@
+"""Hand-rolled optimizers (optax is not available offline).
+
+Each optimizer is an (init, update) pair over arbitrary pytrees:
+  state = init(params)
+  new_params, new_state = update(params, grads, state, lr)
+Math runs in f32 regardless of parameter dtype.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _f32(t):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+class Optimizer(NamedTuple):
+    init: callable
+    update: callable
+    name: str
+
+
+def sgd():
+    def init(params):
+        return ()
+
+    def update(params, grads, state, lr):
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(beta=0.9, nesterov=False):
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(params, grads, state, lr):
+        new_m = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            step = jax.tree.map(
+                lambda m, g: beta * m + g.astype(jnp.float32), new_m, grads)
+        else:
+            step = new_m
+        new = jax.tree.map(
+            lambda p, s: (p.astype(jnp.float32) - lr * s).astype(p.dtype),
+            params, step)
+        return new, new_m
+
+    return Optimizer(init, update, "momentum")
+
+
+def adam(b1=0.9, b2=0.999, eps=1e-8):
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return dict(m=z, v=jax.tree.map(jnp.copy, z),
+                    t=jnp.zeros((), jnp.int32))
+
+    def update(params, grads, state, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda p, mm, vv: (p.astype(jnp.float32)
+                               - lr * (mm / bc1)
+                               / (jnp.sqrt(vv / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new, dict(m=m, v=v, t=t)
+
+    return Optimizer(init, update, "adam")

@@ -1,0 +1,32 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paper_schedule(eta0: float):
+    """The paper's local-lr schedule: eta0 / sqrt(t/10 + 1) (Table 6)."""
+    def f(t):
+        return eta0 / jnp.sqrt(jnp.asarray(t, jnp.float32) / 10.0 + 1.0)
+
+    return f
+
+
+def constant_schedule(eta0: float):
+    def f(t):
+        return jnp.full((), eta0, jnp.float32)
+
+    return f
+
+
+def cosine_schedule(eta0: float, total_steps: int, warmup: int = 0,
+                    floor: float = 0.0):
+    def f(t):
+        t = jnp.asarray(t, jnp.float32)
+        warm = eta0 * jnp.clip(t / jnp.maximum(warmup, 1), 0.0, 1.0)
+        frac = jnp.clip((t - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + (eta0 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(t < warmup, warm, cos)
+
+    return f

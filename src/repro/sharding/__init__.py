@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_pspecs,
+    cache_pspecs,
+    client_stack_pspecs,
+    param_pspecs,
+    serve_batch_pspecs,
+)

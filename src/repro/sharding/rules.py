@@ -1,0 +1,205 @@
+"""Logical-axis sharding rules -> PartitionSpec pytrees.
+
+Mesh axes (launch/mesh.py):
+  single pod: ('data', 'model') = (16, 16)
+  multi-pod:  ('pod', 'data', 'model') = (2, 16, 16)
+
+Logical mapping:
+  clients            -> ('pod', 'data')        client-stacked FL state
+  model-parallel dim -> 'model'                heads / d_ff / experts / vocab
+  FSDP dim           -> 'data'                 lora-mode frozen base weights
+  serve batch        -> 'data'                 (falls back to sequence
+  KV-cache sequence  -> 'model' (+'data')       sharding when batch is tiny)
+
+Specs are derived from leaf *path names* against the abstract parameter
+tree, with divisibility checks against the actual mesh sizes; everything
+that cannot be shard-mapped cleanly stays replicated, which is always
+correct (XLA only needs consistent specs, not maximal ones).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _div(n, size):
+    return size > 0 and n % size == 0
+
+
+def _leaf_name(path):
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _in_stack(path):
+    return any(getattr(p, "key", None) == "stack" for p in path)
+
+
+def _base_spec(name, shape, ax):
+    """PartitionSpec for a 'bare' (unstacked) parameter leaf."""
+    md = ax.get("model", 1)
+
+    def m(dim):
+        return "model" if _div(shape[dim], md) else None
+
+    if name in ("embed",):
+        # vocab-parallel when divisible; else shard the embedding dim
+        return P(m(0), None) if _div(shape[0], md) else P(None, m(1))
+    if name in ("unembed",):
+        return P(None, m(1)) if _div(shape[1], md) else P(m(0), None)
+    if name in ("wq", "wk", "wv", "wi", "wi_s", "in_proj", "wq_x", "wk_x",
+                "wv_x"):
+        return P(None, m(1))
+    if name in ("wo", "wd", "wd_s", "out_proj", "wo_x"):
+        return P(m(0), None)
+    if name in ("wi_e",):  # [E, d, 2*eff]
+        if _div(shape[0], md):
+            return P("model", None, None)
+        return P(None, None, m(2))
+    if name in ("wd_e",):  # [E, eff, d]
+        if _div(shape[0], md):
+            return P("model", None, None)
+        return P(None, m(1), None)
+    if name.startswith("b_"):  # lora B: [r, out]
+        return P(None, m(1))
+    # router, norms, lora A, conv, ssm scalars, biases -> replicated
+    return P(*([None] * len(shape)))
+
+
+def _fsdp_augment(spec, shape, ax, min_size=1 << 20):
+    """Add 'data' sharding on the largest still-unsharded dim (frozen base
+    weights in lora mode — ZeRO-3 style)."""
+    if int(np.prod(shape)) < min_size:
+        return spec
+    dd = ax.get("data", 1)
+    best, best_dim = 0, None
+    for i, (s, sp) in enumerate(zip(shape, tuple(spec) + (None,) * len(shape))):
+        if sp is None and _div(s, dd) and s > best:
+            best, best_dim = s, i
+    if best_dim is None:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    parts[best_dim] = "data"
+    return P(*parts)
+
+
+def param_pspecs(cfg, mesh, params_shape, *, fsdp=False, mode="tp"):
+    """Specs for a bare params tree (as from init_params).
+
+    params_shape: jax.eval_shape result for init_params.
+    fsdp: additionally shard big leaves over 'data' (lora frozen base).
+    mode: 'tp' (tensor-parallel blocks, baseline) or 'dp' (replicate block
+    weights over 'model' and let the within-client batch take that axis —
+    the §Perf data-parallel variant; embeddings stay model-sharded).
+    """
+    ax = _axis_sizes(mesh)
+
+    def f(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        core = shape[1:] if _in_stack(path) else shape
+        if mode == "dp" and name not in ("embed", "unembed"):
+            spec = P(*([None] * len(core))) if core else P()
+        else:
+            spec = _base_spec(name, core, ax) if core else P()
+        if fsdp:
+            spec = _fsdp_augment(spec, core, ax)
+        if _in_stack(path):
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def client_stack_pspecs(cfg, mesh, trainable_shape, *, multi_pod=False,
+                        mode="tp"):
+    """Client-stacked trainables: leading client axis over ('pod','data')."""
+    ax = _axis_sizes(mesh)
+    client_axes = ("pod", "data") if (multi_pod and "pod" in ax) else ("data",)
+    base = param_pspecs(cfg, mesh, trainable_shape, mode=mode)
+
+    def add_client(spec_leaf):
+        return P(client_axes, *spec_leaf)
+
+    return jax.tree.map(add_client, base,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspecs(mesh, batches_shape, *, multi_pod=False, mode="tp"):
+    """FL round batches [m, s, b, ...] -> client axis sharded; in 'dp' mode
+    the within-client batch dim additionally takes the 'model' axis."""
+    ax = _axis_sizes(mesh)
+    client_axes = ("pod", "data") if (multi_pod and "pod" in ax) else ("data",)
+    md = ax.get("model", 1)
+
+    def f(leaf):
+        rest = [None] * (len(leaf.shape) - 1)
+        if mode == "dp" and len(leaf.shape) >= 3 and _div(leaf.shape[2], md):
+            rest[1] = "model"  # [m, s, b, ...] -> b over 'model'
+        return P(client_axes, *rest)
+
+    return jax.tree.map(f, batches_shape)
+
+
+def serve_batch_pspecs(mesh, batch_size):
+    """Serving inputs tokens [B,1] / pos [B]."""
+    ax = _axis_sizes(mesh)
+    b_ax = "data" if _div(batch_size, ax.get("data", 1)) else None
+    return P(b_ax, None), P(b_ax)
+
+
+def cache_pspecs(cfg, mesh, cache_shape, batch_size):
+    """Decode caches.
+
+    Batch shards over 'data' when divisible; the cache sequence dim shards
+    over 'model' (context-parallel decode: XLA inserts the softmax-stat
+    all-reduce). For tiny batches (long_500k: B=1) the sequence dim takes
+    both axes instead.
+    """
+    ax = _axis_sizes(mesh)
+    dd, md = ax.get("data", 1), ax.get("model", 1)
+    b_data = _div(batch_size, dd)
+
+    def f(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        stacked = _in_stack(path)
+        core = shape[1:] if stacked else shape  # drop unit axis
+        spec: tuple
+        if name in ("k", "v"):  # [B, alloc, K, hd]
+            alloc = core[1]
+            if b_data:
+                seq_ax = "model" if _div(alloc, md) else None
+                spec = ("data", seq_ax, None, None)
+            else:
+                both = _div(alloc, dd * md)
+                spec = (None, ("data", "model") if both else
+                        ("model" if _div(alloc, md) else None), None, None)
+        elif name == "pos":  # [B, alloc]
+            alloc = core[1]
+            if b_data:
+                spec = ("data", "model" if _div(alloc, md) else None)
+            else:
+                both = _div(alloc, dd * md)
+                spec = (None, ("data", "model") if both else
+                        ("model" if _div(alloc, md) else None))
+        elif name == "state":  # [B, h, p, n]
+            spec = ("data" if b_data else None, None, None, None)
+        elif name == "conv":  # [B, W-1, convdim]
+            spec = ("data" if b_data else None, None, None)
+        elif name == "enc_out":  # [B, Le, d]
+            spec = ("data" if b_data else None, None, None)
+        else:
+            spec = tuple([None] * len(core))
+        if stacked:
+            spec = (None,) + tuple(spec)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)

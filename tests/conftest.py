@@ -1,0 +1,14 @@
+import os
+
+# Smoke tests and benches must see ONE device; only launch/dryrun.py forces
+# the 512-device placeholder count (and only in its own process).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "tests must not inherit the dry-run device-count override"
+
+from hypothesis import HealthCheck, settings  # noqa: E402
+
+settings.register_profile(
+    "ci", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("ci")

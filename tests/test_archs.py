@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests (deliverable f): instantiate a REDUCED
+variant of each assigned family (<=2 pattern units, d_model<=256,
+<=4 experts) and run one forward + one FedAWE train round on CPU, asserting
+output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core import AvailabilityCfg, FLConfig, init_fl_state, make_round_fn
+from repro.models import (
+    init_cache,
+    init_params,
+    lm_loss,
+    merge_trainable,
+    reduced,
+    serve_step,
+    split_trainable,
+)
+
+
+def _batch(rng, cfg, B=2, L=16):
+    toks = jax.random.randint(rng, (B, L), 0, cfg.vocab)
+    b = dict(tokens=toks, labels=toks, mask=jnp.ones((B, L)))
+    if cfg.frontend != "none":
+        F = cfg.frontend_len
+        b["embeds"] = jax.random.normal(rng, (B, F, cfg.d_model),
+                                        dtype=jnp.dtype(cfg.dtype))
+        b["mask"] = b["mask"].at[:, :F].set(0.0)
+    if cfg.enc_dec:
+        b["enc_embeds"] = jax.random.normal(
+            rng, (B, cfg.enc_len, cfg.d_model), dtype=jnp.dtype(cfg.dtype))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_and_loss(arch):
+    cfg = reduced(get_config(arch))
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    batch = _batch(rng, cfg)
+    loss = jax.jit(lambda p, b: lm_loss(p, cfg, b))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss {loss}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_fedawe_round(arch):
+    """One FedAWE round with m=4 clients on the reduced config."""
+    cfg = reduced(get_config(arch))
+    rng = jax.random.PRNGKey(1)
+    params = init_params(rng, cfg)
+    trainable, frozen = split_trainable(params, cfg)
+
+    m, s, B, L = 4, 2, 2, 16
+    fl = FLConfig(m=m, s=s, eta_l=0.01, eta_g=1.0, strategy="fedawe",
+                  lr_schedule=False, grad_clip=0.0)
+
+    def loss_fn(tr, fz, batch, key):
+        return lm_loss(merge_trainable(tr, fz, cfg), cfg, batch)
+
+    av = AvailabilityCfg(kind="stationary")
+    base_p = jnp.full((m,), 0.8)
+    state = init_fl_state(rng, fl, trainable)
+    round_fn = jax.jit(make_round_fn(fl, loss_fn, frozen, av, base_p))
+
+    one = _batch(rng, cfg, B=B, L=L)
+    batches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None, None], (m, s) + x.shape).copy(), one)
+    state, metrics = round_fn(state, batches)
+    assert jnp.isfinite(metrics["loss"]), f"{arch}: {metrics}"
+    for leaf in jax.tree.leaves(state.global_tr):
+        assert jnp.all(jnp.isfinite(leaf)), f"{arch}: non-finite params"
+    assert state.t == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_serve_step(arch):
+    cfg = reduced(get_config(arch))
+    rng = jax.random.PRNGKey(2)
+    params = init_params(rng, cfg)
+    B, S = 2, 32
+    cache = init_cache(cfg, B, S, dtype=jnp.float32)
+    if cfg.enc_dec:
+        from repro.models.model import encode
+        enc = jax.random.normal(rng, (B, cfg.enc_len, cfg.d_model))
+        cache["enc_out"] = encode(params, cfg, enc)
+    toks = jax.random.randint(rng, (B, 1), 0, cfg.vocab)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    logits, new_cache = jax.jit(
+        lambda p, c, t, q: serve_step(p, cfg, c, t, q))(params, cache, toks,
+                                                        pos)
+    assert logits.shape == (B, cfg.vocab)
+    assert jnp.all(jnp.isfinite(logits)), arch
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)

@@ -1,0 +1,85 @@
+"""Auxiliary/imaginary sequence (Definition 1, Proposition 4).
+
+With deterministic quadratic objectives the true gradients nabla F_i are
+known in closed form, so z_i^t can be constructed exactly and the coupling
+invariants checked against the engine's real iterates:
+  * z_i^t == x_i^t whenever i in A^{t-1}            (Prop. 4)
+  * x_i^t - z_i^t == eta_l*eta_g*s*(t-tau_i(t)-1) * nabla F_i(x_i^{tau+1})
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AvailabilityCfg, FLConfig, init_fl_state, make_round_fn
+
+
+def test_auxiliary_sequence_coupling():
+    m, s, eta_l, eta_g = 4, 3, 0.02, 1.1
+    u = jnp.array([0.0, 10.0, -5.0, 20.0])
+
+    def loss_fn(tr, frozen, batch, rng):
+        return 0.5 * (tr["x"] - batch["u"]) ** 2  # grad = x - u
+
+    cfg = FLConfig(m=m, s=s, eta_l=eta_l, eta_g=eta_g, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0)
+    av = AvailabilityCfg(kind="stationary")
+    base_p = jnp.array([0.9, 0.5, 0.3, 0.7])
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, {"x": jnp.zeros(())})
+    rf = jax.jit(make_round_fn(cfg, loss_fn, {}, av, base_p))
+    batches = {"u": jnp.broadcast_to(u[:, None], (m, s))}
+
+    T = 40
+    xs = [np.asarray(state.clients_tr["x"])]           # x_i^t trajectory
+    taus = [np.asarray(state.tau)]
+    masks = []
+    for t in range(T):
+        prev_tau = np.asarray(state.tau)
+        state, _ = rf(state, batches)
+        new_tau = np.asarray(state.tau)
+        masks.append((new_tau == t).astype(np.float64))  # active iff tau set
+        xs.append(np.asarray(state.clients_tr["x"]))
+        taus.append(new_tau)
+
+    u_np = np.asarray(u)
+    # z_i^t = x_i^t - eta_l*eta_g*s*(t - tau_i(t) - 1) * grad F_i(x_i^{tau+1})
+    for t in range(1, T):
+        x_t = xs[t]
+        tau_t = taus[t]
+        for i in range(m):
+            # x_i^{tau_i(t)+1} == current x_i (frozen since last active)
+            grad = x_t[i] - u_np[i]
+            z = x_t[i] - eta_l * eta_g * s * (t - tau_t[i] - 1) * grad
+            if masks[t - 1][i]:  # i in A^{t-1} -> tau_i(t) = t-1 -> z == x
+                np.testing.assert_allclose(z, x_t[i], rtol=1e-6, atol=1e-6)
+            else:
+                gap = t - tau_t[i] - 1
+                np.testing.assert_allclose(
+                    x_t[i] - z, eta_l * eta_g * s * gap * grad,
+                    rtol=1e-6, atol=1e-6)
+
+
+def test_inactive_clients_frozen():
+    """x_i^{t+1} == x_i^t for i not in A^t (Algorithm 1 lines 19-21)."""
+    m = 5
+
+    def loss_fn(tr, frozen, batch, rng):
+        return 0.5 * jnp.sum((tr["x"] - batch["u"]) ** 2)
+
+    cfg = FLConfig(m=m, s=2, eta_l=0.05, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0)
+    av = AvailabilityCfg(kind="stationary")
+    base_p = jnp.full((m,), 0.5)
+    state = init_fl_state(jax.random.PRNGKey(1), cfg,
+                          {"x": jnp.zeros((3,))})
+    rf = jax.jit(make_round_fn(cfg, loss_fn, {}, av, base_p))
+    batches = {"u": jnp.ones((m, 2, 3))}
+    for t in range(20):
+        before = np.asarray(state.clients_tr["x"])
+        tau_before = np.asarray(state.tau)
+        state, _ = rf(state, batches)
+        tau_after = np.asarray(state.tau)
+        after = np.asarray(state.clients_tr["x"])
+        inactive = tau_after != t
+        np.testing.assert_allclose(after[inactive], before[inactive])
+        np.testing.assert_array_equal(tau_after[inactive],
+                                      tau_before[inactive])

@@ -1,0 +1,21 @@
+"""Bonus (beyond-pool) architectures: reduced smoke + registry hygiene."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.models import init_params, lm_loss, reduced
+
+
+def test_assigned_pool_is_exactly_ten():
+    assert len(ARCHS) == 10
+    assert "llama3-8b" not in ARCHS and "tiny" not in ARCHS
+
+
+def test_llama3_reduced_smoke():
+    cfg = reduced(get_config("llama3-8b"))
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    toks = jax.random.randint(rng, (2, 16), 0, cfg.vocab)
+    batch = dict(tokens=toks, labels=toks, mask=jnp.ones((2, 16)))
+    loss = jax.jit(lambda p, b: lm_loss(p, cfg, b))(params, batch)
+    assert jnp.isfinite(loss)

@@ -1,0 +1,60 @@
+"""FedAWE-M (beyond-paper server-momentum extension): beta=0 recovers
+FedAWE exactly; with momentum it still solves Example 1 unbiasedly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                        make_round_fn)
+from repro.core.strategies import get_strategy
+
+
+def _quad_run(strategy, T=800, beta=None):
+    u = jnp.array([0.0, 100.0])
+    base_p = jnp.array([0.9, 0.3])
+
+    def loss_fn(tr, frozen, batch, rng):
+        return 0.5 * (tr["x"] - batch["u"]) ** 2
+
+    cfg = FLConfig(m=2, s=2, eta_l=0.05, eta_g=1.0, strategy=strategy,
+                   lr_schedule=False, grad_clip=0.0)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, {"x": jnp.zeros(())})
+    if beta is not None:
+        state = state._replace(extra=dict(v=state.extra["v"],
+                                          beta=jnp.float32(beta)))
+    rf = jax.jit(make_round_fn(cfg, loss_fn, {},
+                               AvailabilityCfg(kind="stationary"), base_p))
+    batches = {"u": jnp.broadcast_to(u[:, None], (2, cfg.s))}
+    xs = []
+    for t in range(T):
+        state, _ = rf(state, batches)
+        if t > T // 2:
+            xs.append(float(state.global_tr["x"]))
+    return float(np.mean(xs))
+
+
+def test_beta_zero_equals_fedawe():
+    x_awe = _quad_run("fedawe", T=300)
+    x_m0 = _quad_run("fedawe_m", T=300, beta=0.0)
+    assert x_m0 == pytest.approx(x_awe, abs=1e-4)
+
+
+def test_momentum_stays_unbiased():
+    x_m = _quad_run("fedawe_m", T=800, beta=0.5)
+    assert abs(x_m - 50.0) < 15.0, x_m
+
+
+def test_empty_round_decays_velocity():
+    strat = get_strategy("fedawe_m")
+    extra = strat.init_extra({"x": jnp.ones(2)}, 3)
+    extra = dict(v=jax.tree.map(lambda x: x + 1.0, extra["v"]),
+                 beta=jnp.float32(0.5))
+    g, _, _, new_extra = strat.aggregate(
+        global_tr={"x": jnp.ones(2)},
+        clients_tr={"x": jnp.ones((3, 2))},
+        G={"x": jnp.zeros((3, 2))},
+        mask=jnp.zeros(3), t=jnp.asarray(1), tau=jnp.full((3,), -1),
+        probs=None, extra=extra, eta_g=1.0)
+    np.testing.assert_allclose(np.asarray(g["x"]), 1.0)       # unchanged
+    np.testing.assert_allclose(np.asarray(new_extra["v"]["x"]), 0.5)  # beta*v

@@ -1,0 +1,149 @@
+"""Paper-math validation: Proposition 1, Lemma 2, Example 1, and the
+FedAvg-equivalence sanity of FedAWE under full participation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                        make_round_fn)
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1: sum_{t<R} 1{i in A^t} (t - tau_i(t)) == R when active at R-1
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.booleans(), min_size=1, max_size=200))
+def test_proposition1_echo_weights(avail):
+    tau = -1
+    total = 0
+    for t, a in enumerate(avail):
+        if a:
+            total += t - tau
+            tau = t
+    R = len(avail)
+    if avail[-1]:
+        assert total == R
+    else:
+        # between activations the cumulated echo equals (last active round+1)
+        assert total == tau + 1
+
+
+@given(st.integers(1, 30), st.integers(0, 2 ** 31 - 1))
+def test_proposition1_via_engine(T, seed):
+    """Replay the engine's tau updates and check the echo-weight identity."""
+    rng = np.random.default_rng(seed)
+    avail = rng.random(T) < 0.5
+    tau, total = -1, 0
+    for t in range(T):
+        if avail[t]:
+            total += t - tau
+            tau = t
+    if avail[-1]:
+        assert total == T
+
+
+# ---------------------------------------------------------------------------
+# Lemma 2: E[t - tau] <= 1/delta ; E[(t-tau)^2] <= 2/delta^2
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("delta", [0.2, 0.5, 0.9])
+def test_lemma2_unavailability_moments(delta):
+    rng = np.random.default_rng(0)
+    T, n = 400, 400
+    # non-stationary probabilities >= delta (sine above the floor)
+    ts = np.arange(T)
+    p_t = delta + (1 - delta) * 0.5 * (1 + np.sin(0.3 * ts))
+    gaps, gaps2 = [], []
+    for _ in range(n):
+        avail = rng.random(T) < p_t
+        tau = -1
+        for t in range(T):
+            gaps.append(t - tau)
+            gaps2.append((t - tau) ** 2)
+            if avail[t]:
+                tau = t
+    # 3-sigma slack on the Monte-Carlo estimate
+    assert np.mean(gaps) <= 1 / delta * 1.05 + 0.05
+    assert np.mean(gaps2) <= 2 / delta ** 2 * 1.10 + 0.1
+
+
+# ---------------------------------------------------------------------------
+# Example 1: heterogeneous p biases FedAvg; FedAWE stays near x* = 50
+# ---------------------------------------------------------------------------
+
+def _run_quadratic(strategy, T=1500, avg_last=600, eta=0.05):
+    u = jnp.array([0.0, 100.0])
+    base_p = jnp.array([0.9, 0.3])
+    av = AvailabilityCfg(kind="stationary")
+
+    def loss_fn(tr, frozen, batch, rng):
+        return 0.5 * (tr["x"] - batch["u"]) ** 2
+
+    cfg = FLConfig(m=2, s=2, eta_l=eta, eta_g=1.0, strategy=strategy,
+                   lr_schedule=False, grad_clip=0.0)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, {"x": jnp.zeros(())})
+    rf = jax.jit(make_round_fn(cfg, loss_fn, {}, av, base_p))
+    batches = {"u": jnp.broadcast_to(u[:, None], (2, cfg.s))}
+    xs = []
+    for t in range(T):
+        state, _ = rf(state, batches)
+        if t >= T - avg_last:
+            xs.append(float(state.global_tr["x"]))
+    return float(np.mean(xs))
+
+
+def test_example1_fedavg_is_biased():
+    x = _run_quadratic("fedavg_active")
+    assert abs(x - 50.0) > 15.0, f"FedAvg unexpectedly unbiased: {x}"
+
+
+def test_example1_fedawe_corrects_bias():
+    x_awe = _run_quadratic("fedawe")
+    x_avg = _run_quadratic("fedavg_active")
+    assert abs(x_awe - 50.0) < abs(x_avg - 50.0) - 10.0, (x_awe, x_avg)
+    assert abs(x_awe - 50.0) < 12.0, x_awe
+
+
+def test_fedawe_equals_fedavg_under_full_participation():
+    """With p_i = 1 every round, echo factors are all 1 and implicit
+    gossiping reduces to plain FedAvg."""
+    u = jnp.array([10.0, 30.0, -20.0])
+
+    def loss_fn(tr, frozen, batch, rng):
+        return 0.5 * (tr["x"] - batch["u"]) ** 2
+
+    base_p = jnp.ones((3,))
+    av = AvailabilityCfg(kind="stationary")
+    outs = {}
+    for strat in ("fedawe", "fedavg_active"):
+        cfg = FLConfig(m=3, s=3, eta_l=0.1, eta_g=1.0, strategy=strat,
+                       lr_schedule=False, grad_clip=0.0)
+        state = init_fl_state(jax.random.PRNGKey(0), cfg,
+                              {"x": jnp.zeros(())})
+        rf = jax.jit(make_round_fn(cfg, loss_fn, {}, av, base_p))
+        batches = {"u": jnp.broadcast_to(u[:, None], (3, cfg.s))}
+        for _ in range(50):
+            state, _ = rf(state, batches)
+        outs[strat] = float(state.global_tr["x"])
+    assert outs["fedawe"] == pytest.approx(outs["fedavg_active"], abs=1e-4)
+
+
+def test_empty_round_keeps_global():
+    def loss_fn(tr, frozen, batch, rng):
+        return 0.5 * tr["x"] ** 2
+
+    base_p = jnp.zeros((4,))  # nobody ever shows up
+    av = AvailabilityCfg(kind="stationary")
+    cfg = FLConfig(m=4, s=1, eta_l=0.1, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, {"x": jnp.ones(())})
+    rf = jax.jit(make_round_fn(cfg, loss_fn, {}, av, base_p))
+    batches = {"u": jnp.zeros((4, 1))}
+    for _ in range(5):
+        state, m = rf(state, batches)
+        assert float(m["n_active"]) == 0.0
+    assert float(state.global_tr["x"]) == pytest.approx(1.0)
+    assert jnp.all(state.tau == -1)

@@ -1,0 +1,63 @@
+"""SSD intra-chunk Pallas kernel: shape/dtype sweep vs ref.py oracle and the
+naive recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
+from repro.kernels.ssd_chunk.ops import ssd_chunked_pallas
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+from repro.models.ssm import ssd_recurrence_ref
+
+
+def _inputs(seed, b, l, h, p, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)).astype(np.float32))
+    dt = jnp.abs(jnp.asarray(
+        rng.normal(size=(b, l, h)).astype(np.float32))) * 0.3 + 0.01
+    A = -jnp.abs(jnp.asarray(
+        rng.normal(size=(h,)).astype(np.float32))) - 0.1
+    B_ = jnp.asarray(rng.normal(size=(b, l, h, n)).astype(np.float32))
+    C_ = jnp.asarray(rng.normal(size=(b, l, h, n)).astype(np.float32))
+    return x * dt[..., None], dt * A, B_, C_
+
+
+def _grp(v, b, c, chunk, h, feat):
+    v = v.reshape((b, c, chunk, h) + ((feat,) if feat else ()))
+    return v.transpose((0, 3, 1, 2, 4) if feat else (0, 3, 1, 2))
+
+
+@pytest.mark.parametrize("b,l,h,p,n,chunk", [
+    (1, 8, 1, 4, 4, 4), (2, 32, 3, 8, 4, 8), (1, 64, 2, 16, 8, 16),
+    (2, 24, 2, 8, 16, 12),
+])
+def test_ssd_chunk_kernel_vs_ref(b, l, h, p, n, chunk):
+    xdt, dA, B_, C_ = _inputs(l + h, b, l, h, p, n)
+    c = l // chunk
+    args = (_grp(xdt, b, c, chunk, h, p), _grp(dA, b, c, chunk, h, 0),
+            _grp(B_, b, c, chunk, h, n), _grp(C_, b, c, chunk, h, n))
+    yk, sk, dk = ssd_chunk_pallas(*args)
+    yr, sr, dr = ssd_chunk_ref(*args)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 5e-2)])
+def test_ssd_pipeline_vs_recurrence(dtype, tol):
+    xdt, dA, B_, C_ = _inputs(0, 2, 32, 2, 8, 4)
+    xdt = xdt.astype(dtype)
+    B_ = B_.astype(dtype)
+    C_ = C_.astype(dtype)
+    y1, f1 = ssd_chunked_pallas(xdt, dA, B_, C_, 8)
+    y2, f2 = ssd_recurrence_ref(xdt, dA, B_, C_)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(f1, np.float32),
+                               np.asarray(f2, np.float32), rtol=tol,
+                               atol=tol)

@@ -1,0 +1,76 @@
+"""Implicit gossiping: W^{(t)} (eq. 4) properties, engine equivalence, and
+the Lemma 4 spectral bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core import FLConfig, init_fl_state
+from repro.core.mixing import (is_doubly_stochastic, lemma4_bound,
+                               mixing_matrix, rho_monte_carlo)
+from repro.core.strategies import get_strategy
+from repro.core import tree_util as tu
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=40))
+def test_mixing_matrix_doubly_stochastic(mask):
+    W = mixing_matrix(np.array(mask, dtype=float))
+    assert is_doubly_stochastic(W)
+
+
+@given(st.lists(st.booleans(), min_size=2, max_size=12),
+       st.integers(0, 2 ** 31 - 1))
+def test_fedawe_round_equals_W_multiplication(mask, seed):
+    """One FedAWE aggregation == x^{t+1} = X† W^{(t)} (eq. 4 semantics):
+    active clients move to the gossip mean of the echoed models, inactive
+    clients keep their state."""
+    m = len(mask)
+    rng = np.random.default_rng(seed)
+    d = 5
+    X = rng.normal(size=(m, d)).astype(np.float32)        # x_i^t
+    G = rng.normal(size=(m, d)).astype(np.float32) * 0.1  # innovations
+    tau = rng.integers(-1, 3, size=m).astype(np.int32)
+    t = jnp.asarray(4, jnp.int32)
+    maskf = jnp.asarray(np.array(mask, dtype=np.float32))
+    eta_g = 1.3
+
+    strat = get_strategy("fedawe")
+    new_global, new_clients, new_tau, _ = strat.aggregate(
+        global_tr={"w": jnp.zeros(d)}, clients_tr={"w": jnp.asarray(X)},
+        G={"w": jnp.asarray(G)}, mask=maskf, t=t, tau=jnp.asarray(tau),
+        probs=None, extra=(), eta_g=eta_g)
+
+    # reference: explicit W application to the echoed matrix
+    echo = (4 - tau).astype(np.float32)
+    Xd = X.copy()
+    for i in range(m):
+        if mask[i]:
+            Xd[i] = X[i] - eta_g * echo[i] * G[i]
+    W = mixing_matrix(np.array(mask, dtype=float))
+    ref = W.T @ Xd  # row i of result = sum_j W_ji x_j ; W symmetric here
+    np.testing.assert_allclose(np.asarray(new_clients["w"]), ref, rtol=1e-5,
+                               atol=1e-5)
+    if any(mask):
+        active = [i for i in range(m) if mask[i]]
+        np.testing.assert_allclose(np.asarray(new_global["w"]),
+                                   Xd[active].mean(0), rtol=1e-5, atol=1e-5)
+        assert all(int(new_tau[i]) == 4 for i in active)
+
+
+@pytest.mark.parametrize("delta,m", [(0.3, 5), (0.6, 8)])
+def test_lemma4_rho_bound(delta, m):
+    rho, _ = rho_monte_carlo(lambda t: np.full(m, delta), m, n_samples=3000)
+    bound = lemma4_bound(delta, m)
+    assert rho <= bound + 0.02, (rho, bound)
+    assert rho < 1.0
+
+
+def test_tree_masked_mean_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(6, 3, 2)).astype(np.float32)
+    mask = np.array([1, 0, 1, 1, 0, 0], np.float32)
+    out = tu.tree_masked_mean({"a": jnp.asarray(x)}, jnp.asarray(mask))
+    ref = x[mask > 0].mean(0)
+    np.testing.assert_allclose(np.asarray(out["a"]), ref, rtol=1e-6)

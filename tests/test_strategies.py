@@ -1,0 +1,117 @@
+"""Baseline strategies: one-round math and bias-correction behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                        make_round_fn)
+from repro.core.strategies import REGISTRY, get_strategy
+from repro.core import tree_util as tu
+
+
+ALL = sorted(REGISTRY)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_one_round_runs_and_is_finite(name):
+    def loss_fn(tr, frozen, batch, rng):
+        return 0.5 * jnp.sum((tr["x"] - batch["u"]) ** 2)
+
+    cfg = FLConfig(m=6, s=2, eta_l=0.05, strategy=name, lr_schedule=False,
+                   grad_clip=0.0)
+    av = AvailabilityCfg(kind="sine", gamma=0.3)
+    base_p = jnp.full((6,), 0.6)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, {"x": jnp.zeros((3,))})
+    rf = jax.jit(make_round_fn(cfg, loss_fn, {}, av, base_p))
+    batches = {"u": jnp.ones((6, 2, 3))}
+    for _ in range(5):
+        state, m = rf(state, batches)
+        assert jnp.isfinite(m["loss"])
+    assert jnp.all(jnp.isfinite(state.global_tr["x"]))
+    assert int(state.t) == 5
+
+
+def test_mifa_memory_updates_only_active():
+    strat = get_strategy("mifa")
+    m, d = 4, 3
+    extra = strat.init_extra({"w": jnp.zeros((d,))}, m)
+    G = {"w": jnp.ones((m, d))}
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    _, _, _, new_extra = strat.aggregate(
+        global_tr={"w": jnp.zeros((d,))}, clients_tr=None, G=G, mask=mask,
+        t=jnp.asarray(0), tau=jnp.full((m,), -1), probs=None, extra=extra,
+        eta_g=1.0)
+    mem = np.asarray(new_extra["mem"]["w"])
+    np.testing.assert_allclose(mem[0], 1.0)
+    np.testing.assert_allclose(mem[1], 0.0)  # inactive keeps old (zero) mem
+
+
+def test_fedvarp_uses_memory_for_inactive():
+    strat = get_strategy("fedvarp")
+    m, d = 2, 1
+    extra = strat.init_extra({"w": jnp.zeros((d,))}, m)
+    # round 0: both active, G = [1, 3]
+    G0 = {"w": jnp.asarray([[1.0], [3.0]])}
+    g, _, _, extra = strat.aggregate(
+        global_tr={"w": jnp.zeros((d,))}, clients_tr=None, G=G0,
+        mask=jnp.asarray([1.0, 1.0]), t=jnp.asarray(0),
+        tau=jnp.full((m,), -1), probs=None, extra=extra, eta_g=1.0)
+    np.testing.assert_allclose(np.asarray(g["w"]), [-2.0])  # mean update
+    # round 1: only client 0 active with same G; y1 memory covers client 1
+    G1 = {"w": jnp.asarray([[1.0], [99.0]])}  # 99 ignored (inactive)
+    g, _, _, extra = strat.aggregate(
+        global_tr=g, clients_tr=None, G=G1,
+        mask=jnp.asarray([1.0, 0.0]), t=jnp.asarray(1),
+        tau=jnp.asarray([0, 0]), probs=None, extra=extra, eta_g=1.0)
+    # update = (G0_0 - y_0) + mean(y) = (1-1) + 2 = 2 -> g = -2 - 2 = -4
+    np.testing.assert_allclose(np.asarray(g["w"]), [-4.0])
+    np.testing.assert_allclose(np.asarray(extra["y"]["w"]),
+                               [[1.0], [3.0]])
+
+
+def test_known_p_weighting():
+    strat = get_strategy("fedavg_known_p")
+    m, d = 2, 1
+    G = {"w": jnp.asarray([[1.0], [1.0]])}
+    probs = jnp.asarray([0.5, 0.25])
+    g, _, _, _ = strat.aggregate(
+        global_tr={"w": jnp.zeros((d,))}, clients_tr=None, G=G,
+        mask=jnp.asarray([1.0, 1.0]), t=jnp.asarray(0),
+        tau=jnp.full((m,), -1), probs=probs, extra=(), eta_g=1.0)
+    # update = (1/m) * (G0/p0 + G1/p1) = (2 + 4)/2 = 3
+    np.testing.assert_allclose(np.asarray(g["w"]), [-3.0])
+
+
+def test_fedau_interval_estimation_converges():
+    """FedAU's interval estimate approaches 1/p for stationary clients."""
+    strat = get_strategy("fedau")
+    m = 2
+    p = np.array([0.5, 0.25])
+    extra = strat.init_extra({"w": jnp.zeros(1)}, m)
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.zeros(1)}
+    for t in range(600):
+        mask = jnp.asarray((rng.random(m) < p).astype(np.float32))
+        g, _, _, extra = strat.aggregate(
+            global_tr=g, clients_tr=None, G={"w": jnp.zeros((m, 1))},
+            mask=mask, t=jnp.asarray(t), tau=jnp.full((m,), -1), probs=None,
+            extra=extra, eta_g=1.0)
+    om = np.asarray(extra["omega"])
+    np.testing.assert_allclose(om, 1.0 / p, rtol=0.2)
+
+
+def test_stateless_strategies_broadcast_global():
+    def loss_fn(tr, frozen, batch, rng):
+        return 0.5 * jnp.sum((tr["x"] - batch["u"]) ** 2)
+
+    cfg = FLConfig(m=4, s=1, eta_l=0.1, strategy="fedavg_active",
+                   lr_schedule=False, grad_clip=0.0)
+    av = AvailabilityCfg(kind="stationary")
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, {"x": jnp.zeros((2,))})
+    rf = jax.jit(make_round_fn(cfg, loss_fn, {}, av, jnp.full((4,), 0.7)))
+    state, _ = rf(state, {"u": jnp.ones((4, 1, 2))})
+    # all client rows equal the global after a stateless round
+    cl = np.asarray(state.clients_tr["x"])
+    for i in range(4):
+        np.testing.assert_allclose(cl[i], np.asarray(state.global_tr["x"]))

@@ -1,0 +1,170 @@
+"""Substrate tests: availability processes, data pipeline, optimizers,
+checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.availability import (AvailabilityCfg, availability_trace,
+                                     base_probs, probs_at)
+from repro.data import FederatedDataset, dirichlet_partition, \
+    make_image_classification, make_lm_tokens
+from repro.optim import adam, momentum, sgd
+
+
+# ---------------------------------------------------------------------------
+# availability
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["stationary", "staircase", "sine",
+                                  "interleaved_sine"])
+def test_probs_in_unit_interval(kind):
+    cfg = AvailabilityCfg(kind=kind, gamma=0.3)
+    rng = jax.random.PRNGKey(0)
+    base_p, _ = base_probs(rng, 50)
+    for t in range(0, 60, 7):
+        p = probs_at(cfg, base_p, t)
+        assert jnp.all(p >= 0.0) and jnp.all(p <= 1.0)
+
+
+def test_interleaved_sine_reaches_zero():
+    cfg = AvailabilityCfg(kind="interleaved_sine", gamma=0.3, cutoff=0.1)
+    base_p = jnp.full((10,), 0.12)
+    zeros = 0
+    for t in range(40):
+        p = probs_at(cfg, base_p, t)
+        zeros += int(jnp.sum(p == 0.0))
+    assert zeros > 0  # Assumption 1 violated by design (paper Section 7)
+
+
+def test_availability_trace_statistics():
+    cfg = AvailabilityCfg(kind="stationary")
+    base_p = jnp.asarray(np.linspace(0.2, 0.9, 20).astype(np.float32))
+    masks = availability_trace(jax.random.PRNGKey(0), cfg, base_p, 800)
+    emp = np.asarray(masks.mean(axis=0))
+    np.testing.assert_allclose(emp, np.asarray(base_p), atol=0.08)
+
+
+def test_markov_trace_has_persistence():
+    cfg = AvailabilityCfg(kind="markov", markov_up=0.1, markov_down=0.1)
+    base_p = jnp.full((8,), 0.5)
+    masks = np.asarray(availability_trace(jax.random.PRNGKey(1), cfg,
+                                          base_p, 500))
+    # autocorrelation of a sticky chain must exceed i.i.d. (≈0)
+    x = masks[:-1].ravel()
+    y = masks[1:].ravel()
+    corr = np.corrcoef(x, y)[0, 1]
+    assert corr > 0.3
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_partition_covers_all_clients():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 5000)
+    idx, nu = dirichlet_partition(rng, labels, 32, alpha=0.1,
+                                  min_per_client=8)
+    assert len(idx) == 32
+    assert all(len(i) >= 8 for i in idx)
+    assert nu.shape == (32, 10)
+    np.testing.assert_allclose(nu.sum(1), 1.0, atol=1e-6)
+    # heterogeneity: with alpha=0.1 most clients are label-concentrated
+    assert np.mean(nu.max(axis=1)) > 0.5
+
+
+def test_dirichlet_partition_deterministic():
+    labels = np.random.default_rng(1).integers(0, 10, 2000)
+    a, _ = dirichlet_partition(np.random.default_rng(7), labels, 8)
+    b, _ = dirichlet_partition(np.random.default_rng(7), labels, 8)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_federated_round_batches_shapes():
+    task = make_image_classification(seed=0, n=2000, shape=(8, 8, 1))
+    rng = np.random.default_rng(0)
+    idx, _ = dirichlet_partition(rng, task.labels, 16, min_per_client=4)
+    ds = FederatedDataset(dict(images=task.images, labels=task.labels), idx)
+    b = ds.round_batches(0, s=3, b=8)
+    assert b["images"].shape == (16, 3, 8, 8, 8, 1)
+    assert b["labels"].shape == (16, 3, 8)
+
+
+def test_lm_tokens_markov_structure():
+    lm = make_lm_tokens(seed=0, n_seq=256, seq_len=32, vocab=31)
+    assert lm.tokens.shape == (256, 33)
+    assert lm.tokens.min() >= 0 and lm.tokens.max() < 31
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def test_sgd_matches_numpy():
+    opt = sgd()
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.5, -1.0])}
+    st_ = opt.init(p)
+    new, _ = opt.update(p, g, st_, 0.1)
+    np.testing.assert_allclose(np.asarray(new["w"]), [0.95, 2.1], rtol=1e-6)
+
+
+def test_momentum_matches_numpy():
+    opt = momentum(beta=0.9)
+    p = {"w": jnp.asarray([1.0])}
+    g = {"w": jnp.asarray([1.0])}
+    s = opt.init(p)
+    p, s = opt.update(p, g, s, 0.1)     # m=1.0, p=0.9
+    p, s = opt.update(p, g, s, 0.1)     # m=1.9, p=0.9-0.19=0.71
+    np.testing.assert_allclose(np.asarray(p["w"]), [0.71], rtol=1e-6)
+
+
+def test_adam_step_math():
+    opt = adam(b1=0.9, b2=0.999, eps=1e-8)
+    p = {"w": jnp.asarray([0.0])}
+    g = {"w": jnp.asarray([2.0])}
+    s = opt.init(p)
+    p1, s = opt.update(p, g, s, 0.1)
+    # first step of adam moves by ~ -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(p1["w"]), [-0.1], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpointing import load_pytree, save_pytree
+
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32),
+                  "d": jnp.asarray(2.5, jnp.bfloat16)}}
+    path = str(tmp_path / "ckpt")
+    save_pytree(path, tree)
+    restored = load_pytree(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_fl_state_checkpoint_roundtrip(tmp_path):
+    from repro.checkpointing import restore_fl_state, save_fl_state
+    from repro.core import FLConfig, init_fl_state
+
+    cfg = FLConfig(m=4, s=1, strategy="fedau")
+    state = init_fl_state(jax.random.PRNGKey(0), cfg,
+                          {"w": jnp.ones((3, 2))})
+    path = str(tmp_path / "fl")
+    save_fl_state(path, state)
+    template = init_fl_state(jax.random.PRNGKey(1), cfg,
+                             {"w": jnp.zeros((3, 2))})
+    restored = restore_fl_state(path, template)
+    np.testing.assert_allclose(np.asarray(restored.global_tr["w"]),
+                               np.asarray(state.global_tr["w"]))
+    assert int(restored.t) == int(state.t)

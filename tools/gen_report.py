@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md dry-run / roofline tables from
+results/dryrun.json (+ results/perf.json). Usage:
+    PYTHONPATH=src python tools/gen_report.py > results/tables.md
+"""
+import json
+import os
+import sys
+
+
+def fmt_b(x):
+    for unit, s in ((1e12, "TB"), (1e9, "GB"), (1e6, "MB"), (1e3, "KB")):
+        if abs(x) >= unit:
+            return f"{x/unit:.2f}{s}"
+    return f"{x:.0f}B"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | lower+compile s | HLO colls (trip-corr) "
+          "| temp bytes/dev | args bytes/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED | | | |")
+            continue
+        mem = r.get("memory", {})
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r.get('lower_s',0)}+{r.get('compile_s',0)} "
+              f"| {fmt_b(r['collectives']['total'])} ({r['collectives']['count']} ops) "
+              f"| {fmt_b(mem.get('temp_size_in_bytes',0))} "
+              f"| {fmt_b(mem.get('argument_size_in_bytes',0))} |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | mesh | compute s | memory s | collective s "
+          "| dominant | MODEL_FLOPS/HLO |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+              f"| {rl['collective_s']:.4f} | {rl['dominant'][:-2]} "
+              f"| {r.get('useful_flops_ratio', 0):.2f} |")
+
+
+def perf_table(recs):
+    print("| arch | shape | variant | compute s | collective s (HLO) "
+          "| coll bytes/dev | temp/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                         r.get("variant", ""))):
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} "
+                  f"| {r.get('variant')} | FAILED: {r.get('error','')[:60]} | | | |")
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        print(f"| {r['arch']} | {r['shape']} | {r.get('variant')} "
+              f"| {rl['compute_s']:.3f} | {rl['collective_s']:.3f} "
+              f"| {fmt_b(r['collectives']['total'])} "
+              f"| {fmt_b(mem.get('temp_size_in_bytes',0))} |")
+
+
+def main():
+    with open("results/dryrun.json") as f:
+        recs = json.load(f)
+    print("## Generated: §Dry-run table\n")
+    dryrun_table(recs)
+    print("\n## Generated: §Roofline table (single-pod 16x16)\n")
+    roofline_table([r for r in recs if r["mesh"] == "single"])
+    print("\n## Generated: §Roofline table (multi-pod 2x16x16)\n")
+    roofline_table([r for r in recs if r["mesh"] == "multi"])
+    if os.path.exists("results/perf.json"):
+        with open("results/perf.json") as f:
+            perf = json.load(f)
+        base = [r for r in recs
+                if (r["arch"], r["shape"], r["mesh"]) in
+                {(p["arch"], p["shape"], p["mesh"]) for p in perf}]
+        for b in base:
+            b["variant"] = "baseline"
+        print("\n## Generated: §Perf variants\n")
+        perf_table(base + perf)
+
+
+if __name__ == "__main__":
+    main()
