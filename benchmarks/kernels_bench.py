@@ -18,13 +18,66 @@ from repro.kernels.flash_attention.ref import mha_ref
 
 
 def _time(f, *args, iters=20):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))  # one warmup/compile call
     t0 = time.time()
     for _ in range(iters):
         out = f(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters * 1e6
+
+
+def _bench_tree_vs_flat(quick):
+    """Many-leaf FedAWE aggregation: per-leaf pytree path vs the flat
+    [m, N] substrate (core/flatten.py). The tiny-config transformer supplies
+    a realistic many-leaf trainable tree; both paths run the jnp math
+    (Pallas interpret mode is not representative on CPU). derived on the
+    flat row = flat/tree time ratio (<1 = substrate win)."""
+    from repro.configs import get_config
+    from repro.core.flatten import FlatSpec
+    from repro.core.strategies import (_fedawe_aggregate,
+                                       _fedawe_aggregate_flat)
+    from repro.models import init_params
+
+    m = 8 if quick else 16
+    params = init_params(jax.random.PRNGKey(0), get_config("tiny"))
+    n_leaves = len(jax.tree.leaves(params))
+    spec = FlatSpec.from_tree(params)
+
+    rng = np.random.default_rng(1)
+    clients = jax.tree.map(
+        lambda x: jnp.asarray(
+            np.repeat(np.asarray(x, np.float32)[None], m, axis=0)
+            + 0.01 * rng.normal(size=(m,) + x.shape).astype(np.float32)),
+        params)
+    G = jax.tree.map(lambda x: x * 0.05, clients)
+    mask = jnp.asarray((rng.random(m) < 0.6).astype(np.float32))
+    tau = jnp.asarray(rng.integers(0, 4, m).astype(np.int32))
+    t = jnp.asarray(5, jnp.int32)
+
+    def tree_path(clients, G):
+        g, _, _, _ = _fedawe_aggregate(
+            global_tr=params, clients_tr=clients, G=G, mask=mask, t=t,
+            tau=tau, probs=None, extra=(), eta_g=1.0, use_kernel=False)
+        return g
+
+    g_flat = spec.flatten(params)
+    clients_flat = spec.flatten_stacked(clients)
+    G_flat = spec.flatten_stacked(G)
+
+    def flat_path(clients_flat, G_flat):
+        g, _, _, _ = _fedawe_aggregate_flat(
+            global_flat=g_flat, clients_flat=clients_flat,
+            x_end=clients_flat - G_flat, G=G_flat, mask=mask, t=t, tau=tau,
+            probs=None, extra=(), eta_g=1.0, use_kernel=False)
+        return g
+
+    t_tree = _time(jax.jit(tree_path), clients, G)
+    t_flat = _time(jax.jit(flat_path), clients_flat, G_flat)
+    return [
+        ("kernels/aggregate/tree_per_leaf_us", round(t_tree, 1), n_leaves),
+        ("kernels/aggregate/flat_fused_us", round(t_flat, 1),
+         round(t_flat / t_tree, 3)),
+    ]
 
 
 def run(quick=False):
@@ -48,6 +101,8 @@ def run(quick=False):
     t_naive = _time(naive, x, y)
     rows.append(("kernels/echo_aggregate/fused_us", round(t_fused, 1),
                  round(t_fused / t_naive, 3)))
+
+    rows.extend(_bench_tree_vs_flat(quick))
 
     # flash-style (chunked, O(L*S) streamed) vs full-materialization attention
     B, H, L, D = 1, 4, (512 if quick else 1024), 64

@@ -4,10 +4,13 @@ from repro.core.availability import AvailabilityCfg, base_probs  # noqa: F401
 from repro.core.engine import (  # noqa: F401
     FLConfig,
     FLState,
+    client_trainables,
+    global_trainables,
     init_fl_state,
     local_sgd,
     make_round_fn,
     make_round_fn_with_frozen,
     run_rounds,
 )
+from repro.core.flatten import FlatSpec  # noqa: F401
 from repro.core.strategies import REGISTRY, get_strategy  # noqa: F401

@@ -11,17 +11,26 @@ over ('pod','data') and the aggregation lowers to collectives):
 
 The engine is model-agnostic: it sees only a trainable pytree and a loss
 function ``loss_fn(trainable, frozen, batch, rng) -> scalar``.
+
+With ``FLConfig.flat_state`` the persistent state lives on the flat
+substrate (core/flatten.py): the global is one contiguous [N] f32 vector,
+the client stack one [m, N] buffer, and strategies aggregate through their
+fused ``aggregate_flat`` path — pytrees only reappear at the local-SGD entry
+and at eval/checkpoint boundaries (``global_trainables``). Stateless
+strategies keep no client stack at all; their local SGD starts from a
+broadcast *view* of the flat global instead of a materialized copy.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import tree_util as tu
-from repro.core.availability import AvailabilityCfg, sample_active
+from repro.core.availability import AvailabilityCfg, probs_at, sample_active
+from repro.core.flatten import FlatSpec
 from repro.core.strategies import Strategy, get_strategy
 
 
@@ -34,32 +43,64 @@ class FLConfig:
     strategy: str = "fedawe"
     lr_schedule: bool = True    # paper's eta_l / sqrt(t/10 + 1)
     use_kernel: bool = False    # fused Pallas echo-aggregate
+    flat_state: bool = False    # flat [m, N] substrate (core/flatten.py)
     grad_clip: float = 0.5      # paper uses max-norm 0.5
 
 
 class FLState(NamedTuple):
-    global_tr: Any              # global trainables
-    clients_tr: Any             # [m, ...] stacked trainables (or None)
+    global_tr: Any              # global trainables ([N] flat when flat_state)
+    clients_tr: Any             # [m, ...] stacked trainables (or None;
+                                # [m, N] flat when flat_state)
     tau: jnp.ndarray            # [m] int32, init -1
     t: jnp.ndarray              # scalar int32
     extra: Any                  # strategy state
     markov: jnp.ndarray         # availability markov state [m]
     rng: jnp.ndarray
+    spec: Any = None            # FlatSpec (static treedef metadata) or None
 
 
 def init_fl_state(rng, cfg: FLConfig, trainable_template) -> FLState:
     strat = get_strategy(cfg.strategy)
+    tau = jnp.full((cfg.m,), -1, jnp.int32)
+    markov = jnp.ones((cfg.m,), jnp.float32)
+    if cfg.flat_state:
+        spec = FlatSpec.from_tree(trainable_template)
+        g = spec.flatten(trainable_template)
+        # stateless strategies never materialize the [m, N] client stack
+        clients = jnp.tile(g[None], (cfg.m, 1)) if strat.stateful_clients \
+            else None
+        extra = strat.init_extra(g, cfg.m)
+        return FLState(g, clients, tau, jnp.zeros((), jnp.int32), extra,
+                       markov, rng, spec)
     clients = tu.tree_broadcast(trainable_template, cfg.m)
     extra = strat.init_extra(trainable_template, cfg.m)
     return FLState(
         global_tr=trainable_template,
         clients_tr=clients,
-        tau=jnp.full((cfg.m,), -1, jnp.int32),
+        tau=tau,
         t=jnp.zeros((), jnp.int32),
         extra=extra,
-        markov=jnp.ones((cfg.m,), jnp.float32),
+        markov=markov,
         rng=rng,
     )
+
+
+def global_trainables(state: FLState):
+    """Trainable pytree of the global model — the eval/checkpoint boundary
+    where flat state is unflattened back to leaf dtypes."""
+    if state.spec is None:
+        return state.global_tr
+    return state.spec.unflatten(state.global_tr)
+
+
+def client_trainables(state: FLState):
+    """Client-stacked trainable pytree ([m, ...] leaves), or None when the
+    strategy keeps no per-client state on the flat substrate."""
+    if state.spec is None:
+        return state.clients_tr
+    if state.clients_tr is None:
+        return None
+    return state.spec.unflatten_stacked(state.clients_tr)
 
 
 def _clip(g, max_norm):
@@ -120,27 +161,46 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
         rng, k_av, k_loc = jax.random.split(state.rng, 3)
         mask, markov = sample_active(k_av, avail_cfg, base_p, state.t,
                                      state.markov)
-        probs_t = _probs_for(avail_cfg, base_p, state.t)
+        probs_t = probs_at(avail_cfg, base_p, state.t)
 
         eta_l = cfg.eta_l
         if cfg.lr_schedule:
             eta_l = cfg.eta_l / jnp.sqrt(state.t.astype(jnp.float32) / 10.0 + 1.0)
 
-        start = state.clients_tr if strat.stateful_clients else \
-            tu.tree_broadcast(state.global_tr, cfg.m)
-
         loc_rngs = jax.random.split(k_loc, cfg.m)
-        x_end, losses = jax.vmap(
-            lambda x0, b, k: local_sgd(x0, frozen, b, k, s=cfg.s,
-                                       eta_l=eta_l, loss_fn=loss_fn,
-                                       grad_clip=cfg.grad_clip)
-        )(start, batches, loc_rngs)
-        G = tu.tree_sub(start, x_end)
+        if cfg.flat_state:
+            spec = state.spec
+            # stateless: a broadcast VIEW of the flat global, never a copy
+            start = state.clients_tr if strat.stateful_clients else \
+                jnp.broadcast_to(state.global_tr[None], (cfg.m, spec.size))
 
-        new_global, new_clients, new_tau, new_extra = strat.aggregate(
-            global_tr=state.global_tr, clients_tr=start, G=G, mask=mask,
-            t=state.t, tau=state.tau, probs=probs_t, extra=state.extra,
-            eta_g=cfg.eta_g, use_kernel=cfg.use_kernel)
+            def local(x0_flat, b, k):
+                xe, loss = local_sgd(spec.unflatten(x0_flat), frozen, b, k,
+                                     s=cfg.s, eta_l=eta_l, loss_fn=loss_fn,
+                                     grad_clip=cfg.grad_clip)
+                return spec.flatten(xe), loss
+
+            x_end, losses = jax.vmap(local)(start, batches, loc_rngs)
+            G = start - x_end
+            new_global, new_clients, new_tau, new_extra = strat.aggregate_flat(
+                global_flat=state.global_tr, clients_flat=start, x_end=x_end,
+                G=G, mask=mask, t=state.t, tau=state.tau, probs=probs_t,
+                extra=state.extra, eta_g=cfg.eta_g, use_kernel=cfg.use_kernel)
+        else:
+            start = state.clients_tr if strat.stateful_clients else \
+                tu.tree_broadcast(state.global_tr, cfg.m)
+
+            x_end, losses = jax.vmap(
+                lambda x0, b, k: local_sgd(x0, frozen, b, k, s=cfg.s,
+                                           eta_l=eta_l, loss_fn=loss_fn,
+                                           grad_clip=cfg.grad_clip)
+            )(start, batches, loc_rngs)
+            G = tu.tree_sub(start, x_end)
+
+            new_global, new_clients, new_tau, new_extra = strat.aggregate(
+                global_tr=state.global_tr, clients_tr=start, G=G, mask=mask,
+                t=state.t, tau=state.tau, probs=probs_t, extra=state.extra,
+                eta_g=cfg.eta_g, use_kernel=cfg.use_kernel, x_end=x_end)
 
         metrics = dict(
             loss=jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0),
@@ -148,17 +208,12 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
             mean_echo=jnp.sum((state.t - state.tau).astype(jnp.float32) * mask)
             / jnp.maximum(jnp.sum(mask), 1.0),
         )
-        new_state = FLState(new_global, new_clients, new_tau, state.t + 1,
-                            new_extra, markov, rng)
+        new_state = state._replace(
+            global_tr=new_global, clients_tr=new_clients, tau=new_tau,
+            t=state.t + 1, extra=new_extra, markov=markov, rng=rng)
         return new_state, metrics
 
     return round_fn
-
-
-def _probs_for(avail_cfg, base_p, t):
-    from repro.core.availability import probs_at
-
-    return probs_at(avail_cfg, base_p, t)
 
 
 def run_rounds(state: FLState, round_fn, batch_fn, T, *, jit=True,

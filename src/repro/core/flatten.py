@@ -1,0 +1,103 @@
+"""Flat parameter substrate: one contiguous buffer per model copy.
+
+A ``FlatSpec`` ravels a trainable pytree once (at ``init_fl_state``) into a
+single contiguous ``[N]`` vector — or ``[m, N]`` for client-stacked state —
+recording per-leaf offsets, shapes and dtypes. Every strategy's weighted sum
+and memory update then becomes a single ``[m, N]`` reduction (and the fused
+FedAWE kernel a single ``pallas_call``) instead of one launch per leaf.
+
+Accumulation dtype is f32 (the buffer); leaf dtypes are restored only at the
+unflatten boundary (eval, checkpoint, local-SGD entry), so I/O stays in the
+model's own precision while the hot aggregation loop runs flat.
+
+The spec is static metadata: it is registered as a leafless pytree node so it
+can ride inside ``FLState`` through ``jax.jit`` as part of the treedef
+(hashable, equality-compared for retracing) without ever becoming a tracer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    treedef: Any                        # jax pytree structure (hashable)
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]             # canonical dtype names, leaf order
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    size: int                           # N = sum(sizes)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_tree(cls, tree) -> "FlatSpec":
+        """Build the spec from a template pytree (arrays or ShapeDtypeStructs,
+        no leading client axis)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        assert leaves, "FlatSpec needs at least one leaf"
+        shapes = tuple(tuple(int(d) for d in l.shape) for l in leaves)
+        dtypes = tuple(jnp.dtype(l.dtype).name for l in leaves)
+        sizes = tuple(math.prod(s) for s in shapes)
+        offsets, off = [], 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        return cls(treedef, shapes, dtypes, tuple(offsets), sizes, off)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.sizes)
+
+    # -- tree -> flat (f32 accumulation dtype) ------------------------------
+
+    def flatten(self, tree) -> jnp.ndarray:
+        """Ravel a single model pytree into one [N] f32 vector."""
+        leaves = self.treedef.flatten_up_to(tree)
+        parts = [jnp.ravel(l).astype(jnp.float32) for l in leaves]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    def flatten_stacked(self, tree) -> jnp.ndarray:
+        """Ravel a client-stacked pytree (leaves [m, ...]) into [m, N] f32."""
+        leaves = self.treedef.flatten_up_to(tree)
+        m = leaves[0].shape[0]
+        parts = [l.reshape(m, -1).astype(jnp.float32) for l in leaves]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+    # -- flat -> tree (leaf-dtype I/O) --------------------------------------
+
+    def unflatten(self, flat) -> Any:
+        """[N] flat vector -> pytree with the recorded leaf shapes/dtypes."""
+        leaves = [flat[o:o + s].reshape(shp).astype(dt)
+                  for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                           self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def unflatten_stacked(self, flat) -> Any:
+        """[m, N] client stack -> pytree with [m, ...] leaves."""
+        m = flat.shape[0]
+        leaves = [flat[:, o:o + s].reshape((m,) + shp).astype(dt)
+                  for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                           self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # -- zero-copy views ----------------------------------------------------
+
+    def leaf_views(self, flat):
+        """Per-leaf f32 views of a [N] or [m, N] buffer (reshape-of-slice:
+        contiguous, so XLA lowers them to aliases, not copies). No dtype
+        cast — use unflatten for leaf-dtype I/O."""
+        lead = flat.shape[:-1]
+        return [flat[..., o:o + s].reshape(lead + shp)
+                for o, s, shp in zip(self.offsets, self.sizes, self.shapes)]
+
+
+# Leafless pytree node: the spec travels inside FLState as static treedef
+# metadata — jit sees it by equality/hash, never as a traced leaf.
+jax.tree_util.register_pytree_node(
+    FlatSpec, lambda s: ((), s), lambda aux, _: aux)

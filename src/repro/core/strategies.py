@@ -10,6 +10,20 @@ vector and its own auxiliary state.
   stateless (clients restart from the broadcast global): all baselines
   memory-aided (O(m·d) server memory):   MIFA, FedVARP
 
+Every strategy carries two aggregation paths:
+
+  ``aggregate``       — pytree state (leaves keep their own shapes); the
+                        reference implementation, one reduction per leaf.
+  ``aggregate_flat``  — flat substrate (core/flatten.py): global is one
+                        [N] f32 vector, the client stack one [m, N] buffer,
+                        and every weighted sum / memory update is a single
+                        [m, N] reduction through ``flat_weighted_sum``.
+                        Selected via FLConfig.flat_state; stateless
+                        strategies return ``None`` clients (local SGD
+                        starts from a broadcast *view* of the flat global,
+                        so no per-client copy of the model is ever
+                        materialized).
+
 All math follows the cited papers: FedAWE Alg. 1; FedAU (Wang & Ji 2024,
 interval-estimate reweighting with cutoff K); F3AST (Ribero et al., EMA rate
 estimates); MIFA (Gu et al. 2021); FedVARP (Jhunjhunwala et al. 2022);
@@ -32,9 +46,22 @@ class Strategy:
     stateful_clients: bool
     init_extra: Callable[[Any, int], Any]
     aggregate: Callable[..., Any]
+    aggregate_flat: Optional[Callable[..., Any]] = None
     # echoes the paper's grouping (Table 2)
     memory_aided: bool = False
     uses_true_probs: bool = False
+
+
+def flat_weighted_sum(w, G):
+    """The one shared flat reduction: sum_i w_i * G_i over an [m, N] stack.
+
+    A single f32 matvec — every strategy's weighted sum and memory update
+    funnels through here on the flat path."""
+    return w.astype(jnp.float32) @ G.astype(jnp.float32)
+
+
+def _stateless_tau(mask, t, tau):
+    return jnp.where(mask > 0, t, tau)
 
 
 # ---------------------------------------------------------------------------
@@ -46,7 +73,7 @@ def _fedawe_init(template, m):
 
 
 def _fedawe_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
-                      extra, eta_g, use_kernel=False):
+                      extra, eta_g, use_kernel=False, x_end=None):
     """Adaptive innovation echoing + implicit gossiping.
 
     x_i^† = x_i − η_g (t − τ_i) G_i            (echo, active clients)
@@ -58,8 +85,10 @@ def _fedawe_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
     echo = (t - tau).astype(jnp.float32)  # [m] ; (t - τ_i(t))
     if use_kernel:
         from repro.kernels.echo_aggregate import ops as ea_ops
+        y = x_end if x_end is not None else tu.tree_sub(clients_tr, G)
+        # one pallas_call over the concatenated leaves, guard fused in
         new_global = ea_ops.echo_aggregate_tree(
-            clients_tr, G, mask, echo, eta_g)
+            clients_tr, y, mask, echo, eta_g, global_tr)
     else:
         x_dagger = jax.tree.map(
             lambda x, g: (x.astype(jnp.float32)
@@ -67,16 +96,37 @@ def _fedawe_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
                           * g.astype(jnp.float32)).astype(x.dtype),
             clients_tr, G)
         new_global = tu.tree_masked_mean(x_dagger, mask)
-    any_active = jnp.sum(mask) > 0
-    new_global = jax.tree.map(
-        lambda n, o: jnp.where(any_active, n, o.astype(n.dtype)),
-        new_global, global_tr)
+        any_active = jnp.sum(mask) > 0
+        new_global = jax.tree.map(
+            lambda n, o: jnp.where(any_active, n, o.astype(n.dtype)),
+            new_global, global_tr)
     new_clients = tu.tree_select_broadcast(mask, new_global, clients_tr)
     new_tau = jnp.where(mask > 0, t, tau)
     return new_global, new_clients, new_tau, extra
 
 
-FEDAWE = Strategy("fedawe", True, _fedawe_init, _fedawe_aggregate)
+def _fedawe_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
+                           tau, probs, extra, eta_g, use_kernel=False):
+    """Flat-substrate FedAWE: the whole server update is one [m, N] sweep
+    (a single pallas_call on the kernel path)."""
+    echo = (t - tau).astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels.echo_aggregate import ops as ea_ops
+        new_global = ea_ops.echo_aggregate_flat(
+            clients_flat, x_end, global_flat, mask, echo, eta_g)
+    else:
+        # sum_i w_i (x_i − η_g e_i G_i) as two matvecs — no [m, N] temporary
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        acc = (flat_weighted_sum(mask, clients_flat)
+               - eta_g * flat_weighted_sum(mask * echo, G)) / denom
+        new_global = jnp.where(jnp.sum(mask) > 0, acc, global_flat)
+    new_clients = jnp.where(mask[:, None] > 0, new_global[None], clients_flat)
+    new_tau = jnp.where(mask > 0, t, tau)
+    return new_global, new_clients, new_tau, extra
+
+
+FEDAWE = Strategy("fedawe", True, _fedawe_init, _fedawe_aggregate,
+                  aggregate_flat=_fedawe_aggregate_flat)
 
 
 # ---------------------------------------------------------------------------
@@ -88,21 +138,24 @@ def _stateless_wrap(new_global, clients_tr, mask, t, tau):
     m = tau.shape[0]
     new_clients = tu.tree_broadcast(new_global, m) if clients_tr is not None \
         else None
-    return new_clients, jnp.where(mask > 0, t, tau)
+    return new_clients, _stateless_tau(mask, t, tau)
 
 
 def _mk_weighted_fedavg(weight_fn, name, uses_true_probs=False):
     def init(template, m):
         return ()
 
+    def _denom(mask):
+        return jnp.maximum(jnp.sum(mask), 1.0) if name == "fedavg_active" \
+            else jnp.float32(mask.shape[0])
+
     def agg(*, global_tr, clients_tr, G, mask, t, tau, probs, extra, eta_g,
-            use_kernel=False):
+            use_kernel=False, x_end=None):
         w = weight_fn(mask, probs) * mask  # [m]
         upd = jax.tree.map(
             lambda g: jnp.sum(g.astype(jnp.float32) * tu._bshape(w, g), axis=0),
             G)
-        denom = jnp.maximum(jnp.sum(mask), 1.0) if name == "fedavg_active" \
-            else jnp.float32(mask.shape[0])
+        denom = _denom(mask)
         new_global = jax.tree.map(
             lambda x, u: (x.astype(jnp.float32) - eta_g * u / denom).astype(x.dtype),
             global_tr, upd)
@@ -110,7 +163,14 @@ def _mk_weighted_fedavg(weight_fn, name, uses_true_probs=False):
                                                t, tau)
         return new_global, new_clients, new_tau, extra
 
-    return Strategy(name, False, init, agg, uses_true_probs=uses_true_probs)
+    def agg_flat(*, global_flat, clients_flat, x_end, G, mask, t, tau, probs,
+                 extra, eta_g, use_kernel=False):
+        w = weight_fn(mask, probs) * mask
+        new_global = global_flat - eta_g * flat_weighted_sum(w, G) / _denom(mask)
+        return new_global, None, _stateless_tau(mask, t, tau), extra
+
+    return Strategy(name, False, init, agg, aggregate_flat=agg_flat,
+                    uses_true_probs=uses_true_probs)
 
 
 FEDAVG_ACTIVE = _mk_weighted_fedavg(lambda mask, p: jnp.ones_like(mask),
@@ -135,8 +195,9 @@ def _fedau_init(template, m, K=50):
     )
 
 
-def _fedau_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
-                     eta_g, use_kernel=False):
+def _fedau_weights(mask, extra):
+    """Shared scalar-state update (tree and flat paths): returns the
+    per-client weights and the new extra dict."""
     interval = extra["interval"] + 1.0
     capped = jnp.minimum(interval, extra["K"])
     n = extra["n_intervals"]
@@ -146,6 +207,14 @@ def _fedau_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
         mask > 0, (extra["omega"] * n + capped) / jnp.maximum(new_n, 1.0),
         extra["omega"])
     w = new_omega * mask  # weight = estimated interval ≈ 1/p̂_i
+    new_extra = dict(interval=jnp.where(mask > 0, 0.0, interval),
+                     omega=new_omega, n_intervals=new_n, K=extra["K"])
+    return w, new_extra
+
+
+def _fedau_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
+                     eta_g, use_kernel=False, x_end=None):
+    w, new_extra = _fedau_weights(mask, extra)
     m = jnp.float32(mask.shape[0])
     upd = jax.tree.map(
         lambda g: jnp.sum(g.astype(jnp.float32) * tu._bshape(w, g), axis=0) / m,
@@ -153,13 +222,20 @@ def _fedau_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
     new_global = jax.tree.map(
         lambda x, u: (x.astype(jnp.float32) - eta_g * u).astype(x.dtype),
         global_tr, upd)
-    new_extra = dict(interval=jnp.where(mask > 0, 0.0, interval),
-                     omega=new_omega, n_intervals=new_n, K=extra["K"])
     new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
     return new_global, new_clients, new_tau, new_extra
 
 
-FEDAU = Strategy("fedau", False, _fedau_init, _fedau_aggregate)
+def _fedau_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
+                          tau, probs, extra, eta_g, use_kernel=False):
+    w, new_extra = _fedau_weights(mask, extra)
+    m = jnp.float32(mask.shape[0])
+    new_global = global_flat - eta_g * flat_weighted_sum(w, G) / m
+    return new_global, None, _stateless_tau(mask, t, tau), new_extra
+
+
+FEDAU = Strategy("fedau", False, _fedau_init, _fedau_aggregate,
+                 aggregate_flat=_fedau_aggregate_flat)
 
 
 # ---------------------------------------------------------------------------
@@ -170,10 +246,15 @@ def _f3ast_init(template, m, beta=0.001):
     return dict(rate=jnp.full((m,), 0.5, jnp.float32), beta=jnp.float32(beta))
 
 
-def _f3ast_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
-                     eta_g, use_kernel=False):
+def _f3ast_weights(mask, extra):
     rate = (1 - extra["beta"]) * extra["rate"] + extra["beta"] * mask
     w = mask / jnp.clip(rate, 1e-2, 1.0)
+    return w, dict(rate=rate, beta=extra["beta"])
+
+
+def _f3ast_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
+                     eta_g, use_kernel=False, x_end=None):
+    w, new_extra = _f3ast_weights(mask, extra)
     m = jnp.float32(mask.shape[0])
     upd = jax.tree.map(
         lambda g: jnp.sum(g.astype(jnp.float32) * tu._bshape(w, g), axis=0) / m,
@@ -182,10 +263,19 @@ def _f3ast_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
         lambda x, u: (x.astype(jnp.float32) - eta_g * u).astype(x.dtype),
         global_tr, upd)
     new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
-    return new_global, new_clients, new_tau, dict(rate=rate, beta=extra["beta"])
+    return new_global, new_clients, new_tau, new_extra
 
 
-F3AST = Strategy("f3ast", False, _f3ast_init, _f3ast_aggregate)
+def _f3ast_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
+                          tau, probs, extra, eta_g, use_kernel=False):
+    w, new_extra = _f3ast_weights(mask, extra)
+    m = jnp.float32(mask.shape[0])
+    new_global = global_flat - eta_g * flat_weighted_sum(w, G) / m
+    return new_global, None, _stateless_tau(mask, t, tau), new_extra
+
+
+F3AST = Strategy("f3ast", False, _f3ast_init, _f3ast_aggregate,
+                 aggregate_flat=_f3ast_aggregate_flat)
 
 
 # ---------------------------------------------------------------------------
@@ -197,7 +287,7 @@ def _mifa_init(template, m):
 
 
 def _mifa_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
-                    eta_g, use_kernel=False):
+                    eta_g, use_kernel=False, x_end=None):
     mem = tu.tree_select(mask, G, extra["mem"])
     upd = tu.tree_mean(mem)
     new_global = jax.tree.map(
@@ -208,7 +298,17 @@ def _mifa_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
     return new_global, new_clients, new_tau, dict(mem=mem)
 
 
-MIFA = Strategy("mifa", False, _mifa_init, _mifa_aggregate, memory_aided=True)
+def _mifa_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
+                         tau, probs, extra, eta_g, use_kernel=False):
+    mem = jnp.where(mask[:, None] > 0, G, extra["mem"])  # [m, N] memory
+    m = jnp.float32(mask.shape[0])
+    new_global = global_flat - eta_g * flat_weighted_sum(
+        jnp.ones_like(mask), mem) / m
+    return new_global, None, _stateless_tau(mask, t, tau), dict(mem=mem)
+
+
+MIFA = Strategy("mifa", False, _mifa_init, _mifa_aggregate,
+                aggregate_flat=_mifa_aggregate_flat, memory_aided=True)
 
 
 # ---------------------------------------------------------------------------
@@ -220,7 +320,7 @@ def _fedvarp_init(template, m):
 
 
 def _fedvarp_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
-                       extra, eta_g, use_kernel=False):
+                       extra, eta_g, use_kernel=False, x_end=None):
     y = extra["y"]
     diff_mean = tu.tree_masked_mean(tu.tree_sub(G, y), mask)
     y_mean = tu.tree_mean(y)
@@ -235,8 +335,21 @@ def _fedvarp_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
     return new_global, new_clients, new_tau, dict(y=new_y)
 
 
+def _fedvarp_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
+                            tau, probs, extra, eta_g, use_kernel=False):
+    y = extra["y"]  # [m, N]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    diff_mean = flat_weighted_sum(mask, G - y) / denom
+    y_mean = flat_weighted_sum(jnp.ones_like(mask), y) / jnp.float32(
+        mask.shape[0])
+    any_active = (jnp.sum(mask) > 0).astype(jnp.float32)
+    new_global = global_flat - eta_g * (any_active * diff_mean + y_mean)
+    new_y = jnp.where(mask[:, None] > 0, G, y)
+    return new_global, None, _stateless_tau(mask, t, tau), dict(y=new_y)
+
+
 FEDVARP = Strategy("fedvarp", False, _fedvarp_init, _fedvarp_aggregate,
-                   memory_aided=True)
+                   aggregate_flat=_fedvarp_aggregate_flat, memory_aided=True)
 
 
 # ---------------------------------------------------------------------------
@@ -251,10 +364,11 @@ def _fedawe_m_init(template, m, beta=0.9):
 
 
 def _fedawe_m_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
-                        extra, eta_g, use_kernel=False):
+                        extra, eta_g, use_kernel=False, x_end=None):
     gossip, _, new_tau, _ = _fedawe_aggregate(
         global_tr=global_tr, clients_tr=clients_tr, G=G, mask=mask, t=t,
-        tau=tau, probs=probs, extra=(), eta_g=eta_g, use_kernel=use_kernel)
+        tau=tau, probs=probs, extra=(), eta_g=eta_g, use_kernel=use_kernel,
+        x_end=x_end)
     beta = extra["beta"]
     delta = tu.tree_sub(gossip, global_tr)
     v = jax.tree.map(
@@ -270,7 +384,22 @@ def _fedawe_m_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
     return new_global, new_clients, new_tau, dict(v=v, beta=beta)
 
 
-FEDAWE_M = Strategy("fedawe_m", True, _fedawe_m_init, _fedawe_m_aggregate)
+def _fedawe_m_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
+                             tau, probs, extra, eta_g, use_kernel=False):
+    gossip, _, new_tau, _ = _fedawe_aggregate_flat(
+        global_flat=global_flat, clients_flat=clients_flat, x_end=x_end, G=G,
+        mask=mask, t=t, tau=tau, probs=probs, extra=(), eta_g=eta_g,
+        use_kernel=use_kernel)
+    beta = extra["beta"]
+    v = beta * extra["v"] + (gossip - global_flat)  # gossip is guarded
+    any_active = jnp.sum(mask) > 0
+    new_global = jnp.where(any_active, global_flat + v, global_flat)
+    new_clients = jnp.where(mask[:, None] > 0, new_global[None], clients_flat)
+    return new_global, new_clients, new_tau, dict(v=v, beta=beta)
+
+
+FEDAWE_M = Strategy("fedawe_m", True, _fedawe_m_init, _fedawe_m_aggregate,
+                    aggregate_flat=_fedawe_m_aggregate_flat)
 
 
 REGISTRY = {s.name: s for s in
@@ -279,4 +408,6 @@ REGISTRY = {s.name: s for s in
 
 
 def get_strategy(name: str) -> Strategy:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown strategy {name!r}; known: {sorted(REGISTRY)}")
     return REGISTRY[name]

@@ -30,6 +30,21 @@ def _kernel(mask_ref, echo_ref, denom_ref, x_ref, y_ref, o_ref, *, eta_g):
     o_ref[...] = (acc / denom_ref[0]).astype(o_ref.dtype)
 
 
+def _fused_kernel(mask_ref, echo_ref, denom_ref, x_ref, y_ref, g_ref, o_ref,
+                  *, eta_g):
+    """Full FedAWE server update in one sweep: echo + mask + gossip mean +
+    empty-round guard (W = I: fall back to the previous global g)."""
+    x = x_ref[...].astype(jnp.float32)          # [m, BN] client starts
+    y = y_ref[...].astype(jnp.float32)          # [m, BN] post-local-SGD
+    w = mask_ref[...].astype(jnp.float32)       # [m]
+    e = echo_ref[...].astype(jnp.float32)       # [m]
+    xd = x - eta_g * e[:, None] * (x - y)
+    acc = jnp.sum(w[:, None] * xd, axis=0) / denom_ref[0]
+    any_active = jnp.sum(w) > 0.0
+    o_ref[...] = jnp.where(any_active, acc,
+                           g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
 def echo_aggregate_pallas(x, y, mask, echo, eta_g, *, block_n=4096,
                           interpret=True):
     """x, y: [m, N]; mask, echo: [m]. Returns [N] f32 gossip mean.
@@ -61,4 +76,43 @@ def echo_aggregate_pallas(x, y, mask, echo, eta_g, *, block_n=4096,
         out_shape=jax.ShapeDtypeStruct((Np,), jnp.float32),
         interpret=interpret,
     )(mask.astype(jnp.float32), echo.astype(jnp.float32), denom, x, y)
+    return out[:N]
+
+
+def echo_aggregate_fused_pallas(x, y, g, mask, echo, eta_g, *, block_n=4096,
+                                interpret=True):
+    """Single-launch FedAWE aggregation over the flat substrate.
+
+    x, y: [m, N] client start / end stacks; g: [N] previous global (the
+    empty-round fallback); mask, echo: [m]. Returns [N] f32 — the whole
+    server update (echo, mask, gossip mean, empty-round guard) is one
+    ``pallas_call`` regardless of how many pytree leaves N concatenates.
+    """
+    m, N = x.shape
+    denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)[None]
+
+    pad = (-N) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+        g = jnp.pad(g, (0, pad))
+    Np = N + pad
+    grid = (Np // block_n,)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, eta_g=float(eta_g)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m,), lambda j: (0,)),            # mask
+            pl.BlockSpec((m,), lambda j: (0,)),            # echo
+            pl.BlockSpec((1,), lambda j: (0,)),            # denom
+            pl.BlockSpec((m, block_n), lambda j: (0, j)),  # x
+            pl.BlockSpec((m, block_n), lambda j: (0, j)),  # y
+            pl.BlockSpec((block_n,), lambda j: (j,)),      # g
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), jnp.float32),
+        interpret=interpret,
+    )(mask.astype(jnp.float32), echo.astype(jnp.float32), denom, x, y,
+      g.astype(jnp.float32))
     return out[:N]

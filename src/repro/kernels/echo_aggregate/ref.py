@@ -19,3 +19,11 @@ def echo_aggregate_ref(x, y, mask, echo, eta_g):
     xd = x32 - eta_g * e[:, None] * (x32 - y32)
     denom = jnp.maximum(w.sum(), 1.0)
     return (w[:, None] * xd).sum(axis=0) / denom
+
+
+def echo_aggregate_fused_ref(x, y, g, mask, echo, eta_g):
+    """Oracle for the fused single-launch update: echo_aggregate_ref plus the
+    empty-round guard (no active client -> keep the previous global g)."""
+    acc = echo_aggregate_ref(x, y, mask, echo, eta_g)
+    any_active = jnp.sum(mask.astype(jnp.float32)) > 0
+    return jnp.where(any_active, acc, g.astype(jnp.float32))

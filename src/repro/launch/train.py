@@ -20,8 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpointing import save_fl_state
-from repro.core import (AvailabilityCfg, FLConfig, base_probs, init_fl_state,
-                        make_round_fn, run_rounds)
+from repro.core import (AvailabilityCfg, FLConfig, base_probs,
+                        global_trainables, init_fl_state, make_round_fn,
+                        run_rounds)
 from repro.core.availability import base_probs_from_data
 from repro.data import FederatedDataset, dirichlet_partition, \
     make_image_classification, make_lm_tokens
@@ -45,7 +46,7 @@ def build_image_task(args, rng):
 
     def eval_fn(state):
         batch = ds.eval_batch(1024, seed=1)
-        acc = cnn.accuracy(cnn.cnn_apply, state.global_tr,
+        acc = cnn.accuracy(cnn.cnn_apply, global_trainables(state),
                            {k: jnp.asarray(v) for k, v in batch.items()})
         return {"eval_acc": float(acc)}
 
@@ -78,7 +79,7 @@ def build_lm_task(args, rng):
         batch = ds.eval_batch(256, seed=1)
         b = {k: jnp.asarray(v) for k, v in batch.items()}
         b["mask"] = jnp.ones_like(b["labels"], jnp.float32)
-        return {"eval_loss": float(lm_loss(state.global_tr, cfg, b))}
+        return {"eval_loss": float(lm_loss(global_trainables(state), cfg, b))}
 
     return params, loss_fn, ds, base_p, eval_fn
 
@@ -100,6 +101,11 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--n-samples", type=int, default=20000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="fused Pallas echo-aggregate (FedAWE family)")
+    ap.add_argument("--flat-state", action="store_true",
+                    help="flat [m, N] client-state substrate "
+                         "(single-launch fused aggregation)")
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt", default=None)
@@ -110,7 +116,8 @@ def main(argv=None):
     params, loss_fn, ds, base_p, eval_fn = build(args, rng)
 
     fl = FLConfig(m=args.m, s=args.s, eta_l=args.eta_l, eta_g=args.eta_g,
-                  strategy=args.strategy)
+                  strategy=args.strategy, use_kernel=args.use_kernel,
+                  flat_state=args.flat_state)
     av = AvailabilityCfg(kind=args.dynamics, gamma=args.gamma)
     state = init_fl_state(rng, fl, params)
     round_fn = make_round_fn(fl, loss_fn, {}, av, base_p)

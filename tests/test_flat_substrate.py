@@ -1,0 +1,218 @@
+"""Flat-substrate equivalence (extends the test_engine_kernel_path pattern).
+
+The flat [m, N] state path (FLConfig.flat_state) must match the pytree
+reference path — global, clients, tau and strategy extra — for every
+strategy in REGISTRY over multiple rounds of non-stationary (sine)
+availability, including forced-empty rounds; and a FedAWE round with
+use_kernel=True must lower to exactly ONE pallas_call regardless of how
+many leaves the trainable pytree has."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import (REGISTRY, AvailabilityCfg, FLConfig, FlatSpec,
+                        client_trainables, global_trainables, init_fl_state,
+                        make_round_fn)
+
+# extra-state entries shaped like the model (everything else is per-client
+# scalar statistics, compared directly)
+_MODEL_KEYS = {"mem": "stacked", "y": "stacked", "v": "single"}
+
+
+def _loss_fn(tr, frozen, batch, rng):
+    return (0.5 * jnp.sum((tr["w"] @ batch["x"] - batch["y"]) ** 2)
+            + jnp.sum(tr["b"] ** 2))
+
+
+def _run(strategy, *, flat, use_kernel=False, T=7, base_p=0.6, m=6):
+    cfg = FLConfig(m=m, s=3, eta_l=0.03, strategy=strategy,
+                   lr_schedule=False, grad_clip=0.0, use_kernel=use_kernel,
+                   flat_state=flat)
+    av = AvailabilityCfg(kind="sine", gamma=0.3)
+    tr0 = {"w": jnp.ones((4, 4)) * 0.1, "b": jnp.zeros((7,))}
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, tr0)
+    rf = jax.jit(make_round_fn(cfg, _loss_fn, {}, av, jnp.full((m,), base_p)))
+    rng = np.random.default_rng(0)
+    batches = {"x": jnp.asarray(rng.normal(size=(m, 3, 4)).astype(np.float32)),
+               "y": jnp.asarray(rng.normal(size=(m, 3, 4)).astype(np.float32))}
+    metrics = None
+    for _ in range(T):
+        state, metrics = rf(state, batches)
+    return state, metrics
+
+
+def _canon_extra(extra, spec):
+    """Normalize strategy extra state to numpy for tree-vs-flat comparison:
+    model-shaped entries are flattened through the spec."""
+    if extra == ():
+        return {}
+    out = {}
+    for k, v in extra.items():
+        if k in _MODEL_KEYS and not isinstance(v, jax.Array):
+            out[k] = np.asarray(spec.flatten_stacked(v)
+                                if _MODEL_KEYS[k] == "stacked"
+                                else spec.flatten(v))
+        else:
+            out[k] = np.asarray(v)
+    return out
+
+
+def _assert_state_parity(s_tree, s_flat):
+    spec = s_flat.spec
+    # global
+    for a, b in zip(jax.tree.leaves(s_tree.global_tr),
+                    jax.tree.leaves(global_trainables(s_flat))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    # clients: stateless flat keeps none — implied state is the global
+    if s_flat.clients_tr is None:
+        implied = jnp.broadcast_to(s_flat.global_tr[None],
+                                   (s_tree.tau.shape[0], spec.size))
+    else:
+        implied = s_flat.clients_tr
+    np.testing.assert_allclose(
+        np.asarray(spec.flatten_stacked(s_tree.clients_tr)),
+        np.asarray(implied), rtol=1e-4, atol=1e-5)
+    # tau
+    np.testing.assert_array_equal(np.asarray(s_tree.tau),
+                                  np.asarray(s_flat.tau))
+    # strategy extra
+    et, ef = _canon_extra(s_tree.extra, spec), _canon_extra(s_flat.extra, spec)
+    assert set(et) == set(ef)
+    for k in et:
+        np.testing.assert_allclose(et[k], ef[k], rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("strategy", sorted(REGISTRY))
+def test_flat_matches_tree_all_strategies(strategy):
+    s_tree, m_tree = _run(strategy, flat=False)
+    s_flat, m_flat = _run(strategy, flat=True)
+    _assert_state_parity(s_tree, s_flat)
+    for k in m_tree:
+        np.testing.assert_allclose(np.asarray(m_tree[k]),
+                                   np.asarray(m_flat[k]), rtol=1e-4,
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("strategy", sorted(REGISTRY))
+def test_flat_matches_tree_empty_rounds(strategy):
+    """base_p = 0 forces every round empty: the W = I rule must hold on both
+    paths (and FedAWE's global must stay at its initial value)."""
+    s_tree, _ = _run(strategy, flat=False, base_p=0.0)
+    s_flat, _ = _run(strategy, flat=True, base_p=0.0)
+    _assert_state_parity(s_tree, s_flat)
+    if strategy in ("fedawe", "fedawe_m"):
+        g = global_trainables(s_flat)
+        np.testing.assert_allclose(np.asarray(g["w"]), 0.1 * np.ones((4, 4)),
+                                   rtol=1e-6)
+    assert np.all(np.asarray(s_flat.tau) == -1)
+
+
+@pytest.mark.parametrize("strategy", ["fedawe", "fedawe_m"])
+@pytest.mark.parametrize("base_p", [0.6, 0.0])
+def test_flat_kernel_matches_tree_kernel(strategy, base_p):
+    s_tree, _ = _run(strategy, flat=False, use_kernel=True, base_p=base_p)
+    s_flat, _ = _run(strategy, flat=True, use_kernel=True, base_p=base_p)
+    _assert_state_parity(s_tree, s_flat)
+
+
+# ---------------------------------------------------------------------------
+# single-launch guarantee
+# ---------------------------------------------------------------------------
+
+def _count_primitive(jaxpr, name):
+    n = 0
+    for eq in jaxpr.eqns:
+        if eq.primitive.name == name:
+            n += 1
+        for sub in eq.params.values():
+            if hasattr(sub, "jaxpr"):
+                n += _count_primitive(sub.jaxpr, name)
+    return n
+
+
+@pytest.mark.parametrize("flat", [True, False])
+def test_fedawe_round_is_single_pallas_call(flat):
+    """A kernel-path FedAWE round issues exactly one pallas_call no matter
+    how many leaves the trainable pytree has (here: 12)."""
+    m, s, n_leaves = 4, 2, 12
+    tr0 = {f"l{i}": jnp.full((3, i + 1), 0.1, jnp.float32)
+           for i in range(n_leaves)}
+    assert len(jax.tree.leaves(tr0)) == n_leaves
+
+    def loss_fn(tr, frozen, batch, rng):
+        flatv = jnp.concatenate([jnp.ravel(l) for l in jax.tree.leaves(tr)])
+        return jnp.sum(flatv ** 2) * jnp.mean(batch["z"])
+
+    cfg = FLConfig(m=m, s=s, eta_l=0.05, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0, use_kernel=True,
+                   flat_state=flat)
+    av = AvailabilityCfg(kind="sine", gamma=0.3)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, tr0)
+    rf = make_round_fn(cfg, loss_fn, {}, av, jnp.full((m,), 0.7))
+    batches = {"z": jnp.ones((m, s, 2), jnp.float32)}
+    jaxpr = jax.make_jaxpr(rf)(state, batches)
+    assert _count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+
+
+# ---------------------------------------------------------------------------
+# FlatSpec round-trip
+# ---------------------------------------------------------------------------
+
+def test_flatspec_roundtrip_mixed_dtypes():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1.5, -2.0, 0.25], jnp.bfloat16),
+                  "d": jnp.asarray(2.5, jnp.float16)},
+            "e": jnp.ones((2, 1, 2), jnp.float32)}
+    spec = FlatSpec.from_tree(tree)
+    assert spec.size == 6 + 3 + 1 + 4 and spec.n_leaves == 4
+    flat = spec.flatten(tree)
+    assert flat.dtype == jnp.float32 and flat.shape == (spec.size,)
+    rt = spec.unflatten(flat)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(rt)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # stacked round-trip
+    m = 3
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x * (i + 1) for i in range(m)]), tree)
+    fs = spec.flatten_stacked(stacked)
+    assert fs.shape == (m, spec.size)
+    rts = spec.unflatten_stacked(fs)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(rts)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # zero-copy views line up with the unflattened leaves
+    for v, leaf in zip(spec.leaf_views(fs), jax.tree.leaves(stacked)):
+        assert v.shape == leaf.shape
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(leaf, np.float32))
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_flatspec_roundtrip_property(seed):
+    """flatten -> unflatten is the identity across random mixed
+    shapes/dtypes (values quantized to their own dtype first, so the f32
+    accumulation buffer holds them exactly)."""
+    rng = np.random.default_rng(seed)
+    dts = (jnp.float32, jnp.bfloat16, jnp.float16)
+    tree = {}
+    for i in range(int(rng.integers(1, 7))):
+        shape = tuple(int(rng.integers(1, 5))
+                      for _ in range(int(rng.integers(0, 4))))
+        dt = dts[int(rng.integers(0, len(dts)))]
+        tree[f"l{i}"] = jnp.asarray(
+            rng.normal(size=shape).astype(np.float32)).astype(dt)
+    spec = FlatSpec.from_tree(tree)
+    assert spec.size == sum(int(np.prod(l.shape))
+                            for l in jax.tree.leaves(tree))
+    rt = spec.unflatten(spec.flatten(tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(rt)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.echo_aggregate.kernel import echo_aggregate_pallas
 from repro.kernels.echo_aggregate.ops import echo_aggregate_tree
@@ -66,14 +65,14 @@ def test_echo_aggregate_tree_matches_strategy_path():
     mask = jnp.asarray(np.array([1, 0, 1, 1, 0, 1, 0, 1], np.float32))
     tau = jnp.asarray(np.array([0, 1, -1, 2, 0, 1, 2, 3], np.int32))
     t = jnp.asarray(4, jnp.int32)
+    global_tr = jax.tree.map(lambda x: x[0], tree)
     g_jnp, _, _, _ = _fedawe_aggregate(
-        global_tr=jax.tree.map(lambda x: x[0], tree), clients_tr=tree, G=G,
+        global_tr=global_tr, clients_tr=tree, G=G,
         mask=mask, t=t, tau=tau, probs=None, extra=(), eta_g=1.2,
         use_kernel=False)
     echo = (t - tau).astype(jnp.float32)
-    g_kern = echo_aggregate_tree(tree, jax.tree.map(
-        lambda g, m_=mask: g * m_.reshape((m,) + (1,) * (g.ndim - 1)), G),
-        mask, echo, 1.2)
+    x_end = jax.tree.map(lambda x, g: x - g, tree, G)
+    g_kern = echo_aggregate_tree(tree, x_end, mask, echo, 1.2, global_tr)
     for k in tree:
         np.testing.assert_allclose(np.asarray(g_jnp[k]),
                                    np.asarray(g_kern[k]), rtol=1e-4,

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+from _hyp import given, st
 
 from repro.core import FLConfig, init_fl_state
 from repro.core.mixing import (is_doubly_stochastic, lemma4_bound,

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.models.ssm import (conv1d_causal, conv1d_step, ssd_chunked,
                               ssd_decode_step, ssd_recurrence_ref)

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Record the kernel micro-bench trajectory.
+
+Runs ``benchmarks/run.py --quick --only kernels_bench`` in a subprocess and
+writes ``BENCH_kernels.json`` at the repo root: one entry per bench row
+(name -> us_per_call and the bench's derived ratio), plus the raw CSV for
+provenance. Run after perf-relevant changes so the trajectory stays
+populated:
+
+    python tools/bench_record.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _num(s):
+    try:
+        return float(s)
+    except ValueError:
+        return s  # e.g. an ERROR row's exception name
+
+
+def run_and_record(out_path=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (ROOT, os.path.join(ROOT, "src"),
+                    env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "benchmarks", "run.py"),
+         "--quick", "--only", "kernels_bench"],
+        capture_output=True, text=True, env=env, cwd=ROOT)
+    sys.stderr.write(proc.stderr)
+    rows = {}
+    for line in proc.stdout.splitlines():
+        line = line.strip()
+        if not line or line.startswith("name,") or line.startswith("#"):
+            continue
+        name, us, derived = line.split(",", 2)
+        rows[name] = {"us_per_call": _num(us), "derived": _num(derived)}
+    if proc.returncode != 0 or not rows:
+        sys.stderr.write(proc.stdout)
+        raise SystemExit(f"kernels_bench failed (rc={proc.returncode})")
+    out_path = out_path or os.path.join(ROOT, "BENCH_kernels.json")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    run_and_record(sys.argv[1] if len(sys.argv) > 1 else None)
