@@ -80,6 +80,91 @@ def _bench_tree_vs_flat(quick):
     ]
 
 
+def _bench_round_executor(quick):
+    """Rounds-per-second: host loop (one dispatch + host-sampled batch
+    upload + metrics sync per round) vs the scan-chunked executor
+    (engine.make_chunk_fn: K=16 rounds per dispatch, device-resident
+    sampling, donated FLState, one metrics fetch per chunk) — on the tiny
+    FL bench config, flat substrate and pytree state.  us_per_call is per
+    ROUND; derived is rounds/sec (higher = better)."""
+    from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                            make_round_fn, run_rounds)
+    from repro.data import FederatedDataset, make_device_sampler
+
+    # many clients, tiny model: the regime the chunked executor targets —
+    # host-side per-client sampling, upload, dispatch and metrics sync are
+    # the round cost, not the math
+    m, s, b, d, h, K = 128, 2, 4, 32, 16, 16
+    T = 32 if quick else 64
+    reps = 3
+    rng = np.random.default_rng(0)
+    n = 1024
+    arrays = dict(x=rng.normal(size=(n, d)).astype(np.float32),
+                  y=rng.integers(0, 10, n).astype(np.int32))
+    ds = FederatedDataset(arrays, [np.arange(i, n, m) for i in range(m)],
+                          seed=0)
+    store = ds.device_store()
+    sample_fn = make_device_sampler(m, s, b)
+    tr0 = dict(w1=jnp.asarray(rng.normal(size=(d, h)).astype(np.float32))
+               * 0.1,
+               b1=jnp.zeros((h,), jnp.float32),
+               w2=jnp.asarray(rng.normal(size=(h, 10)).astype(np.float32))
+               * 0.1)
+
+    def loss_fn(tr, frozen, batch, key):
+        z = jnp.maximum(batch["x"] @ tr["w1"] + tr["b1"], 0.0) @ tr["w2"]
+        lo = z - jax.scipy.special.logsumexp(z, axis=-1, keepdims=True)
+        return -jnp.mean(jnp.take_along_axis(lo, batch["y"][:, None],
+                                             axis=-1))
+
+    av = AvailabilityCfg(kind="sine", gamma=0.3)
+    base_p = jnp.full((m,), 0.6, jnp.float32)
+    data_key = jax.random.PRNGKey(7)
+
+    def run_exec(flat, chunked):
+        from repro.core import make_chunk_fn
+
+        cfg = FLConfig(m=m, s=s, eta_l=0.05, strategy="fedawe",
+                       lr_schedule=False, grad_clip=0.0, flat_state=flat)
+        rf = make_round_fn(cfg, loss_fn, {}, av, base_p)
+        # prebuilt executables so the timed runs measure steady-state
+        # dispatch, not compilation
+        rf_jit = jax.jit(rf)
+        chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K) if chunked else None
+
+        def batch_fn(t):
+            return {k: jnp.asarray(v)
+                    for k, v in ds.round_batches(t, s, b).items()}
+
+        def once(rounds):
+            state = init_fl_state(jax.random.PRNGKey(0), cfg, tr0)
+            if chunked:
+                return run_rounds(state, rf, None, rounds, chunk_rounds=K,
+                                  chunk_fn=chunk_fn, sample_fn=sample_fn,
+                                  store=store, data_key=data_key)
+            return run_rounds(state, rf_jit, batch_fn, rounds, jit=False)
+
+        once(K)                        # warmup: compile round/chunk
+        best = None
+        for _ in range(reps):          # min-of-reps filters machine load
+            t0 = time.time()
+            _, hist = once(T)
+            dt = time.time() - t0
+            assert len(hist) == T
+            best = dt if best is None else min(best, dt)
+        return best / T * 1e6          # us per round
+
+    rows = []
+    for flat, suffix in ((True, ""), (False, "_tree")):
+        t_host = run_exec(flat, chunked=False)
+        t_chunk = run_exec(flat, chunked=True)
+        rows.append((f"rounds_per_sec/host_loop{suffix}", round(t_host, 1),
+                     round(1e6 / t_host, 1)))
+        rows.append((f"rounds_per_sec/chunked{suffix}", round(t_chunk, 1),
+                     round(1e6 / t_chunk, 1)))
+    return rows
+
+
 def run(quick=False):
     rows = []
     m, N = 16, (1 << 20 if quick else 1 << 22)
@@ -103,6 +188,7 @@ def run(quick=False):
                  round(t_fused / t_naive, 3)))
 
     rows.extend(_bench_tree_vs_flat(quick))
+    rows.extend(_bench_round_executor(quick))
 
     # flash-style (chunked, O(L*S) streamed) vs full-materialization attention
     B, H, L, D = 1, 4, (512 if quick else 1024), 64

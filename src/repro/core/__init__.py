@@ -8,6 +8,7 @@ from repro.core.engine import (  # noqa: F401
     global_trainables,
     init_fl_state,
     local_sgd,
+    make_chunk_fn,
     make_round_fn,
     make_round_fn_with_frozen,
     run_rounds,

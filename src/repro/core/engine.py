@@ -19,6 +19,26 @@ fused ``aggregate_flat`` path — pytrees only reappear at the local-SGD entry
 and at eval/checkpoint boundaries (``global_trainables``). Stateless
 strategies keep no client stack at all; their local SGD starts from a
 broadcast *view* of the flat global instead of a materialized copy.
+
+Two executors drive the round function:
+
+  * host loop (``run_rounds`` default): one jitted dispatch per round,
+    batches sampled on the host and uploaded, one blocking metrics fetch
+    per round.  Simple, and the reference for parity tests.
+  * chunked executor (``make_chunk_fn`` / ``run_rounds(chunk_rounds=K)``):
+    K rounds execute inside a single jit as a ``jax.lax.scan``, so a chunk
+    costs exactly ONE dispatch.  ``donate_argnums`` on ``FLState`` aliases
+    the dominant ``[m, N]`` client stack (and every other state buffer)
+    input->output, so rounds update in place; batches are gathered on
+    device from a resident ``data.federated.device_store`` by a PRNG key
+    folded with the round counter (``fold_in(data_key, t)`` — a host loop
+    driven through the same sampler sees the identical stream, which is
+    how parity is tested); metrics come back stacked ``[K]`` and are
+    fetched with a single ``jax.device_get`` per chunk.  Optional
+    in/out shardings place the ``[m, N]`` stack over the ``('pod','data')``
+    mesh axes (sharding/rules.flat_pspecs) so the fused flat aggregation
+    lowers to the implicit-gossip all-reduce; eval/checkpoint align to
+    chunk boundaries.
 """
 from __future__ import annotations
 
@@ -59,23 +79,55 @@ class FLState(NamedTuple):
     spec: Any = None            # FlatSpec (static treedef metadata) or None
 
 
-def init_fl_state(rng, cfg: FLConfig, trainable_template) -> FLState:
+def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
+                  clients_sharding=None) -> FLState:
+    """``clients_sharding`` (a ``jax.sharding.Sharding``) places every
+    ``[m, N]`` buffer — the client stack and model-shaped strategy memory —
+    on its final sharding at birth (compiled broadcast straight into the
+    sharded layout) instead of materializing replicated and resharding."""
     strat = get_strategy(cfg.strategy)
     tau = jnp.full((cfg.m,), -1, jnp.int32)
     markov = jnp.ones((cfg.m,), jnp.float32)
     if cfg.flat_state:
         spec = FlatSpec.from_tree(trainable_template)
-        g = spec.flatten(trainable_template)
+        # copy=True: the state must own its buffers — flatten of a 1-leaf
+        # f32 tree is a no-op view of the template, and the chunked
+        # executor donates (invalidates) every state buffer
+        g = jnp.array(spec.flatten(trainable_template), copy=True)
         # stateless strategies never materialize the [m, N] client stack
-        clients = jnp.tile(g[None], (cfg.m, 1)) if strat.stateful_clients \
-            else None
-        extra = strat.init_extra(g, cfg.m)
+        clients = None
+        if strat.stateful_clients:
+            clients = jax.jit(
+                lambda gg: jnp.broadcast_to(gg[None], (cfg.m, spec.size)),
+                out_shardings=clients_sharding)(g)
+        if clients_sharding is not None and \
+                hasattr(clients_sharding, "mesh"):
+            # [m, N] strategy memory (MIFA/FedVARP) is also born on its
+            # final sharding — jit the init with per-leaf out_shardings
+            # (everything not stack-shaped stays replicated)
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            extra_sds = jax.eval_shape(
+                lambda gg: strat.init_extra(gg, cfg.m), g)
+            out_sh = jax.tree.map(
+                lambda sds: clients_sharding
+                if tuple(sds.shape) == (cfg.m, spec.size)
+                else NamedSharding(clients_sharding.mesh,
+                                   P(*([None] * len(sds.shape)))),
+                extra_sds)
+            extra = jax.jit(lambda gg: strat.init_extra(gg, cfg.m),
+                            out_shardings=out_sh)(g)
+        else:
+            extra = strat.init_extra(g, cfg.m)
         return FLState(g, clients, tau, jnp.zeros((), jnp.int32), extra,
                        markov, rng, spec)
     clients = tu.tree_broadcast(trainable_template, cfg.m)
     extra = strat.init_extra(trainable_template, cfg.m)
     return FLState(
-        global_tr=trainable_template,
+        # copy=True: the state owns its buffers (donation-safe) instead of
+        # aliasing the caller's template pytree
+        global_tr=jax.tree.map(lambda x: jnp.array(x, copy=True),
+                               trainable_template),
         clients_tr=clients,
         tau=tau,
         t=jnp.zeros((), jnp.int32),
@@ -216,23 +268,156 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
     return round_fn
 
 
-def run_rounds(state: FLState, round_fn, batch_fn, T, *, jit=True,
-               log_every=0, eval_fn=None, eval_every=0):
-    """Host loop: T rounds; batch_fn(t) -> batches [m, s, ...].
+def make_chunk_fn(cfg, round_fn, sample_fn, chunk_rounds, *,
+                  with_frozen=False, donate=True, jit=True,
+                  in_shardings=None, out_shardings=None):
+    """Chunked round executor: K = ``chunk_rounds`` rounds per dispatch.
 
-    Returns (state, history list of metric dicts)."""
+    Wraps ``round_fn`` in a ``jax.lax.scan`` inside a single jit with
+    ``donate_argnums`` on the ``FLState`` argument, so the dominant
+    ``[m, N]`` client stack (and the global, tau, strategy memory, ...)
+    is updated in place and a chunk costs exactly one dispatch.  Per
+    round, batches are gathered on device by
+    ``sample_fn(store, fold_in(data_key, state.t))`` (see
+    ``data.federated.make_device_sampler``) — keyed by the *global* round
+    counter, so a host loop driven through the same sampler and seeds
+    sees identical data.  Metrics come back stacked ``[K]`` per key.
+
+    Returned callable: ``chunk(state, store, data_key)`` — or
+    ``chunk(state, frozen, store, data_key)`` with ``with_frozen`` (pod
+    tier, FSDP-sharded bases stay runtime args) — returning
+    ``(state, metrics)``.
+
+    ``cfg`` is the ``FLConfig`` the round function was built from (kept for
+    signature symmetry with ``make_round_fn``; the executor itself is
+    config-agnostic).  ``in_shardings``/``out_shardings`` thread
+    ``NamedSharding`` pytrees through the jit so the flat ``[m, N]`` stack
+    stays on its ``('pod','data')`` placement and the fused aggregation
+    lowers to the implicit-gossip all-reduce (sharding/rules.flat_pspecs).
+    """
+    del cfg
+    K = int(chunk_rounds)
+    assert K >= 1, "chunk_rounds must be >= 1"
+
+    def _scan(state, frozen, store, data_key):
+        def body(st, _):
+            batches = sample_fn(store, jax.random.fold_in(data_key, st.t))
+            if with_frozen:
+                st, metrics = round_fn(st, frozen, batches)
+            else:
+                st, metrics = round_fn(st, batches)
+            return st, metrics
+
+        return jax.lax.scan(body, state, None, length=K)
+
+    if with_frozen:
+        def chunk(state, frozen, store, data_key):
+            return _scan(state, frozen, store, data_key)
+    else:
+        def chunk(state, store, data_key):
+            return _scan(state, None, store, data_key)
+
+    if not jit:
+        return chunk
+    kwargs = {}
+    if donate:
+        kwargs["donate_argnums"] = (0,)
+    if in_shardings is not None:
+        kwargs["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kwargs["out_shardings"] = out_shardings
+    return jax.jit(chunk, **kwargs)
+
+
+def run_rounds(state: FLState, round_fn, batch_fn, T, *, jit=True,
+               log_every=0, eval_fn=None, eval_every=0,
+               chunk_rounds=0, sample_fn=None, store=None, data_key=None,
+               chunk_fn=None, donate=True, ckpt_fn=None, ckpt_every=0):
+    """Run T rounds; returns (state, history list of metric dicts).
+
+    Host loop (default): one dispatch per round, ``batch_fn(t)`` batches,
+    and the whole metrics dict fetched with a single ``jax.device_get``
+    per round.
+
+    Chunked (``chunk_rounds=K > 0``): ``ceil(T / K)`` dispatches through
+    ``make_chunk_fn`` (a shorter final chunk covers ``T % K``), with
+    device-side sampling via ``sample_fn``/``store``/``data_key`` and one
+    metrics fetch per chunk.  ``eval_fn``/``ckpt_fn`` fire at the first
+    chunk boundary at or past each ``eval_every``/``ckpt_every`` multiple.
+    A prebuilt ``chunk_fn`` (e.g. with explicit shardings) is used for
+    full-K chunks when given.
+    """
+    if chunk_rounds:
+        return _run_rounds_chunked(
+            state, round_fn, T, chunk_rounds, sample_fn=sample_fn,
+            store=store, data_key=data_key, chunk_fn=chunk_fn, jit=jit,
+            donate=donate, log_every=log_every, eval_fn=eval_fn,
+            eval_every=eval_every, ckpt_fn=ckpt_fn, ckpt_every=ckpt_every)
+
     f = jax.jit(round_fn) if jit else round_fn
     history = []
     for t in range(T):
         batches = batch_fn(t)
         state, metrics = f(state, batches)
-        rec = {k: float(v) for k, v in metrics.items()}
+        # one host sync for the whole dict (not one float(v) per key)
+        rec = {k: float(v) for k, v in jax.device_get(metrics).items()}
         rec["t"] = t
         if eval_fn is not None and eval_every and (t + 1) % eval_every == 0:
             rec.update(eval_fn(state))
         history.append(rec)
+        if ckpt_fn is not None and ckpt_every and (t + 1) % ckpt_every == 0:
+            ckpt_fn(state, t + 1)
         if log_every and (t + 1) % log_every == 0:
             print(f"[round {t+1:5d}] " +
                   " ".join(f"{k}={v:.4f}" for k, v in rec.items()
                            if k != "t"))
+    return state, history
+
+
+def _crossed(done, k, every):
+    """Did [done-k, done] cross a multiple of ``every``?"""
+    return every and (done // every) > ((done - k) // every)
+
+
+def _run_rounds_chunked(state, round_fn, T, K, *, sample_fn, store, data_key,
+                        chunk_fn, jit, donate, log_every, eval_fn,
+                        eval_every, ckpt_fn, ckpt_every):
+    assert data_key is not None, "chunked executor needs a data PRNG key"
+    if chunk_fn is None or T % K:
+        # a T % K tail executor is always built here from round_fn — note
+        # it carries no custom shardings, so prebuilt sharded chunk_fns
+        # should run with T a multiple of K
+        assert sample_fn is not None, (
+            "chunked executor needs sample_fn to build the chunk "
+            "executor and any T % chunk_rounds tail")
+    if chunk_fn is None:
+        chunk_fn = make_chunk_fn(None, round_fn, sample_fn, K,
+                                 donate=donate, jit=jit)
+    tail_fn = None
+    history, done = [], 0
+    while done < T:
+        k = min(K, T - done)
+        if k == K:
+            f = chunk_fn
+        else:
+            if tail_fn is None:
+                tail_fn = make_chunk_fn(None, round_fn, sample_fn, k,
+                                        donate=donate, jit=jit)
+            f = tail_fn
+        state, metrics = f(state, store, data_key)
+        metrics = jax.device_get(metrics)  # ONE host sync per chunk
+        for j in range(k):
+            rec = {key: float(v[j]) for key, v in metrics.items()}
+            rec["t"] = done + j
+            history.append(rec)
+        done += k
+        if eval_fn is not None and _crossed(done, k, eval_every):
+            history[-1].update(eval_fn(state))
+        if ckpt_fn is not None and _crossed(done, k, ckpt_every):
+            ckpt_fn(state, done)
+        if _crossed(done, k, log_every):
+            rec = history[-1]
+            print(f"[round {done:5d}] " +
+                  " ".join(f"{key}={v:.4f}" for key, v in rec.items()
+                           if key != "t"))
     return state, history

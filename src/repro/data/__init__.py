@@ -5,4 +5,9 @@ from repro.data.synthetic import (  # noqa: F401
     make_image_classification,
     make_lm_tokens,
 )
-from repro.data.federated import FederatedDataset  # noqa: F401
+from repro.data.federated import (  # noqa: F401
+    FederatedDataset,
+    device_store,
+    make_device_sampler,
+    padded_client_index,
+)

@@ -3,6 +3,21 @@
 The round engine consumes one fresh minibatch per local step (the paper's
 setting: each local update uses an independent stochastic sample), so a
 round batch has leading dims [clients, local_steps, batch].
+
+Two sampling paths:
+
+  * ``round_batches`` — the host path: numpy RNG picks indices per client
+    and materializes the round batch in host memory (one upload per round).
+  * ``device_store`` + ``make_device_sampler`` — the chunked-executor path:
+    the backing arrays and a padded ``[m, cap]`` per-client index matrix
+    live on device, and sampling is a pure-jax gather driven by a PRNG key,
+    so it traces inside the multi-round ``lax.scan`` of
+    ``engine.make_chunk_fn`` and no per-round host->device transfer ever
+    happens.  The sampler is keyed by ``fold_in(data_key, t)``, so a host
+    loop whose ``batch_fn`` is driven through the same sampler sees the
+    stream a chunked run sees (how the parity tests pin down
+    equivalence); ``launch/train.py``'s host path keeps the numpy
+    ``round_batches`` sampler, whose stream is different.
 """
 from __future__ import annotations
 
@@ -37,3 +52,76 @@ class FederatedDataset:
         all_idx = np.concatenate(self.client_indices)
         pick = rng.choice(all_idx, size=min(n, len(all_idx)), replace=False)
         return {k: v[pick] for k, v in self.arrays.items()}
+
+    def device_store(self, shardings=None):
+        """Device-resident store for on-device sampling: see module-level
+        ``device_store``."""
+        return device_store(self.arrays, self.client_indices,
+                            shardings=shardings)
+
+
+def padded_client_index(client_indices) -> Dict[str, np.ndarray]:
+    """Ragged per-client shards -> dense ``idx [m, cap] int32`` (rows padded
+    by repeating the first element — never sampled past ``counts``) plus
+    ``counts [m] int32``."""
+    m = len(client_indices)
+    counts = np.asarray([len(ix) for ix in client_indices], np.int32)
+    assert counts.min() > 0, "every client needs at least one sample"
+    cap = int(counts.max())
+    idx = np.empty((m, cap), np.int32)
+    for i, ix in enumerate(client_indices):
+        idx[i, :len(ix)] = np.asarray(ix, np.int32)
+        idx[i, len(ix):] = np.int32(ix[0])
+    return dict(idx=idx, counts=counts)
+
+
+def device_store(arrays: Dict[str, np.ndarray], client_indices,
+                 shardings=None):
+    """Build the on-device store pytree consumed by ``make_device_sampler``:
+
+      {'arrays': {k: [n, ...]}, 'idx': [m, cap] i32, 'counts': [m] i32}
+
+    ``shardings``, when given, is a dict with optional ``'client'`` (for the
+    [m, ...] index matrix and counts) and ``'data'`` (for the backing
+    arrays) placements so the store is born on its final sharding.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    pad = padded_client_index(client_indices)
+    cs = (shardings or {}).get("client")
+    ds = (shardings or {}).get("data")
+
+    def put(x, s):
+        return jax.device_put(x, s) if s is not None else jnp.asarray(x)
+
+    return dict(
+        arrays={k: put(np.asarray(v), ds) for k, v in arrays.items()},
+        idx=put(pad["idx"], cs),
+        counts=put(pad["counts"], cs),
+    )
+
+
+def make_device_sampler(m: int, s: int, b: int):
+    """Pure-jax round-batch sampler over a ``device_store`` pytree.
+
+    Returns ``sample(store, key) -> {k: [m, s, b, ...]}``: per-client uniform
+    draws with replacement (matching ``round_batches``' distribution), as one
+    gather from the device-resident arrays — traceable inside ``lax.scan``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def sample(store, key):
+        counts = store["counts"].astype(jnp.float32)  # [m]
+        u = jax.random.uniform(key, (m, s * b))
+        # floor(u * count) clamped: u*count can round up to count in f32
+        r = jnp.minimum((u * counts[:, None]).astype(jnp.int32),
+                        store["counts"][:, None] - 1)
+        rows = jnp.take_along_axis(store["idx"], r, axis=1)  # [m, s*b]
+        flat = rows.reshape(-1)
+        return {k: jnp.take(v, flat, axis=0).reshape(
+                    (m, s, b) + v.shape[1:])
+                for k, v in store["arrays"].items()}
+
+    return sample

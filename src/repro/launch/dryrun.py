@@ -29,14 +29,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, supported_shapes
 from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
-                        make_round_fn_with_frozen)
+                        make_chunk_fn, make_round_fn_with_frozen)
+from repro.data import make_device_sampler
 from repro.launch import analysis
 from repro.launch.mesh import make_production_mesh, make_test_mesh, n_chips
 from repro.models import (init_cache, init_params, lm_loss, merge_trainable,
                           split_trainable)
 from repro.models.model import prefill, serve_step
 from repro.sharding import (batch_pspecs, cache_pspecs, client_stack_pspecs,
-                            param_pspecs, serve_batch_pspecs)
+                            flat_pspecs, param_pspecs, serve_batch_pspecs)
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -156,6 +157,73 @@ def build_train_step(cfg, shape, mesh, multi_pod, variant="baseline"):
     return fn, (state_sds, frozen_sds, batch_sds)
 
 
+def _chunk_k(variant):
+    """'flat_chunk' -> 8 rounds per dispatch; 'flat_chunk<K>' -> K."""
+    for tok in variant.split("+"):
+        if tok.startswith("flat_chunk"):
+            return int(tok[len("flat_chunk"):] or 8)
+    return 0
+
+
+def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
+    """The donated, sharded, scan-chunked round executor on the flat
+    substrate: K FedAWE rounds per dispatch, the [m, N] client stack over
+    ('pod','data') (flat_pspecs) and donated in->out, batches gathered on
+    device from a resident store inside the scan."""
+    K = _chunk_k(variant)
+    m = fl_clients(mesh)
+    b = max(1, shape.global_batch // m)
+    s = cfg.local_steps
+    fl = FLConfig(m=m, s=s, eta_l=0.01, eta_g=1.0, strategy="fedawe",
+                  lr_schedule=False, grad_clip=0.0, flat_state=True)
+    params_sds = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    trainable_sds, frozen_sds = split_trainable(params_sds, cfg)
+
+    def loss_fn(tr, fz, batch, rng):
+        return lm_loss(merge_trainable(tr, fz, cfg), cfg, batch)
+
+    av = AvailabilityCfg(kind="sine", gamma=0.3, period=20)
+    base_p = jnp.full((m,), 0.5, F32)
+    round_fn = make_round_fn_with_frozen(fl, loss_fn, av, base_p)
+    sample_fn = make_device_sampler(m, s, b)
+
+    state_sds = jax.eval_shape(
+        lambda tr: init_fl_state(jax.random.PRNGKey(0), fl, tr),
+        trainable_sds)
+
+    # device-resident store: per-sample arrays (drop the [m, s, b] lead of
+    # the round-batch spec), a padded per-client index matrix, counts
+    cap = 4                       # samples per client in the dry-run store
+    n = m * cap
+    batch_sds = train_input_specs(cfg, shape, m)
+    store_sds = dict(
+        arrays={k: _sds((n,) + v.shape[3:], v.dtype)
+                for k, v in batch_sds.items()},
+        idx=_sds((m, cap), I32),
+        counts=_sds((m,), I32),
+    )
+    key_sds = _sds((2,), jnp.uint32)
+
+    ca = ("pod", "data") if multi_pod else ("data",)
+    state_spec = flat_pspecs(mesh, state_sds, multi_pod=multi_pod)
+    frozen_spec = param_pspecs(cfg, mesh, frozen_sds, fsdp=True)
+    store_spec = dict(
+        arrays=jax.tree.map(lambda v: P(*([None] * len(v.shape))),
+                            store_sds["arrays"]),
+        idx=P(ca, None),
+        counts=P(ca),
+    )
+    metrics_spec = dict(loss=P(None), n_active=P(None), mean_echo=P(None))
+
+    fn = make_chunk_fn(
+        fl, round_fn, sample_fn, K, with_frozen=True, donate=True,
+        in_shardings=(_ns(mesh, state_spec), _ns(mesh, frozen_spec),
+                      _ns(mesh, store_spec), NamedSharding(mesh, P(None))),
+        out_shardings=(_ns(mesh, state_spec), _ns(mesh, metrics_spec)))
+    return fn, (state_sds, frozen_sds, store_sds, key_sds)
+
+
 def build_prefill_step(cfg, shape, mesh, variant="baseline"):
     B = shape.global_batch
     params_sds = jax.eval_shape(
@@ -226,12 +294,18 @@ def run_one(arch, shape_name, mesh_kind, *, test_mesh=False, verbose=True,
     try:
         with mesh:
             if shape.kind == "train":
-                fn, args = build_train_step(cfg, shape, mesh, multi_pod,
-                                            variant=variant)
+                K = _chunk_k(variant)
+                if K:
+                    fn, args = build_chunk_train_step(cfg, shape, mesh,
+                                                      multi_pod, variant)
+                    rec["chunk_rounds"] = K
+                else:
+                    fn, args = build_train_step(cfg, shape, mesh, multi_pod,
+                                                variant=variant)
                 rec["clients"] = fl_clients(mesh)
                 toks = (fl_clients(mesh) * cfg.local_steps
                         * max(1, shape.global_batch // fl_clients(mesh))
-                        * shape.seq_len)
+                        * shape.seq_len) * max(1, K)
                 rec["model_flops"] = analysis.model_flops(cfg, toks, "train")
             elif shape.kind == "prefill":
                 fn, args = build_prefill_step(cfg, shape, mesh,
@@ -272,6 +346,11 @@ def run_one(arch, shape_name, mesh_kind, *, test_mesh=False, verbose=True,
             from repro.launch import roofline as rl
             ax = dict(zip(mesh.axis_names, mesh.devices.shape))
             ana = rl.analytic_costs(cfg, shape, ax)
+            if shape.kind == "train" and _chunk_k(variant):
+                # analytic model is per round; a chunked dispatch covers K
+                ana = {k: v * _chunk_k(variant)
+                       if isinstance(v, (int, float)) else v
+                       for k, v in ana.items()}
             # baseline: cross-check analytic vs measured; variants change
             # the collective schedule, so trust the (trip-count-corrected)
             # HLO measurement alone there.
@@ -316,7 +395,9 @@ def main():
     ap.add_argument("--skip-done", action="store_true")
     ap.add_argument("--variant", default="baseline",
                     help="'+'-joined §Perf knobs: dp_client, moe_hint, "
-                         "dots_remat, seq_shard")
+                         "dots_remat, seq_shard, flat_chunk[K] (donated "
+                         "scan-chunked flat-substrate executor, K rounds "
+                         "per dispatch)")
     args = ap.parse_args()
 
     results = []

@@ -25,7 +25,7 @@ from repro.core import (AvailabilityCfg, FLConfig, base_probs,
                         run_rounds)
 from repro.core.availability import base_probs_from_data
 from repro.data import FederatedDataset, dirichlet_partition, \
-    make_image_classification, make_lm_tokens
+    make_device_sampler, make_image_classification, make_lm_tokens
 from repro.models import cnn
 from repro.models.config import BlockCfg, ModelConfig
 from repro.models import init_params, lm_loss
@@ -106,9 +106,15 @@ def main(argv=None):
     ap.add_argument("--flat-state", action="store_true",
                     help="flat [m, N] client-state substrate "
                          "(single-launch fused aggregation)")
+    ap.add_argument("--chunk-rounds", type=int, default=0,
+                    help="K>0: scan-chunked executor — K rounds per "
+                         "dispatch, device-resident batch sampling, "
+                         "donated FLState, eval/ckpt at chunk boundaries")
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="overwrite --ckpt every N rounds (chunk-aligned)")
     args = ap.parse_args(argv)
 
     rng = jax.random.PRNGKey(args.seed)
@@ -122,13 +128,33 @@ def main(argv=None):
     state = init_fl_state(rng, fl, params)
     round_fn = make_round_fn(fl, loss_fn, {}, av, base_p)
 
-    def batch_fn(t):
-        return {k: jnp.asarray(v)
-                for k, v in ds.round_batches(t, args.s, args.batch).items()}
+    ckpt_fn = None
+    if args.ckpt and args.ckpt_every:
+        def ckpt_fn(st, t):
+            save_fl_state(args.ckpt, st, round_t=t)
 
-    state, hist = run_rounds(state, round_fn, batch_fn, args.rounds,
-                             log_every=max(1, args.rounds // 10),
-                             eval_fn=eval_fn, eval_every=args.eval_every)
+    if args.chunk_rounds:
+        # scan-chunked executor: the dataset lives on device and every
+        # K-round chunk is a single dispatch (one metrics fetch per chunk)
+        store = ds.device_store()
+        sample_fn = make_device_sampler(args.m, args.s, args.batch)
+        state, hist = run_rounds(
+            state, round_fn, None, args.rounds,
+            chunk_rounds=args.chunk_rounds, sample_fn=sample_fn,
+            store=store, data_key=jax.random.PRNGKey(args.seed + 1),
+            log_every=max(1, args.rounds // 10),
+            eval_fn=eval_fn, eval_every=args.eval_every,
+            ckpt_fn=ckpt_fn, ckpt_every=args.ckpt_every)
+    else:
+        def batch_fn(t):
+            return {k: jnp.asarray(v)
+                    for k, v in ds.round_batches(t, args.s,
+                                                 args.batch).items()}
+
+        state, hist = run_rounds(state, round_fn, batch_fn, args.rounds,
+                                 log_every=max(1, args.rounds // 10),
+                                 eval_fn=eval_fn, eval_every=args.eval_every,
+                                 ckpt_fn=ckpt_fn, ckpt_every=args.ckpt_every)
     final = eval_fn(state)
     print("final:", final)
     if args.out:

@@ -2,6 +2,7 @@ from repro.sharding.rules import (  # noqa: F401
     batch_pspecs,
     cache_pspecs,
     client_stack_pspecs,
+    flat_pspecs,
     param_pspecs,
     serve_batch_pspecs,
 )

@@ -122,7 +122,7 @@ def client_stack_pspecs(cfg, mesh, trainable_shape, *, multi_pod=False,
                         mode="tp"):
     """Client-stacked trainables: leading client axis over ('pod','data')."""
     ax = _axis_sizes(mesh)
-    client_axes = ("pod", "data") if (multi_pod and "pod" in ax) else ("data",)
+    client_axes = _client_axes(ax, multi_pod)
     base = param_pspecs(cfg, mesh, trainable_shape, mode=mode)
 
     def add_client(spec_leaf):
@@ -132,11 +132,55 @@ def client_stack_pspecs(cfg, mesh, trainable_shape, *, multi_pod=False,
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def _client_axes(ax, multi_pod):
+    return ("pod", "data") if (multi_pod and "pod" in ax) else ("data",)
+
+
+def flat_pspecs(mesh, state_sds, *, multi_pod=False):
+    """FLState-shaped PartitionSpec tree for the flat substrate.
+
+    The dominant [m, N] buffers — the client stack and any model-shaped
+    strategy memory (MIFA/FedVARP) — shard their client axis over
+    ('pod','data'); the [N] global (and [N] server memory like FedAWE-M's
+    velocity) stays replicated so the fused flat aggregation lowers to the
+    implicit-gossip all-reduce; per-client [m] vectors (tau, markov,
+    scalar strategy statistics) follow the client axis.
+
+    ``state_sds``: ``jax.eval_shape`` of ``init_fl_state`` with
+    ``flat_state=True``.  Returns a pytree with the same treedef (the
+    static ``spec`` metadata rides along unchanged), ready for
+    ``NamedSharding`` wrapping as the chunk jit's in/out shardings.
+    """
+    ax = _axis_sizes(mesh)
+    ca = _client_axes(ax, multi_pod)
+    m = int(state_sds.tau.shape[0])
+
+    def leaf(x):
+        shape = tuple(int(d) for d in x.shape)
+        if len(shape) == 2 and shape[0] == m:
+            return P(ca, None)           # [m, N] client-stacked
+        if shape == (m,):
+            return P(ca)                 # per-client vector
+        return P(*([None] * len(shape)))  # global [N] / scalars / rng
+
+    return type(state_sds)(
+        global_tr=P(None),
+        clients_tr=(None if state_sds.clients_tr is None
+                    else P(ca, None)),
+        tau=P(ca),
+        t=P(),
+        extra=jax.tree.map(leaf, state_sds.extra),
+        markov=P(ca),
+        rng=P(None),
+        spec=state_sds.spec,
+    )
+
+
 def batch_pspecs(mesh, batches_shape, *, multi_pod=False, mode="tp"):
     """FL round batches [m, s, b, ...] -> client axis sharded; in 'dp' mode
     the within-client batch dim additionally takes the 'model' axis."""
     ax = _axis_sizes(mesh)
-    client_axes = ("pod", "data") if (multi_pod and "pod" in ax) else ("data",)
+    client_axes = _client_axes(ax, multi_pod)
     md = ax.get("model", 1)
 
     def f(leaf):

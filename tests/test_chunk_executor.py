@@ -1,0 +1,297 @@
+"""Chunked round executor (engine.make_chunk_fn / run_rounds chunk mode).
+
+Guarantees under test:
+  * parity — for every strategy in REGISTRY, flat and tree substrate,
+    kernel on/off: K-rounds-per-dispatch execution with device-resident
+    sampling produces the same FLState and per-round metrics as the host
+    loop driven by the identical sampler stream (same seeds).
+  * one dispatch per chunk — a T-round run at chunk_rounds=K issues
+    exactly ceil(T/K) calls into the chunk executable, and the chunk
+    traces to a single top-level scan of length K.
+  * donation — the chunk executable aliases the dominant [m, N] client
+    stack (and the rest of FLState) input->output.
+  * the device sampler draws only from each client's own shard.
+  * flat_pspecs shards the [m, N] client axis and replicates the global.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (REGISTRY, AvailabilityCfg, FLConfig, init_fl_state,
+                        make_chunk_fn, make_round_fn, run_rounds)
+from repro.data import FederatedDataset, device_store, make_device_sampler
+
+M, S, B, DIM = 6, 3, 4, 4
+
+
+def _problem(seed=0):
+    rng = np.random.default_rng(seed)
+    n = 48
+    arrays = dict(x=rng.normal(size=(n, DIM)).astype(np.float32),
+                  y=rng.normal(size=(n, DIM)).astype(np.float32))
+    idx = [np.arange(i, n, M) for i in range(M)]
+    return device_store(arrays, idx), make_device_sampler(M, S, B)
+
+
+def _loss_fn(tr, frozen, batch, rng):
+    return (0.5 * jnp.mean((batch["x"] @ tr["w"] - batch["y"]) ** 2)
+            + jnp.sum(tr["b"] ** 2))
+
+
+def _tr0():
+    return {"w": jnp.ones((DIM, DIM)) * 0.1, "b": jnp.zeros((7,))}
+
+
+def _run(strategy, *, flat, chunk, use_kernel=False, T=6, K=4, base_p=0.6):
+    store, sample_fn = _problem()
+    cfg = FLConfig(m=M, s=S, eta_l=0.03, strategy=strategy,
+                   lr_schedule=False, grad_clip=0.0, use_kernel=use_kernel,
+                   flat_state=flat)
+    av = AvailabilityCfg(kind="sine", gamma=0.3)
+    rf = make_round_fn(cfg, _loss_fn, {}, av, jnp.full((M,), base_p))
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
+    data_key = jax.random.PRNGKey(42)
+    if chunk:
+        return run_rounds(state, rf, None, T, chunk_rounds=K,
+                          sample_fn=sample_fn, store=store,
+                          data_key=data_key)
+    # host loop over the SAME device-sampler stream (fold_in by round t)
+    return run_rounds(
+        state, rf,
+        lambda t: sample_fn(store, jax.random.fold_in(data_key, t)), T)
+
+
+def _assert_same(s_host, s_chunk, h_host, h_chunk):
+    for a, b in zip(jax.tree.leaves(s_host._replace(spec=None)),
+                    jax.tree.leaves(s_chunk._replace(spec=None))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    assert len(h_host) == len(h_chunk)
+    for rh, rc in zip(h_host, h_chunk):
+        assert set(rh) == set(rc)
+        for k in rh:
+            np.testing.assert_allclose(rh[k], rc[k], rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("flat", [False, True])
+@pytest.mark.parametrize("strategy", sorted(REGISTRY))
+def test_chunked_matches_host_loop(strategy, flat):
+    """T=6 at K=4 also exercises the shorter tail chunk (4 + 2)."""
+    s_h, h_h = _run(strategy, flat=flat, chunk=False)
+    s_c, h_c = _run(strategy, flat=flat, chunk=True)
+    _assert_same(s_h, s_c, h_h, h_c)
+
+
+@pytest.mark.parametrize("flat", [False, True])
+@pytest.mark.parametrize("strategy", ["fedawe", "fedawe_m"])
+def test_chunked_matches_host_loop_kernel(strategy, flat):
+    s_h, h_h = _run(strategy, flat=flat, chunk=False, use_kernel=True)
+    s_c, h_c = _run(strategy, flat=flat, chunk=True, use_kernel=True)
+    _assert_same(s_h, s_c, h_h, h_c)
+
+
+# ---------------------------------------------------------------------------
+# one dispatch per chunk
+# ---------------------------------------------------------------------------
+
+def _chunk_parts(flat=True, K=4):
+    store, sample_fn = _problem()
+    cfg = FLConfig(m=M, s=S, eta_l=0.03, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0, flat_state=flat)
+    av = AvailabilityCfg(kind="sine", gamma=0.3)
+    rf = make_round_fn(cfg, _loss_fn, {}, av, jnp.full((M,), 0.6))
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
+    return cfg, rf, sample_fn, store, state
+
+
+def test_chunk_is_one_dispatch_per_k_rounds():
+    K, T = 4, 12
+    cfg, rf, sample_fn, store, state = _chunk_parts(K=K)
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    calls = []
+
+    def counting_chunk(st, sto, key):
+        calls.append(1)
+        return chunk_fn(st, sto, key)
+
+    state, hist = run_rounds(state, rf, None, T, chunk_rounds=K,
+                             chunk_fn=counting_chunk, sample_fn=sample_fn,
+                             store=store, data_key=jax.random.PRNGKey(1))
+    assert len(calls) == T // K          # exactly one dispatch per chunk
+    assert len(hist) == T
+    assert [r["t"] for r in hist] == list(range(T))
+    assert int(state.t) == T
+
+
+def test_chunk_traces_to_single_scan_of_length_k():
+    K = 5
+    cfg, rf, sample_fn, store, state = _chunk_parts(K=K)
+    chunk = make_chunk_fn(cfg, rf, sample_fn, K, jit=False)
+    jaxpr = jax.make_jaxpr(chunk)(state, store, jax.random.PRNGKey(1))
+    scans = [eq for eq in jaxpr.jaxpr.eqns if eq.primitive.name == "scan"]
+    assert len(scans) == 1, "chunk must be one top-level scan"
+    assert scans[0].params["length"] == K
+    # metrics come back stacked [K]
+    _, metrics = chunk(state, store, jax.random.PRNGKey(1))
+    assert all(v.shape == (K,) for v in metrics.values())
+
+
+# ---------------------------------------------------------------------------
+# donation: the [m, N] stack is aliased input -> output
+# ---------------------------------------------------------------------------
+
+def test_chunk_donates_client_stack():
+    K = 3
+    cfg, rf, sample_fn, store, state = _chunk_parts(K=K)
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    key = jax.random.PRNGKey(1)
+    lowered = chunk_fn.lower(state, store, key)
+    # the jit-level donation request on the FLState argument...
+    assert "tf.aliasing_output" in lowered.as_text()
+    # ...is honored by the compiler: the aliased bytes cover at least the
+    # dominant [m, N] client stack (plus the [N] global)
+    mem = lowered.compile().memory_analysis()
+    m, n = state.clients_tr.shape
+    assert mem.alias_size_in_bytes >= (m + 1) * n * 4
+    # and a donated input is actually consumed on this backend
+    state2, _ = chunk_fn(state, store, key)
+    assert state.clients_tr.is_deleted()
+    assert not state2.clients_tr.is_deleted()
+
+
+def test_undonated_chunk_keeps_input_alive():
+    cfg, rf, sample_fn, store, state = _chunk_parts(K=2)
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, 2, donate=False)
+    chunk_fn(state, store, jax.random.PRNGKey(1))
+    assert not state.clients_tr.is_deleted()
+
+
+# ---------------------------------------------------------------------------
+# device sampler
+# ---------------------------------------------------------------------------
+
+def test_device_sampler_respects_client_shards():
+    """Client i's store rows carry the value i; every sampled element must
+    equal its row's client id, across ragged shard sizes."""
+    m, s, b = 5, 2, 3
+    sizes = [1, 2, 3, 5, 8]
+    n = sum(sizes)
+    owner = np.concatenate([np.full(k, i) for i, k in enumerate(sizes)])
+    arrays = dict(x=owner.astype(np.float32)[:, None],
+                  y=owner.astype(np.int32))
+    idx, off = [], 0
+    for k in sizes:
+        idx.append(np.arange(off, off + k))
+        off += k
+    store = device_store(arrays, idx)
+    sample = make_device_sampler(m, s, b)
+    for seed in range(5):
+        batch = sample(store, jax.random.PRNGKey(seed))
+        assert batch["x"].shape == (m, s, b, 1)
+        assert batch["y"].shape == (m, s, b)
+        assert batch["x"].dtype == jnp.float32
+        assert batch["y"].dtype == jnp.int32
+        want = np.broadcast_to(np.arange(m)[:, None, None], (m, s, b))
+        np.testing.assert_array_equal(np.asarray(batch["y"]), want)
+
+
+def test_device_sampler_matches_federated_dataset_shapes():
+    rng = np.random.default_rng(0)
+    arrays = dict(images=rng.normal(size=(40, 8, 8, 1)).astype(np.float32),
+                  labels=rng.integers(0, 10, 40).astype(np.int32))
+    idx = [np.arange(i, 40, 4) for i in range(4)]
+    ds = FederatedDataset(arrays, idx, seed=0)
+    host = ds.round_batches(0, 3, 2)
+    dev = make_device_sampler(4, 3, 2)(ds.device_store(),
+                                       jax.random.PRNGKey(0))
+    assert set(host) == set(dev)
+    for k in host:
+        assert host[k].shape == dev[k].shape
+        assert host[k].dtype == np.asarray(dev[k]).dtype
+
+
+# ---------------------------------------------------------------------------
+# flat_pspecs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["fedawe", "mifa", "fedawe_m", "fedau"])
+def test_flat_pspecs_layout(strategy):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import flat_pspecs
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = FLConfig(m=M, s=S, strategy=strategy, flat_state=True)
+    state_sds = jax.eval_shape(
+        lambda tr: init_fl_state(jax.random.PRNGKey(0), cfg, tr), _tr0())
+    spec = flat_pspecs(mesh, state_sds)
+    assert spec.global_tr == P(None)
+    if state_sds.clients_tr is not None:
+        assert spec.clients_tr == P(("data",), None)
+    assert spec.tau == P(("data",)) and spec.markov == P(("data",))
+    assert spec.t == P()
+    n = state_sds.global_tr.shape[0]
+    for sds_leaf, spec_leaf in zip(jax.tree.leaves(state_sds.extra),
+                                   jax.tree.leaves(spec.extra)):
+        if sds_leaf.shape == (M, n):        # MIFA/FedVARP memory
+            assert spec_leaf == P(("data",), None)
+        elif sds_leaf.shape == (M,):        # per-client statistics
+            assert spec_leaf == P(("data",))
+        elif sds_leaf.shape == (n,):        # FedAWE-M velocity
+            assert spec_leaf == P(None)
+        else:
+            assert spec_leaf == P()
+    # the spec tree matches the state treedef -> usable as jit shardings
+    assert jax.tree.structure(spec, is_leaf=lambda x: isinstance(x, P)) \
+        == jax.tree.structure(
+            jax.tree.map(lambda x: object(), state_sds))
+
+
+@pytest.mark.parametrize("strategy", ["fedawe", "mifa", "fedvarp"])
+def test_init_state_born_on_clients_sharding(strategy):
+    """The [m, N] client stack AND stack-shaped strategy memory come out
+    of init_fl_state already placed on clients_sharding."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ns = NamedSharding(mesh, P(("data",), None))
+    cfg = FLConfig(m=4, s=2, strategy=strategy, flat_state=True)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0(),
+                          clients_sharding=ns)
+    stacks = [v for v in jax.tree.leaves(state.extra) if v.ndim == 2]
+    if state.clients_tr is not None:
+        stacks.append(state.clients_tr)
+    assert stacks, "expected at least one [m, N] buffer"
+    for x in stacks:
+        assert x.shape == (4, state.global_tr.shape[0])
+        assert x.sharding.is_equivalent_to(ns, x.ndim)
+
+
+# ---------------------------------------------------------------------------
+# init_fl_state owns its buffers (donation safety)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("flat", [False, True])
+def test_init_state_does_not_alias_template(flat):
+    """Donating the state must never invalidate the caller's template —
+    regression test for the 1-leaf flatten-is-a-view / tree-path-aliasing
+    case."""
+    template = {"w": jnp.ones((3, 3))}  # single leaf: flatten would view
+    cfg = FLConfig(m=4, s=2, strategy="fedawe", flat_state=flat)
+    rng = np.random.default_rng(0)
+    store = device_store(dict(x=rng.normal(size=(16, 2)).astype(np.float32)),
+                         [np.arange(i, 16, 4) for i in range(4)])
+    sample_fn = make_device_sampler(4, 2, B)
+
+    def loss(tr, frozen, batch, rng):
+        return jnp.sum(tr["w"] ** 2) * jnp.mean(batch["x"])
+
+    rf = make_round_fn(cfg, loss, {}, AvailabilityCfg(kind="sine"),
+                       jnp.full((4,), 0.6))
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, template)
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, 2)
+    chunk_fn(state, store, jax.random.PRNGKey(1))
+    assert not template["w"].is_deleted()
+    np.testing.assert_array_equal(np.asarray(template["w"]), np.ones((3, 3)))

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Record the kernel micro-bench trajectory.
+"""Record (and guard) the kernel micro-bench trajectory.
 
 Runs ``benchmarks/run.py --quick --only kernels_bench`` in a subprocess and
 writes ``BENCH_kernels.json`` at the repo root: one entry per bench row
@@ -7,16 +7,28 @@ writes ``BENCH_kernels.json`` at the repo root: one entry per bench row
 provenance. Run after perf-relevant changes so the trajectory stays
 populated:
 
-    python tools/bench_record.py
+    python tools/bench_record.py                 # record to BENCH_kernels.json
+    python tools/bench_record.py --out other.json
+
+``--check`` turns this into a perf gate: instead of overwriting, the fresh
+measurement is compared row-by-row against the committed baseline (or
+``--baseline PATH``) and the process exits non-zero when any row's
+us_per_call regressed by more than ``--threshold`` (default 25%) — so the
+rounds_per_sec/{host_loop,chunked} executor numbers and the kernel
+micro-benches are guarded:
+
+    python tools/bench_record.py --check
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_kernels.json")
 
 
 def _num(s):
@@ -26,7 +38,9 @@ def _num(s):
         return s  # e.g. an ERROR row's exception name
 
 
-def run_and_record(out_path=None):
+def measure():
+    """Run the kernels bench subprocess; returns {name: {us_per_call,
+    derived}}."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (ROOT, os.path.join(ROOT, "src"),
@@ -46,7 +60,12 @@ def run_and_record(out_path=None):
     if proc.returncode != 0 or not rows:
         sys.stderr.write(proc.stdout)
         raise SystemExit(f"kernels_bench failed (rc={proc.returncode})")
-    out_path = out_path or os.path.join(ROOT, "BENCH_kernels.json")
+    return rows
+
+
+def run_and_record(out_path=None):
+    rows = measure()
+    out_path = out_path or DEFAULT_OUT
     with open(out_path, "w") as f:
         json.dump(rows, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -54,5 +73,62 @@ def run_and_record(out_path=None):
     return rows
 
 
+def check(baseline_path=None, threshold=0.25, rows=None):
+    """Compare a fresh measurement against the committed baseline.
+
+    Returns the list of failed row names: us_per_call grew by more than
+    ``threshold``, OR a numerically-baselined row vanished / turned into
+    an ERROR in the fresh run (a bench that stops running is the worst
+    regression).  Rows only in the fresh run are reported but pass (new
+    benches land before their baseline)."""
+    baseline_path = baseline_path or DEFAULT_OUT
+    with open(baseline_path) as f:
+        base = json.load(f)
+    rows = rows if rows is not None else measure()
+    regressed = []
+    for name in sorted(set(base) | set(rows)):
+        old = base.get(name, {}).get("us_per_call")
+        new = rows.get(name, {}).get("us_per_call")
+        if not isinstance(old, (int, float)) or old <= 0:
+            print(f"  SKIP {name}: no numeric baseline ({old!r})")
+            continue
+        if not isinstance(new, (int, float)):
+            print(f"  LOST {name}: baseline {old:.1f} us but fresh run "
+                  f"has {new!r}")
+            regressed.append(name)
+            continue
+        ratio = new / old
+        flag = "REGRESSED" if ratio > 1.0 + threshold else "ok"
+        print(f"  {flag:9s} {name}: {old:.1f} -> {new:.1f} us "
+              f"({ratio:.2f}x)")
+        if ratio > 1.0 + threshold:
+            regressed.append(name)
+    return regressed
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out", nargs="?", default=None,
+                    help="output path (default: BENCH_kernels.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="compare against the committed baseline instead "
+                         "of recording; exit 1 on regression")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON for --check (default: the "
+                         "committed BENCH_kernels.json)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed us_per_call growth fraction")
+    args = ap.parse_args(argv)
+    if args.check:
+        regressed = check(args.baseline, args.threshold)
+        if regressed:
+            print(f"PERF GATE FAILED: {len(regressed)} row(s) regressed "
+                  f">{args.threshold:.0%}: {', '.join(regressed)}")
+            raise SystemExit(1)
+        print("perf gate OK")
+        return
+    run_and_record(args.out)
+
+
 if __name__ == "__main__":
-    run_and_record(sys.argv[1] if len(sys.argv) > 1 else None)
+    main()
