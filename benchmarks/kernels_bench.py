@@ -85,8 +85,10 @@ def _bench_round_executor(quick):
     upload + metrics sync per round) vs the scan-chunked executor
     (engine.make_chunk_fn: K=16 rounds per dispatch, device-resident
     sampling, donated FLState, one metrics fetch per chunk) — on the tiny
-    FL bench config, flat substrate and pytree state.  us_per_call is per
-    ROUND; derived is rounds/sec (higher = better)."""
+    FL bench config, flat substrate and pytree state, plus the chunked
+    executor under epoch-permutation sampling (the carried SamplerState
+    rides the scan).  us_per_call is per ROUND; derived is rounds/sec
+    (higher = better)."""
     from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
                             make_round_fn, run_rounds)
     from repro.data import FederatedDataset, make_device_sampler
@@ -104,7 +106,6 @@ def _bench_round_executor(quick):
     ds = FederatedDataset(arrays, [np.arange(i, n, m) for i in range(m)],
                           seed=0)
     store = ds.device_store()
-    sample_fn = make_device_sampler(m, s, b)
     tr0 = dict(w1=jnp.asarray(rng.normal(size=(d, h)).astype(np.float32))
                * 0.1,
                b1=jnp.zeros((h,), jnp.float32),
@@ -121,12 +122,17 @@ def _bench_round_executor(quick):
     base_p = jnp.full((m,), 0.6, jnp.float32)
     data_key = jax.random.PRNGKey(7)
 
-    def run_exec(flat, chunked):
+    def make_exec(flat, chunked, sampling="uniform"):
         from repro.core import make_chunk_fn
 
         cfg = FLConfig(m=m, s=s, eta_l=0.05, strategy="fedawe",
                        lr_schedule=False, grad_clip=0.0, flat_state=flat)
         rf = make_round_fn(cfg, loss_fn, {}, av, base_p)
+        # every bench client holds exactly n // m samples; the static
+        # min_count hint keeps the epoch mode's per-round reshuffle stack
+        # at its true size instead of the 1-sample worst case
+        init_sampler, sample_fn = make_device_sampler(
+            m, s, b, mode=sampling, min_count=n // m)
         # prebuilt executables so the timed runs measure steady-state
         # dispatch, not compilation
         rf_jit = jax.jit(rf)
@@ -141,28 +147,39 @@ def _bench_round_executor(quick):
             if chunked:
                 return run_rounds(state, rf, None, rounds, chunk_rounds=K,
                                   chunk_fn=chunk_fn, sample_fn=sample_fn,
-                                  store=store, data_key=data_key)
+                                  store=store, data_key=data_key,
+                                  sampler_state=init_sampler(store,
+                                                             data_key))
             return run_rounds(state, rf_jit, batch_fn, rounds, jit=False)
 
+        return once
+
+    execs = {
+        "host_loop": make_exec(True, chunked=False),
+        "chunked": make_exec(True, chunked=True),
+        "host_loop_tree": make_exec(False, chunked=False),
+        "chunked_tree": make_exec(False, chunked=True),
+        # epoch-permutation sampling inside the chunked scan (flat
+        # substrate): the exactly-once cursor walk should ride within ~25%
+        # of the uniform chunked row
+        "chunked_epoch": make_exec(True, chunked=True, sampling="epoch"),
+    }
+    for once in execs.values():
         once(K)                        # warmup: compile round/chunk
-        best = None
-        for _ in range(reps):          # min-of-reps filters machine load
+    best = {name: None for name in execs}
+    # min-of-reps filters machine load; reps INTERLEAVE across executors
+    # so a load spike hits every row, not one — the recorded numbers are
+    # consumed as ratios (container wall-clock is 2-3x noisy)
+    for _ in range(reps):
+        for name, once in execs.items():
             t0 = time.time()
             _, hist = once(T)
             dt = time.time() - t0
             assert len(hist) == T
-            best = dt if best is None else min(best, dt)
-        return best / T * 1e6          # us per round
-
-    rows = []
-    for flat, suffix in ((True, ""), (False, "_tree")):
-        t_host = run_exec(flat, chunked=False)
-        t_chunk = run_exec(flat, chunked=True)
-        rows.append((f"rounds_per_sec/host_loop{suffix}", round(t_host, 1),
-                     round(1e6 / t_host, 1)))
-        rows.append((f"rounds_per_sec/chunked{suffix}", round(t_chunk, 1),
-                     round(1e6 / t_chunk, 1)))
-    return rows
+            b_ = best[name]
+            best[name] = dt if b_ is None else min(b_, dt)
+    return [(f"rounds_per_sec/{name}", round(t / T * 1e6, 1),
+             round(T / t, 1)) for name, t in best.items()]
 
 
 def run(quick=False):

@@ -67,10 +67,45 @@ def f_t(cfg: AvailabilityCfg, t):
     return cfg.gamma * jnp.sin(2 * jnp.pi * t / P) + (1 - cfg.gamma)
 
 
+def markov_turn_on(cfg: AvailabilityCfg, base_p):
+    """Per-client P(off -> on) of the Gilbert-Elliott chain, explicitly
+    clamped to [0, 1]: ``markov_up * base_p / jnp.mean(base_p)`` silently
+    exceeds 1 for hot clients, which would flatten the heterogeneity the
+    chain is meant to encode (and skew any marginal derived from it).
+
+    ``delta_floor`` is applied IN THE DYNAMICS, not as an after-the-fact
+    clip of the reported marginal: the turn-on is raised to
+    ``floor * down / (1 - floor)``, the unique rate whose stationary
+    marginal equals the floor — so ``probs_at`` and the chain that
+    ``sample_active`` actually runs stay one and the same distribution
+    (Assumption 1 holds in simulation, not just on paper).
+    """
+    up = jnp.clip(cfg.markov_up * base_p / jnp.maximum(base_p.mean(), 1e-6),
+                  0.0, 1.0)
+    if cfg.delta_floor:
+        floor_up = (cfg.delta_floor * cfg.markov_down
+                    / max(1.0 - cfg.delta_floor, 1e-6))
+        up = jnp.clip(jnp.maximum(up, floor_up), 0.0, 1.0)
+    return up
+
+
 def probs_at(cfg: AvailabilityCfg, base_p, t):
-    """p_i^t for every client. base_p: [m]."""
-    f = f_t(cfg, t)
-    p = base_p * f
+    """p_i^t for every client. base_p: [m].
+
+    For ``kind="markov"`` this is the chain's per-client stationary
+    marginal ``up_i / (up_i + down)`` (with ``up_i`` the clamped,
+    delta-floored turn-on probability of ``markov_turn_on``) — the true
+    long-run participation rate the known-p importance weighting and
+    FedAU-style estimates must be compared against, NOT ``base_p``
+    itself.  The markov branch never re-clips with ``delta_floor``: the
+    floor already lives in the dynamics, so the reported marginal is the
+    occupancy ``sample_active`` actually simulates even when the floor is
+    unreachable (``delta_floor > 1 / (1 + down)``).
+    """
+    if cfg.kind == "markov":
+        up = markov_turn_on(cfg, base_p)
+        return up / jnp.maximum(up + cfg.markov_down, 1e-6)
+    p = base_p * f_t(cfg, t)
     if cfg.kind == "interleaved_sine":
         p = jnp.where(p >= cfg.cutoff, p, 0.0)
     if cfg.delta_floor:
@@ -85,7 +120,7 @@ def sample_active(rng, cfg: AvailabilityCfg, base_p, t, markov_state=None):
         u = jax.random.uniform(rng, markov_state.shape)
         on = markov_state > 0.5
         stay_on = u > cfg.markov_down
-        turn_on = u < cfg.markov_up * base_p / jnp.maximum(base_p.mean(), 1e-6)
+        turn_on = u < markov_turn_on(cfg, base_p)
         new = jnp.where(on, stay_on, turn_on)
         return new.astype(jnp.float32), new.astype(jnp.float32)
     p = probs_at(cfg, base_p, t)

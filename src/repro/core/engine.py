@@ -27,18 +27,23 @@ Two executors drive the round function:
     per round.  Simple, and the reference for parity tests.
   * chunked executor (``make_chunk_fn`` / ``run_rounds(chunk_rounds=K)``):
     K rounds execute inside a single jit as a ``jax.lax.scan``, so a chunk
-    costs exactly ONE dispatch.  ``donate_argnums`` on ``FLState`` aliases
-    the dominant ``[m, N]`` client stack (and every other state buffer)
+    costs exactly ONE dispatch.  ``donate_argnums`` on ``FLState`` and the
+    ``SamplerState`` aliases the dominant ``[m, N]`` client stack (and
+    every other state buffer, plus the sampler's ``[m, cap]`` permutation)
     input->output, so rounds update in place; batches are gathered on
-    device from a resident ``data.federated.device_store`` by a PRNG key
-    folded with the round counter (``fold_in(data_key, t)`` — a host loop
-    driven through the same sampler sees the identical stream, which is
-    how parity is tested); metrics come back stacked ``[K]`` and are
-    fetched with a single ``jax.device_get`` per chunk.  Optional
-    in/out shardings place the ``[m, N]`` stack over the ``('pod','data')``
-    mesh axes (sharding/rules.flat_pspecs) so the fused flat aggregation
-    lowers to the implicit-gossip all-reduce; eval/checkpoint align to
-    chunk boundaries.
+    device from a resident ``data.federated.device_store`` by the STATEFUL
+    sampler carried in the scan — ``sample_fn(store, sampler_state,
+    fold_in(data_key, t)) -> (batches, sampler_state)`` (see
+    ``data.federated.make_device_sampler``: ``"uniform"`` i.i.d. draws or
+    ``"epoch"`` exactly-once-per-epoch permutation walks).  A host loop
+    driven through the same sampler, seeds, and initial sampler state sees
+    the identical stream, which is how parity is tested.  Metrics come
+    back stacked ``[K]`` and are fetched with a single ``jax.device_get``
+    per chunk.  Optional in/out shardings place the ``[m, N]`` stack and
+    the sampler buffers over the ``('pod','data')`` mesh axes
+    (sharding/rules.flat_pspecs + sampler_pspecs) so the fused flat
+    aggregation lowers to the implicit-gossip all-reduce; eval/checkpoint
+    align to chunk boundaries.
 """
 from __future__ import annotations
 
@@ -274,54 +279,65 @@ def make_chunk_fn(cfg, round_fn, sample_fn, chunk_rounds, *,
     """Chunked round executor: K = ``chunk_rounds`` rounds per dispatch.
 
     Wraps ``round_fn`` in a ``jax.lax.scan`` inside a single jit with
-    ``donate_argnums`` on the ``FLState`` argument, so the dominant
-    ``[m, N]`` client stack (and the global, tau, strategy memory, ...)
-    is updated in place and a chunk costs exactly one dispatch.  Per
-    round, batches are gathered on device by
-    ``sample_fn(store, fold_in(data_key, state.t))`` (see
-    ``data.federated.make_device_sampler``) — keyed by the *global* round
-    counter, so a host loop driven through the same sampler and seeds
-    sees identical data.  Metrics come back stacked ``[K]`` per key.
+    ``donate_argnums`` on the ``FLState`` and ``SamplerState`` arguments,
+    so the dominant ``[m, N]`` client stack (and the global, tau, strategy
+    memory, the sampler's ``[m, cap]`` permutation buffer, ...) is updated
+    in place and a chunk costs exactly one dispatch.  The scan carry is
+    ``(FLState, SamplerState)``: per round, batches come from the stateful
+    sampler ``sample_fn(store, sampler_state, fold_in(data_key, state.t))
+    -> (batches, sampler_state)`` (see ``data.federated.
+    make_device_sampler``) — keyed by the *global* round counter and the
+    carried sampler state, so a host loop driven through the same sampler,
+    seeds, and initial sampler state sees identical data.  Metrics come
+    back stacked ``[K]`` per key.
 
-    Returned callable: ``chunk(state, store, data_key)`` — or
-    ``chunk(state, frozen, store, data_key)`` with ``with_frozen`` (pod
-    tier, FSDP-sharded bases stay runtime args) — returning
-    ``(state, metrics)``.
+    Returned callable: ``chunk(state, sampler_state, store, data_key)`` —
+    or ``chunk(state, frozen, sampler_state, store, data_key)`` with
+    ``with_frozen`` (pod tier, FSDP-sharded bases stay runtime args) —
+    returning ``(state, sampler_state, metrics)``.
 
     ``cfg`` is the ``FLConfig`` the round function was built from (kept for
     signature symmetry with ``make_round_fn``; the executor itself is
     config-agnostic).  ``in_shardings``/``out_shardings`` thread
     ``NamedSharding`` pytrees through the jit so the flat ``[m, N]`` stack
-    stays on its ``('pod','data')`` placement and the fused aggregation
-    lowers to the implicit-gossip all-reduce (sharding/rules.flat_pspecs).
+    and the sampler's ``[m]``/``[m, cap]`` buffers stay on their
+    ``('pod','data')`` placement and the fused aggregation lowers to the
+    implicit-gossip all-reduce (sharding/rules.flat_pspecs +
+    sharding/rules.sampler_pspecs).
     """
     del cfg
     K = int(chunk_rounds)
     assert K >= 1, "chunk_rounds must be >= 1"
 
-    def _scan(state, frozen, store, data_key):
-        def body(st, _):
-            batches = sample_fn(store, jax.random.fold_in(data_key, st.t))
+    def _scan(state, frozen, sampler_state, store, data_key):
+        def body(carry, _):
+            st, ss = carry
+            batches, ss = sample_fn(store, ss,
+                                    jax.random.fold_in(data_key, st.t))
             if with_frozen:
                 st, metrics = round_fn(st, frozen, batches)
             else:
                 st, metrics = round_fn(st, batches)
-            return st, metrics
+            return (st, ss), metrics
 
-        return jax.lax.scan(body, state, None, length=K)
+        (state, sampler_state), metrics = jax.lax.scan(
+            body, (state, sampler_state), None, length=K)
+        return state, sampler_state, metrics
 
     if with_frozen:
-        def chunk(state, frozen, store, data_key):
-            return _scan(state, frozen, store, data_key)
+        def chunk(state, frozen, sampler_state, store, data_key):
+            return _scan(state, frozen, sampler_state, store, data_key)
+        donate_idx = (0, 2)
     else:
-        def chunk(state, store, data_key):
-            return _scan(state, None, store, data_key)
+        def chunk(state, sampler_state, store, data_key):
+            return _scan(state, None, sampler_state, store, data_key)
+        donate_idx = (0, 1)
 
     if not jit:
         return chunk
     kwargs = {}
     if donate:
-        kwargs["donate_argnums"] = (0,)
+        kwargs["donate_argnums"] = donate_idx
     if in_shardings is not None:
         kwargs["in_shardings"] = in_shardings
     if out_shardings is not None:
@@ -332,27 +348,55 @@ def make_chunk_fn(cfg, round_fn, sample_fn, chunk_rounds, *,
 def run_rounds(state: FLState, round_fn, batch_fn, T, *, jit=True,
                log_every=0, eval_fn=None, eval_every=0,
                chunk_rounds=0, sample_fn=None, store=None, data_key=None,
-               chunk_fn=None, donate=True, ckpt_fn=None, ckpt_every=0):
+               sampler_state=None, chunk_fn=None, make_tail_fn=None,
+               donate=True, ckpt_fn=None, ckpt_every=0):
     """Run T rounds; returns (state, history list of metric dicts).
 
     Host loop (default): one dispatch per round, ``batch_fn(t)`` batches,
     and the whole metrics dict fetched with a single ``jax.device_get``
-    per round.
+    per round.  When ``batch_fn`` is None and a stateful device sampler is
+    given (``sample_fn``/``store``/``data_key``/``sampler_state``), the
+    loop threads the ``SamplerState`` through
+    ``sample_fn(store, sampler_state, fold_in(data_key, t))`` — the same
+    stream the chunked executor's scan carry sees, so epoch-permutation
+    sampling behaves identically in both executors.
 
     Chunked (``chunk_rounds=K > 0``): ``ceil(T / K)`` dispatches through
     ``make_chunk_fn`` (a shorter final chunk covers ``T % K``), with
-    device-side sampling via ``sample_fn``/``store``/``data_key`` and one
-    metrics fetch per chunk.  ``eval_fn``/``ckpt_fn`` fire at the first
-    chunk boundary at or past each ``eval_every``/``ckpt_every`` multiple.
-    A prebuilt ``chunk_fn`` (e.g. with explicit shardings) is used for
-    full-K chunks when given.
+    device-side sampling via ``sample_fn``/``store``/``data_key``/
+    ``sampler_state`` and one metrics fetch per chunk.  ``eval_fn``/
+    ``ckpt_fn`` fire at the first chunk boundary at or past each
+    ``eval_every``/``ckpt_every`` multiple.  A prebuilt ``chunk_fn`` (e.g.
+    with explicit shardings) is used for full-K chunks when given; because
+    an implicitly rebuilt ``T % K`` tail would silently drop those
+    shardings, a prebuilt ``chunk_fn`` with ``T % K != 0`` requires
+    ``make_tail_fn`` (``make_tail_fn(k) -> executor`` built with the
+    caller's shardings) and raises otherwise.
     """
     if chunk_rounds:
         return _run_rounds_chunked(
             state, round_fn, T, chunk_rounds, sample_fn=sample_fn,
-            store=store, data_key=data_key, chunk_fn=chunk_fn, jit=jit,
+            store=store, data_key=data_key, sampler_state=sampler_state,
+            chunk_fn=chunk_fn, make_tail_fn=make_tail_fn, jit=jit,
             donate=donate, log_every=log_every, eval_fn=eval_fn,
             eval_every=eval_every, ckpt_fn=ckpt_fn, ckpt_every=ckpt_every)
+
+    if batch_fn is None:
+        assert sample_fn is not None and store is not None \
+            and data_key is not None and sampler_state is not None, (
+                "host loop needs batch_fn, or a stateful device sampler "
+                "(sample_fn + store + data_key + sampler_state)")
+        sf = jax.jit(sample_fn) if jit else sample_fn
+        _ss = [sampler_state]
+        # key by the GLOBAL round counter, like the chunk executor's
+        # fold_in(data_key, st.t) — a resumed state (t0 != 0) must not
+        # replay the stream from round 0
+        t0 = int(state.t)
+
+        def batch_fn(t):
+            batches, _ss[0] = sf(store, _ss[0],
+                                 jax.random.fold_in(data_key, t0 + t))
+            return batches
 
     f = jax.jit(round_fn) if jit else round_fn
     history = []
@@ -380,17 +424,26 @@ def _crossed(done, k, every):
 
 
 def _run_rounds_chunked(state, round_fn, T, K, *, sample_fn, store, data_key,
-                        chunk_fn, jit, donate, log_every, eval_fn,
-                        eval_every, ckpt_fn, ckpt_every):
+                        sampler_state, chunk_fn, make_tail_fn, jit, donate,
+                        log_every, eval_fn, eval_every, ckpt_fn, ckpt_every):
     assert data_key is not None, "chunked executor needs a data PRNG key"
-    if chunk_fn is None or T % K:
-        # a T % K tail executor is always built here from round_fn — note
-        # it carries no custom shardings, so prebuilt sharded chunk_fns
-        # should run with T a multiple of K
+    assert sampler_state is not None, (
+        "chunked executor needs the carried sampler_state "
+        "(init_sampler_state(store, data_key) from make_device_sampler)")
+    if chunk_fn is not None and T % K and make_tail_fn is None:
+        # rebuilding the T % K tail here from round_fn would silently drop
+        # the caller's shardings (the prebuilt chunk_fn may place the
+        # [m, N] stack on the production mesh) — demand an explicit tail
+        # builder instead of degrading the placement
+        raise ValueError(
+            f"prebuilt chunk_fn with T={T} not a multiple of "
+            f"chunk_rounds={K}: an implicitly built tail executor would "
+            "not carry the chunk_fn's shardings; pass make_tail_fn(k) "
+            "built with the same shardings, or make T a multiple of K")
+    if chunk_fn is None:
         assert sample_fn is not None, (
             "chunked executor needs sample_fn to build the chunk "
             "executor and any T % chunk_rounds tail")
-    if chunk_fn is None:
         chunk_fn = make_chunk_fn(None, round_fn, sample_fn, K,
                                  donate=donate, jit=jit)
     tail_fn = None
@@ -401,10 +454,12 @@ def _run_rounds_chunked(state, round_fn, T, K, *, sample_fn, store, data_key,
             f = chunk_fn
         else:
             if tail_fn is None:
-                tail_fn = make_chunk_fn(None, round_fn, sample_fn, k,
-                                        donate=donate, jit=jit)
+                tail_fn = (make_tail_fn(k) if make_tail_fn is not None
+                           else make_chunk_fn(None, round_fn, sample_fn, k,
+                                              donate=donate, jit=jit))
             f = tail_fn
-        state, metrics = f(state, store, data_key)
+        state, sampler_state, metrics = f(state, sampler_state, store,
+                                          data_key)
         metrics = jax.device_get(metrics)  # ONE host sync per chunk
         for j in range(k):
             rec = {key: float(v[j]) for key, v in metrics.items()}

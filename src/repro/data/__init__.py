@@ -6,6 +6,7 @@ from repro.data.synthetic import (  # noqa: F401
     make_lm_tokens,
 )
 from repro.data.federated import (  # noqa: F401
+    SAMPLING_MODES,
     FederatedDataset,
     device_store,
     make_device_sampler,

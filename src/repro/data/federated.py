@@ -8,16 +8,48 @@ Two sampling paths:
 
   * ``round_batches`` — the host path: numpy RNG picks indices per client
     and materializes the round batch in host memory (one upload per round).
-  * ``device_store`` + ``make_device_sampler`` — the chunked-executor path:
-    the backing arrays and a padded ``[m, cap]`` per-client index matrix
-    live on device, and sampling is a pure-jax gather driven by a PRNG key,
-    so it traces inside the multi-round ``lax.scan`` of
+  * ``device_store`` + ``make_device_sampler`` — the device path: the
+    backing arrays and a padded ``[m, cap]`` per-client index matrix live
+    on device, and sampling is a pure-jax gather driven by a PRNG key, so
+    it traces inside the multi-round ``lax.scan`` of
     ``engine.make_chunk_fn`` and no per-round host->device transfer ever
-    happens.  The sampler is keyed by ``fold_in(data_key, t)``, so a host
-    loop whose ``batch_fn`` is driven through the same sampler sees the
-    stream a chunked run sees (how the parity tests pin down
-    equivalence); ``launch/train.py``'s host path keeps the numpy
-    ``round_batches`` sampler, whose stream is different.
+    happens.
+
+Stateful sampler contract
+-------------------------
+
+``make_device_sampler(m, s, b, mode=...)`` returns a pair
+
+    ``(init_sampler_state, sample)``
+
+where ``init_sampler_state(store, key) -> SamplerState`` builds the carried
+sampler state from the store and the run's base data key, and
+``sample(store, sampler_state, key) -> (batches, sampler_state)`` draws one
+round batch and advances the state.  The ``SamplerState`` pytree is threaded
+through ``engine.make_chunk_fn``'s scan carry and ``engine.run_rounds``'
+host loop, so BOTH executors see the identical sample stream (how the
+parity tests pin down equivalence); it is donated alongside ``FLState`` and
+sharded over the client mesh axes via ``sharding.rules.sampler_pspecs``.
+
+Modes:
+
+  * ``"uniform"`` — i.i.d. uniform draws with replacement within each
+    client shard (matching ``round_batches``' distribution), via
+    ``jax.random.randint`` with per-client ``maxval=counts`` (exact — no
+    ``floor(u * count)`` f32 bias, no precision loss past 2^24 rows).  The
+    state is empty; the per-round key is ``fold_in(data_key, t)``.
+  * ``"epoch"`` — epoch-permutation sampling: a carried per-client cursor
+    ``[m] int32`` walks a per-epoch random permutation of the client's own
+    samples, reshuffled whenever the cursor wraps (per-row sort keys from
+    ``fold_in(fold_in(data_key, epoch), client)`` + argsort, padded slots
+    pushed past ``counts``), so every client visits each of its samples
+    exactly once per epoch — identically in host-loop and chunked runs.
+    Clients with fewer than ``s * b`` samples cross several epoch
+    boundaries inside one round; the sampler handles any number of wraps
+    per draw exactly.
+
+``launch/train.py``'s default host path keeps the numpy ``round_batches``
+sampler, whose stream is different.
 """
 from __future__ import annotations
 
@@ -102,26 +134,137 @@ def device_store(arrays: Dict[str, np.ndarray], client_indices,
     )
 
 
-def make_device_sampler(m: int, s: int, b: int):
-    """Pure-jax round-batch sampler over a ``device_store`` pytree.
+SAMPLING_MODES = ("uniform", "epoch")
 
-    Returns ``sample(store, key) -> {k: [m, s, b, ...]}``: per-client uniform
-    draws with replacement (matching ``round_batches``' distribution), as one
-    gather from the device-resident arrays — traceable inside ``lax.scan``.
+
+def _gather_batches(store, cols, m, s, b):
+    """cols [m, s*b]: per-client columns into the padded index matrix ->
+    {k: [m, s, b, ...]} round batches, as one gather per array."""
+    import jax.numpy as jnp
+
+    rows = jnp.take_along_axis(store["idx"], cols, axis=1)  # [m, s*b]
+    flat = rows.reshape(-1)
+    return {k: jnp.take(v, flat, axis=0).reshape((m, s, b) + v.shape[1:])
+            for k, v in store["arrays"].items()}
+
+
+def make_device_sampler(m: int, s: int, b: int, mode: str = "uniform",
+                        min_count: int = 1):
+    """Stateful pure-jax round-batch sampler over a ``device_store`` pytree.
+
+    Returns ``(init_sampler_state, sample)`` — the stateful sampler contract
+    described in the module docstring.  ``mode`` is one of
+    ``SAMPLING_MODES``; both modes are traceable inside ``lax.scan`` and
+    keep their whole state on device.
+
+    ``min_count`` is an optional STATIC lower bound on every client's shard
+    size, used by the epoch mode to bound how many epoch reshuffles one
+    round can possibly need (a client crosses at most
+    ``(s*b - 1) // min_count + 1`` epoch boundaries per round): the default
+    1 is always safe but materializes the worst case; passing the true
+    minimum shrinks the per-round permutation stack.  The bound is checked
+    against the store whenever ``init_sampler_state`` sees concrete counts.
     """
     import jax
     import jax.numpy as jnp
 
-    def sample(store, key):
-        counts = store["counts"].astype(jnp.float32)  # [m]
-        u = jax.random.uniform(key, (m, s * b))
-        # floor(u * count) clamped: u*count can round up to count in f32
-        r = jnp.minimum((u * counts[:, None]).astype(jnp.int32),
-                        store["counts"][:, None] - 1)
-        rows = jnp.take_along_axis(store["idx"], r, axis=1)  # [m, s*b]
-        flat = rows.reshape(-1)
-        return {k: jnp.take(v, flat, axis=0).reshape(
-                    (m, s, b) + v.shape[1:])
-                for k, v in store["arrays"].items()}
+    if mode not in SAMPLING_MODES:
+        raise ValueError(f"unknown sampling mode {mode!r}; "
+                         f"expected one of {SAMPLING_MODES}")
+    q = s * b
+    # epoch offsets 0..n_off-1 can be touched within one round: the carried
+    # permutation plus every reshuffle a cursor can wrap into (cursor < c,
+    # so max_offset = (c - 1 + q) // c <= 1 + (q - 1) // min_count)
+    n_off = 2 + (q - 1) // max(int(min_count), 1)
 
-    return sample
+    if mode == "uniform":
+        def init_sampler_state(store, key):
+            del store, key
+            return {}
+
+        def sample(store, sampler_state, key):
+            # exact per-client uniform draw: randint with a broadcast
+            # per-row maxval (floor(u * count) + clamp is biased and loses
+            # precision once counts push the f32 mantissa past 2^24)
+            r = jax.random.randint(key, (m, q), 0,
+                                   store["counts"][:, None])
+            return _gather_batches(store, r, m, s, b), sampler_state
+
+        return init_sampler_state, sample
+
+    # mode == "epoch": carried per-client cursor over per-epoch permutations
+    def _row_perm(base_key, epoch_i, i, counts, cap):
+        """Random permutation of client i's valid columns for one epoch:
+        sort keys from fold_in(fold_in(data_key, epoch), client) — chained
+        folds give one stream per (epoch, client) pair without the int32
+        wraparound a single ``epoch * m + client`` fold would hit at
+        production client counts (m = 2^20 repeats every 4096 epochs);
+        padded columns get +inf keys so the first counts[i] outputs are
+        exactly a permutation of 0..counts[i]-1."""
+        k = jax.random.fold_in(jax.random.fold_in(base_key, epoch_i), i)
+        u = jax.random.uniform(k, (cap,))
+        u = jnp.where(jnp.arange(cap) < counts[i], u, jnp.inf)
+        return jnp.argsort(u).astype(jnp.int32)
+
+    def _perms(base_key, epochs, counts, cap):
+        """[m] per-client epoch numbers -> [m, cap] permutation matrix."""
+        return jax.vmap(
+            lambda e, i: _row_perm(base_key, e, i, counts, cap)
+        )(epochs, jnp.arange(m))
+
+    def init_sampler_state(store, key):
+        cap = store["idx"].shape[1]
+        counts = store["counts"]
+        if isinstance(counts, jax.Array) and \
+                not isinstance(counts, jax.core.Tracer):
+            assert int(counts.min()) >= min_count, (
+                f"min_count={min_count} overstates the smallest shard "
+                f"({int(counts.min())}): the epoch permutation stack "
+                "would be too short and sampling would silently repeat")
+        zeros = jnp.zeros((m,), jnp.int32)
+        # every field owns its buffer: the chunked executor donates the
+        # whole SamplerState, so aliased leaves (cursor/epoch sharing one
+        # zeros array, or carrying the caller's data_key itself) would be
+        # donated twice / invalidate the caller's key
+        return dict(
+            perm=_perms(key, zeros, store["counts"], cap),  # epoch-0 order
+            cursor=zeros,                                   # next rank
+            epoch=jnp.zeros((m,), jnp.int32),               # per-client epoch
+            key=jnp.array(key, copy=True),
+        )
+
+    def sample(store, sampler_state, key):
+        del key  # the epoch stream is fully determined by the carried state
+        counts = store["counts"]                             # [m] i32
+        cap = store["idx"].shape[1]
+        cursor = sampler_state["cursor"]
+        epoch = sampler_state["epoch"]
+        base = sampler_state["key"]
+
+        # global draw positions for this round, split into (epoch offset,
+        # rank within epoch) — a client with counts[i] < q wraps several
+        # times inside one round, touching offsets up to n_off - 1
+        pos = cursor[:, None] + jnp.arange(q, dtype=jnp.int32)  # [m, q]
+        d = pos // counts[:, None]                              # [m, q]
+        r = pos % counts[:, None]                               # [m, q]
+
+        # permutation stack for epoch offsets 0..n_off-1: offset 0 is the
+        # carried permutation, the rest are the reshuffles a cursor can
+        # wrap into this round
+        new = jax.vmap(lambda o: _perms(base, epoch + o, counts, cap))(
+            jnp.arange(1, n_off, dtype=jnp.int32))          # [n_off-1, m, cap]
+        stack = jnp.concatenate([sampler_state["perm"][None], new], axis=0)
+
+        cols = stack[d, jnp.arange(m)[:, None], r]              # [m, q]
+        batches = _gather_batches(store, cols, m, s, b)
+
+        total = cursor + q
+        wraps = total // counts                                 # [m]
+        return batches, dict(
+            perm=stack[wraps, jnp.arange(m), :],                # [m, cap]
+            cursor=total % counts,
+            epoch=epoch + wraps,
+            key=base,
+        )
+
+    return init_sampler_state, sample

@@ -37,7 +37,8 @@ from repro.models import (init_cache, init_params, lm_loss, merge_trainable,
                           split_trainable)
 from repro.models.model import prefill, serve_step
 from repro.sharding import (batch_pspecs, cache_pspecs, client_stack_pspecs,
-                            flat_pspecs, param_pspecs, serve_batch_pspecs)
+                            flat_pspecs, param_pspecs, sampler_pspecs,
+                            serve_batch_pspecs)
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -165,6 +166,11 @@ def _chunk_k(variant):
     return 0
 
 
+def _chunk_sampling(variant):
+    """'+epoch' selects epoch-permutation device sampling for flat_chunk."""
+    return "epoch" if "epoch" in variant.split("+") else "uniform"
+
+
 def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
     """The donated, sharded, scan-chunked round executor on the flat
     substrate: K FedAWE rounds per dispatch, the [m, N] client stack over
@@ -186,7 +192,11 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
     av = AvailabilityCfg(kind="sine", gamma=0.3, period=20)
     base_p = jnp.full((m,), 0.5, F32)
     round_fn = make_round_fn_with_frozen(fl, loss_fn, av, base_p)
-    sample_fn = make_device_sampler(m, s, b)
+    sampling = _chunk_sampling(variant)
+    # the dry-run store gives every client exactly `cap` samples (below),
+    # so the epoch permutation stack lowers at its production size
+    init_sampler, sample_fn = make_device_sampler(m, s, b, mode=sampling,
+                                                  min_count=4)
 
     state_sds = jax.eval_shape(
         lambda tr: init_fl_state(jax.random.PRNGKey(0), fl, tr),
@@ -204,10 +214,14 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
         counts=_sds((m,), I32),
     )
     key_sds = _sds((2,), jnp.uint32)
+    # carried SamplerState (epoch: [m, cap] permutation + [m] cursors;
+    # uniform: empty) — born from the same eval_shape path the runtime uses
+    sampler_sds = jax.eval_shape(init_sampler, store_sds, key_sds)
 
     ca = ("pod", "data") if multi_pod else ("data",)
     state_spec = flat_pspecs(mesh, state_sds, multi_pod=multi_pod)
     frozen_spec = param_pspecs(cfg, mesh, frozen_sds, fsdp=True)
+    sampler_spec = sampler_pspecs(mesh, sampler_sds, m, multi_pod=multi_pod)
     store_spec = dict(
         arrays=jax.tree.map(lambda v: P(*([None] * len(v.shape))),
                             store_sds["arrays"]),
@@ -219,9 +233,11 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
     fn = make_chunk_fn(
         fl, round_fn, sample_fn, K, with_frozen=True, donate=True,
         in_shardings=(_ns(mesh, state_spec), _ns(mesh, frozen_spec),
-                      _ns(mesh, store_spec), NamedSharding(mesh, P(None))),
-        out_shardings=(_ns(mesh, state_spec), _ns(mesh, metrics_spec)))
-    return fn, (state_sds, frozen_sds, store_sds, key_sds)
+                      _ns(mesh, sampler_spec), _ns(mesh, store_spec),
+                      NamedSharding(mesh, P(None))),
+        out_shardings=(_ns(mesh, state_spec), _ns(mesh, sampler_spec),
+                       _ns(mesh, metrics_spec)))
+    return fn, (state_sds, frozen_sds, sampler_sds, store_sds, key_sds)
 
 
 def build_prefill_step(cfg, shape, mesh, variant="baseline"):
@@ -299,6 +315,7 @@ def run_one(arch, shape_name, mesh_kind, *, test_mesh=False, verbose=True,
                     fn, args = build_chunk_train_step(cfg, shape, mesh,
                                                       multi_pod, variant)
                     rec["chunk_rounds"] = K
+                    rec["sampling"] = _chunk_sampling(variant)
                 else:
                     fn, args = build_train_step(cfg, shape, mesh, multi_pod,
                                                 variant=variant)
@@ -397,7 +414,8 @@ def main():
                     help="'+'-joined §Perf knobs: dp_client, moe_hint, "
                          "dots_remat, seq_shard, flat_chunk[K] (donated "
                          "scan-chunked flat-substrate executor, K rounds "
-                         "per dispatch)")
+                         "per dispatch), epoch (epoch-permutation device "
+                         "sampling with the carried SamplerState)")
     args = ap.parse_args()
 
     results = []

@@ -24,8 +24,9 @@ from repro.core import (AvailabilityCfg, FLConfig, base_probs,
                         global_trainables, init_fl_state, make_round_fn,
                         run_rounds)
 from repro.core.availability import base_probs_from_data
-from repro.data import FederatedDataset, dirichlet_partition, \
-    make_device_sampler, make_image_classification, make_lm_tokens
+from repro.data import SAMPLING_MODES, FederatedDataset, \
+    dirichlet_partition, make_device_sampler, make_image_classification, \
+    make_lm_tokens
 from repro.models import cnn
 from repro.models.config import BlockCfg, ModelConfig
 from repro.models import init_params, lm_loss
@@ -110,6 +111,13 @@ def main(argv=None):
                     help="K>0: scan-chunked executor — K rounds per "
                          "dispatch, device-resident batch sampling, "
                          "donated FLState, eval/ckpt at chunk boundaries")
+    ap.add_argument("--sampling", default="uniform",
+                    choices=list(SAMPLING_MODES),
+                    help="device-sampler mode: i.i.d. uniform with "
+                         "replacement, or epoch-permutation (every client "
+                         "visits each of its samples exactly once per "
+                         "epoch; carried cursor, identical in host and "
+                         "chunked executors)")
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt", default=None)
@@ -133,15 +141,21 @@ def main(argv=None):
         def ckpt_fn(st, t):
             save_fl_state(args.ckpt, st, round_t=t)
 
-    if args.chunk_rounds:
-        # scan-chunked executor: the dataset lives on device and every
-        # K-round chunk is a single dispatch (one metrics fetch per chunk)
+    if args.chunk_rounds or args.sampling == "epoch":
+        # device sampler (always for the chunked executor; also for the
+        # host loop under epoch sampling, whose carried cursor state lives
+        # on device): the dataset is resident and the SamplerState is
+        # threaded through whichever executor runs
         store = ds.device_store()
-        sample_fn = make_device_sampler(args.m, args.s, args.batch)
+        init_fn, sample_fn = make_device_sampler(
+            args.m, args.s, args.batch, mode=args.sampling,
+            min_count=min(len(ix) for ix in ds.client_indices))
+        data_key = jax.random.PRNGKey(args.seed + 1)
+        sampler_state = init_fn(store, data_key)
         state, hist = run_rounds(
             state, round_fn, None, args.rounds,
             chunk_rounds=args.chunk_rounds, sample_fn=sample_fn,
-            store=store, data_key=jax.random.PRNGKey(args.seed + 1),
+            store=store, data_key=data_key, sampler_state=sampler_state,
             log_every=max(1, args.rounds // 10),
             eval_fn=eval_fn, eval_every=args.eval_every,
             ckpt_fn=ckpt_fn, ckpt_every=args.ckpt_every)

@@ -4,5 +4,6 @@ from repro.sharding.rules import (  # noqa: F401
     client_stack_pspecs,
     flat_pspecs,
     param_pspecs,
+    sampler_pspecs,
     serve_batch_pspecs,
 )

@@ -176,6 +176,33 @@ def flat_pspecs(mesh, state_sds, *, multi_pod=False):
     )
 
 
+def sampler_pspecs(mesh, sampler_sds, m, *, multi_pod=False):
+    """SamplerState-shaped PartitionSpec tree for the stateful device
+    sampler (data/federated.make_device_sampler).
+
+    Per-client buffers follow the client mesh axes — the ``[m, cap]``
+    epoch-permutation matrix shards like the ``[m, N]`` client stack and
+    the ``[m]`` cursor/epoch vectors like tau — while anything not
+    client-leading (the carried PRNG key, scalars) stays replicated.
+    ``sampler_sds``: ``jax.eval_shape`` of ``init_sampler_state``; the
+    uniform sampler's empty state yields an empty spec tree.
+    """
+    ax = _axis_sizes(mesh)
+    ca = _client_axes(ax, multi_pod)
+
+    def leaf(path, x):
+        shape = tuple(int(d) for d in x.shape)
+        # the carried reshuffle key is a raw uint32[2] — never client-shard
+        # it (shape[0] == m is a false positive at m == 2)
+        if _leaf_name(path) == "key":
+            return P(*([None] * len(shape)))
+        if len(shape) >= 1 and shape[0] == m:
+            return P(ca, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf, sampler_sds)
+
+
 def batch_pspecs(mesh, batches_shape, *, multi_pod=False, mode="tp"):
     """FL round batches [m, s, b, ...] -> client axis sharded; in 'dp' mode
     the within-client batch dim additionally takes the 'model' axis."""

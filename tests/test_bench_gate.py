@@ -55,15 +55,21 @@ def test_check_logic(tmp_path, capsys):
 
 def test_committed_record_has_executor_rows():
     """The committed trajectory must carry the executor entries, with the
-    chunked executor recorded >= 2x the host loop (tiny config, K=16)."""
+    chunked executor recorded >= 2x the host loop (tiny config, K=16) and
+    the epoch-permutation chunked row within 25% of the uniform chunked
+    row (both recorded in the same bench run, so the ratio is robust to
+    container wall-clock noise)."""
     with open(os.path.join(REPO, "BENCH_kernels.json")) as f:
         rows = json.load(f)
     for name in ("rounds_per_sec/host_loop", "rounds_per_sec/chunked",
                  "rounds_per_sec/host_loop_tree",
-                 "rounds_per_sec/chunked_tree"):
+                 "rounds_per_sec/chunked_tree",
+                 "rounds_per_sec/chunked_epoch"):
         assert name in rows and rows[name]["us_per_call"] > 0
     assert rows["rounds_per_sec/chunked"]["derived"] >= \
         2.0 * rows["rounds_per_sec/host_loop"]["derived"]
+    assert rows["rounds_per_sec/chunked_epoch"]["us_per_call"] <= \
+        1.25 * rows["rounds_per_sec/chunked"]["us_per_call"]
 
 
 @pytest.mark.slow

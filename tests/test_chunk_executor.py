@@ -4,13 +4,18 @@ Guarantees under test:
   * parity — for every strategy in REGISTRY, flat and tree substrate,
     kernel on/off: K-rounds-per-dispatch execution with device-resident
     sampling produces the same FLState and per-round metrics as the host
-    loop driven by the identical sampler stream (same seeds).
+    loop driven by the identical stateful sampler stream (same seeds,
+    same carried SamplerState).
   * one dispatch per chunk — a T-round run at chunk_rounds=K issues
     exactly ceil(T/K) calls into the chunk executable, and the chunk
-    traces to a single top-level scan of length K.
+    traces to a single top-level scan of length K (uniform AND epoch
+    sampling — the SamplerState rides the scan carry).
   * donation — the chunk executable aliases the dominant [m, N] client
-    stack (and the rest of FLState) input->output.
+    stack (and the rest of FLState, and the sampler's [m, cap] epoch
+    permutation) input->output.
   * the device sampler draws only from each client's own shard.
+  * a prebuilt (possibly sharded) chunk_fn with T % K != 0 raises instead
+    of silently rebuilding an unsharded tail executor.
   * flat_pspecs shards the [m, N] client axis and replicates the global.
 """
 import jax
@@ -25,13 +30,14 @@ from repro.data import FederatedDataset, device_store, make_device_sampler
 M, S, B, DIM = 6, 3, 4, 4
 
 
-def _problem(seed=0):
+def _problem(seed=0, sampling="uniform"):
     rng = np.random.default_rng(seed)
     n = 48
     arrays = dict(x=rng.normal(size=(n, DIM)).astype(np.float32),
                   y=rng.normal(size=(n, DIM)).astype(np.float32))
     idx = [np.arange(i, n, M) for i in range(M)]
-    return device_store(arrays, idx), make_device_sampler(M, S, B)
+    init_fn, sample_fn = make_device_sampler(M, S, B, mode=sampling)
+    return device_store(arrays, idx), init_fn, sample_fn
 
 
 def _loss_fn(tr, frozen, batch, rng):
@@ -43,8 +49,9 @@ def _tr0():
     return {"w": jnp.ones((DIM, DIM)) * 0.1, "b": jnp.zeros((7,))}
 
 
-def _run(strategy, *, flat, chunk, use_kernel=False, T=6, K=4, base_p=0.6):
-    store, sample_fn = _problem()
+def _run(strategy, *, flat, chunk, use_kernel=False, T=6, K=4, base_p=0.6,
+         sampling="uniform"):
+    store, init_fn, sample_fn = _problem(sampling=sampling)
     cfg = FLConfig(m=M, s=S, eta_l=0.03, strategy=strategy,
                    lr_schedule=False, grad_clip=0.0, use_kernel=use_kernel,
                    flat_state=flat)
@@ -52,14 +59,15 @@ def _run(strategy, *, flat, chunk, use_kernel=False, T=6, K=4, base_p=0.6):
     rf = make_round_fn(cfg, _loss_fn, {}, av, jnp.full((M,), base_p))
     state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
     data_key = jax.random.PRNGKey(42)
+    sampler_state = init_fn(store, data_key)
     if chunk:
         return run_rounds(state, rf, None, T, chunk_rounds=K,
                           sample_fn=sample_fn, store=store,
-                          data_key=data_key)
-    # host loop over the SAME device-sampler stream (fold_in by round t)
-    return run_rounds(
-        state, rf,
-        lambda t: sample_fn(store, jax.random.fold_in(data_key, t)), T)
+                          data_key=data_key, sampler_state=sampler_state)
+    # host loop threading the SAME stateful sampler stream (carried
+    # SamplerState + fold_in by round t)
+    return run_rounds(state, rf, None, T, sample_fn=sample_fn, store=store,
+                      data_key=data_key, sampler_state=sampler_state)
 
 
 def _assert_same(s_host, s_chunk, h_host, h_chunk):
@@ -95,45 +103,51 @@ def test_chunked_matches_host_loop_kernel(strategy, flat):
 # one dispatch per chunk
 # ---------------------------------------------------------------------------
 
-def _chunk_parts(flat=True, K=4):
-    store, sample_fn = _problem()
+def _chunk_parts(flat=True, K=4, sampling="uniform"):
+    store, init_fn, sample_fn = _problem(sampling=sampling)
     cfg = FLConfig(m=M, s=S, eta_l=0.03, strategy="fedawe",
                    lr_schedule=False, grad_clip=0.0, flat_state=flat)
     av = AvailabilityCfg(kind="sine", gamma=0.3)
     rf = make_round_fn(cfg, _loss_fn, {}, av, jnp.full((M,), 0.6))
     state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
-    return cfg, rf, sample_fn, store, state
+    return cfg, rf, init_fn, sample_fn, store, state
 
 
 def test_chunk_is_one_dispatch_per_k_rounds():
     K, T = 4, 12
-    cfg, rf, sample_fn, store, state = _chunk_parts(K=K)
+    cfg, rf, init_fn, sample_fn, store, state = _chunk_parts(K=K)
     chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
     calls = []
 
-    def counting_chunk(st, sto, key):
+    def counting_chunk(st, ss, sto, key):
         calls.append(1)
-        return chunk_fn(st, sto, key)
+        return chunk_fn(st, ss, sto, key)
 
+    data_key = jax.random.PRNGKey(1)
     state, hist = run_rounds(state, rf, None, T, chunk_rounds=K,
                              chunk_fn=counting_chunk, sample_fn=sample_fn,
-                             store=store, data_key=jax.random.PRNGKey(1))
+                             store=store, data_key=data_key,
+                             sampler_state=init_fn(store, data_key))
     assert len(calls) == T // K          # exactly one dispatch per chunk
     assert len(hist) == T
     assert [r["t"] for r in hist] == list(range(T))
     assert int(state.t) == T
 
 
-def test_chunk_traces_to_single_scan_of_length_k():
+@pytest.mark.parametrize("sampling", ["uniform", "epoch"])
+def test_chunk_traces_to_single_scan_of_length_k(sampling):
     K = 5
-    cfg, rf, sample_fn, store, state = _chunk_parts(K=K)
+    cfg, rf, init_fn, sample_fn, store, state = _chunk_parts(
+        K=K, sampling=sampling)
     chunk = make_chunk_fn(cfg, rf, sample_fn, K, jit=False)
-    jaxpr = jax.make_jaxpr(chunk)(state, store, jax.random.PRNGKey(1))
+    data_key = jax.random.PRNGKey(1)
+    ss = init_fn(store, data_key)
+    jaxpr = jax.make_jaxpr(chunk)(state, ss, store, data_key)
     scans = [eq for eq in jaxpr.jaxpr.eqns if eq.primitive.name == "scan"]
     assert len(scans) == 1, "chunk must be one top-level scan"
     assert scans[0].params["length"] == K
     # metrics come back stacked [K]
-    _, metrics = chunk(state, store, jax.random.PRNGKey(1))
+    _, _, metrics = chunk(state, ss, store, data_key)
     assert all(v.shape == (K,) for v in metrics.values())
 
 
@@ -143,10 +157,11 @@ def test_chunk_traces_to_single_scan_of_length_k():
 
 def test_chunk_donates_client_stack():
     K = 3
-    cfg, rf, sample_fn, store, state = _chunk_parts(K=K)
+    cfg, rf, init_fn, sample_fn, store, state = _chunk_parts(K=K)
     chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
     key = jax.random.PRNGKey(1)
-    lowered = chunk_fn.lower(state, store, key)
+    ss = init_fn(store, key)
+    lowered = chunk_fn.lower(state, ss, store, key)
     # the jit-level donation request on the FLState argument...
     assert "tf.aliasing_output" in lowered.as_text()
     # ...is honored by the compiler: the aliased bytes cover at least the
@@ -155,15 +170,98 @@ def test_chunk_donates_client_stack():
     m, n = state.clients_tr.shape
     assert mem.alias_size_in_bytes >= (m + 1) * n * 4
     # and a donated input is actually consumed on this backend
-    state2, _ = chunk_fn(state, store, key)
+    state2, _, _ = chunk_fn(state, ss, store, key)
     assert state.clients_tr.is_deleted()
     assert not state2.clients_tr.is_deleted()
 
 
+def test_chunk_donates_sampler_state():
+    """The carried epoch-permutation buffers are donated alongside the
+    FLState, so the [m, cap] matrix also updates in place."""
+    K = 3
+    cfg, rf, init_fn, sample_fn, store, state = _chunk_parts(
+        K=K, sampling="epoch")
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    key = jax.random.PRNGKey(1)
+    ss = init_fn(store, key)
+    _, ss2, _ = chunk_fn(state, ss, store, key)
+    assert ss["perm"].is_deleted()
+    assert not ss2["perm"].is_deleted()
+    assert ss2["cursor"].shape == (M,) and ss2["epoch"].shape == (M,)
+
+
+def test_host_loop_resume_keys_by_global_round():
+    """A host run split into two segments (second starts at state.t=3)
+    must reproduce the one-shot run: the loop keys the sampler by the
+    GLOBAL round counter, not its 0-based loop index."""
+    store, init_fn, sample_fn = _problem()
+    cfg = FLConfig(m=M, s=S, eta_l=0.03, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0)
+    av = AvailabilityCfg(kind="sine", gamma=0.3)
+    rf = make_round_fn(cfg, _loss_fn, {}, av, jnp.full((M,), 0.6))
+    data_key = jax.random.PRNGKey(42)
+
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
+    s_one, h_one = run_rounds(state, rf, None, 6, sample_fn=sample_fn,
+                              store=store, data_key=data_key,
+                              sampler_state=init_fn(store, data_key))
+
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
+    ss = init_fn(store, data_key)
+    s_a, h_a = run_rounds(state, rf, None, 3, sample_fn=sample_fn,
+                          store=store, data_key=data_key, sampler_state=ss)
+    # NB: run_rounds does not return the sampler state; replay it to the
+    # segment boundary (uniform mode is stateless, so ss is unchanged)
+    s_b, h_b = run_rounds(s_a, rf, None, 3, sample_fn=sample_fn,
+                          store=store, data_key=data_key, sampler_state=ss)
+    _assert_same(s_one, s_b, h_one[3:],
+                 [dict(r, t=r["t"] + 3) for r in h_b])
+
+
+def test_prebuilt_chunk_fn_with_tail_raises():
+    """T % K != 0 with a prebuilt chunk_fn must not silently rebuild an
+    unsharded tail executor — it demands make_tail_fn or a clean T."""
+    K, T = 4, 6
+    cfg, rf, init_fn, sample_fn, store, state = _chunk_parts(K=K)
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    data_key = jax.random.PRNGKey(1)
+    with pytest.raises(ValueError, match="make_tail_fn"):
+        run_rounds(state, rf, None, T, chunk_rounds=K, chunk_fn=chunk_fn,
+                   sample_fn=sample_fn, store=store, data_key=data_key,
+                   sampler_state=init_fn(store, data_key))
+
+
+def test_prebuilt_chunk_fn_with_make_tail_fn_runs_tail():
+    """With make_tail_fn the prebuilt executor covers full chunks and the
+    caller-built tail covers T % K, matching the all-rebuilt run."""
+    K, T = 4, 6
+    cfg, rf, init_fn, sample_fn, store, state = _chunk_parts(K=K)
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    tails = []
+
+    def make_tail_fn(k):
+        tails.append(k)
+        return make_chunk_fn(cfg, rf, sample_fn, k)
+
+    data_key = jax.random.PRNGKey(1)
+    s_pre, h_pre = run_rounds(
+        state, rf, None, T, chunk_rounds=K, chunk_fn=chunk_fn,
+        make_tail_fn=make_tail_fn, sample_fn=sample_fn, store=store,
+        data_key=data_key, sampler_state=init_fn(store, data_key))
+    assert tails == [T % K]
+    state2 = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
+    s_ref, h_ref = run_rounds(
+        state2, rf, None, T, chunk_rounds=K, sample_fn=sample_fn,
+        store=store, data_key=data_key,
+        sampler_state=init_fn(store, data_key))
+    _assert_same(s_ref, s_pre, h_ref, h_pre)
+
+
 def test_undonated_chunk_keeps_input_alive():
-    cfg, rf, sample_fn, store, state = _chunk_parts(K=2)
+    cfg, rf, init_fn, sample_fn, store, state = _chunk_parts(K=2)
     chunk_fn = make_chunk_fn(cfg, rf, sample_fn, 2, donate=False)
-    chunk_fn(state, store, jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(1)
+    chunk_fn(state, init_fn(store, key), store, key)
     assert not state.clients_tr.is_deleted()
 
 
@@ -171,7 +269,8 @@ def test_undonated_chunk_keeps_input_alive():
 # device sampler
 # ---------------------------------------------------------------------------
 
-def test_device_sampler_respects_client_shards():
+@pytest.mark.parametrize("sampling", ["uniform", "epoch"])
+def test_device_sampler_respects_client_shards(sampling):
     """Client i's store rows carry the value i; every sampled element must
     equal its row's client id, across ragged shard sizes."""
     m, s, b = 5, 2, 3
@@ -185,9 +284,10 @@ def test_device_sampler_respects_client_shards():
         idx.append(np.arange(off, off + k))
         off += k
     store = device_store(arrays, idx)
-    sample = make_device_sampler(m, s, b)
+    init_fn, sample = make_device_sampler(m, s, b, mode=sampling)
+    ss = init_fn(store, jax.random.PRNGKey(9))
     for seed in range(5):
-        batch = sample(store, jax.random.PRNGKey(seed))
+        batch, ss = sample(store, ss, jax.random.PRNGKey(seed))
         assert batch["x"].shape == (m, s, b, 1)
         assert batch["y"].shape == (m, s, b)
         assert batch["x"].dtype == jnp.float32
@@ -203,8 +303,10 @@ def test_device_sampler_matches_federated_dataset_shapes():
     idx = [np.arange(i, 40, 4) for i in range(4)]
     ds = FederatedDataset(arrays, idx, seed=0)
     host = ds.round_batches(0, 3, 2)
-    dev = make_device_sampler(4, 3, 2)(ds.device_store(),
-                                       jax.random.PRNGKey(0))
+    store = ds.device_store()
+    init_fn, sample = make_device_sampler(4, 3, 2)
+    dev, _ = sample(store, init_fn(store, jax.random.PRNGKey(0)),
+                    jax.random.PRNGKey(0))
     assert set(host) == set(dev)
     for k in host:
         assert host[k].shape == dev[k].shape
@@ -283,7 +385,7 @@ def test_init_state_does_not_alias_template(flat):
     rng = np.random.default_rng(0)
     store = device_store(dict(x=rng.normal(size=(16, 2)).astype(np.float32)),
                          [np.arange(i, 16, 4) for i in range(4)])
-    sample_fn = make_device_sampler(4, 2, B)
+    init_fn, sample_fn = make_device_sampler(4, 2, B)
 
     def loss(tr, frozen, batch, rng):
         return jnp.sum(tr["w"] ** 2) * jnp.mean(batch["x"])
@@ -292,6 +394,7 @@ def test_init_state_does_not_alias_template(flat):
                        jnp.full((4,), 0.6))
     state = init_fl_state(jax.random.PRNGKey(0), cfg, template)
     chunk_fn = make_chunk_fn(cfg, rf, sample_fn, 2)
-    chunk_fn(state, store, jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(1)
+    chunk_fn(state, init_fn(store, key), store, key)
     assert not template["w"].is_deleted()
     np.testing.assert_array_equal(np.asarray(template["w"]), np.ones((3, 3)))

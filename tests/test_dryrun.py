@@ -49,6 +49,24 @@ def test_mini_dryrun_flat_chunk_train(tmp_path):
 
 
 @pytest.mark.slow
+def test_mini_dryrun_flat_chunk_epoch_train(tmp_path):
+    """flat_chunk + epoch-permutation sampling: the carried SamplerState
+    ([m, cap] permutation + [m] cursors, sharded over the client axes by
+    sampler_pspecs) rides the scan carry and the whole thing still lowers,
+    compiles, donates, and emits the gossip all-reduce."""
+    out = str(tmp_path / "dry.json")
+    r = _run_dryrun(["--arch", "tiny", "--shape", "train_4k",
+                     "--mesh", "multi", "--test-mesh",
+                     "--variant", "flat_chunk4+epoch", "--out", out])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(out))[0]
+    assert rec["ok"] and rec["chunk_rounds"] == 4
+    assert rec["sampling"] == "epoch"
+    assert rec["collectives"]["all-reduce"] > 0
+    assert rec["memory"]["alias_size_in_bytes"] > 0
+
+
+@pytest.mark.slow
 def test_mini_dryrun_decode_multi_pod(tmp_path):
     out = str(tmp_path / "dry.json")
     r = _run_dryrun(["--arch", "tiny", "--shape", "decode_32k",

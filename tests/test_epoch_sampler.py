@@ -1,0 +1,194 @@
+"""Stateful device sampler (data/federated.make_device_sampler).
+
+Guarantees under test:
+  * exactly-once — under mode="epoch" every client visits each of its own
+    samples exactly once per epoch, for ragged shards, including clients
+    whose shard is smaller than one round's draw (several epoch wraps
+    inside a single sample() call), and across round boundaries.
+  * determinism — the epoch stream is a pure function of (data_key, store),
+    independent of the per-round key argument.
+  * host-vs-chunked parity with the carried SamplerState threaded through
+    run_rounds' host loop and make_chunk_fn's scan carry.
+  * uniform mode draws via jax.random.randint are unbiased across each
+    client's shard (the floor(u * count) f32 draw it replaced was not).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                        make_round_fn, run_rounds)
+from repro.data import device_store, make_device_sampler
+
+
+def _owner_store(sizes):
+    """Store whose y values are the global sample ids, sharded raggedly."""
+    n = sum(sizes)
+    arrays = dict(x=np.arange(n, dtype=np.float32)[:, None],
+                  y=np.arange(n, dtype=np.int32))
+    idx, off = [], 0
+    for k in sizes:
+        idx.append(np.arange(off, off + k))
+        off += k
+    return device_store(arrays, idx), idx
+
+
+def _drain(sizes, s, b, rounds, seed=0):
+    """Run the epoch sampler; returns per-client draw sequences (y ids)."""
+    m = len(sizes)
+    store, idx = _owner_store(sizes)
+    init_fn, sample = make_device_sampler(m, s, b, mode="epoch")
+    key = jax.random.PRNGKey(seed)
+    ss = init_fn(store, key)
+    seq = [[] for _ in range(m)]
+    for t in range(rounds):
+        batch, ss = sample(store, ss, jax.random.fold_in(key, t))
+        y = np.asarray(batch["y"]).reshape(m, -1)
+        for i in range(m):
+            seq[i].extend(y[i].tolist())
+    return seq, idx
+
+
+def _assert_exactly_once(seq, idx, sizes):
+    for i, c in enumerate(sizes):
+        draws, shard = seq[i], sorted(idx[i].tolist())
+        assert len(draws) >= 2 * c, "need >= 2 epochs to test the property"
+        for e in range(len(draws) // c):
+            window = sorted(draws[e * c:(e + 1) * c])
+            assert window == shard, (
+                f"client {i} epoch {e}: visited {window}, shard {shard}")
+
+
+@pytest.mark.parametrize("sizes,s,b", [
+    ([1, 2, 3, 5, 8], 2, 3),     # shards smaller than one round's draw
+    ([7, 7, 7], 3, 2),           # uniform shards, draw < shard
+    ([4, 9, 2, 16], 1, 5),       # draw crosses epochs mid-batch
+    ([1, 1], 4, 4),              # degenerate 1-sample clients
+])
+def test_epoch_sampler_exactly_once_per_epoch(sizes, s, b):
+    rounds = max(3, (3 * max(sizes)) // (s * b) + 1)
+    seq, idx = _drain(sizes, s, b, rounds)
+    _assert_exactly_once(seq, idx, sizes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=11), min_size=2,
+                max_size=6),
+       st.integers(min_value=1, max_value=3),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=2 ** 16))
+def test_epoch_sampler_exactly_once_property(sizes, s, b, seed):
+    rounds = max(2, (2 * max(sizes)) // (s * b) + 1)
+    seq, idx = _drain(sizes, s, b, rounds, seed=seed)
+    _assert_exactly_once(seq, idx, sizes)
+
+
+def test_epoch_stream_ignores_per_round_key():
+    """The epoch walk is fully determined by the carried state; feeding
+    garbage per-round keys must not change the stream (that is what makes
+    host-loop and chunked runs identical by construction)."""
+    sizes, s, b = [3, 5, 2], 2, 2
+    m = len(sizes)
+    store, _ = _owner_store(sizes)
+    init_fn, sample = make_device_sampler(m, s, b, mode="epoch")
+    base = jax.random.PRNGKey(3)
+    ss_a, ss_b = init_fn(store, base), init_fn(store, base)
+    for t in range(4):
+        ba, ss_a = sample(store, ss_a, jax.random.fold_in(base, t))
+        bb, ss_b = sample(store, ss_b, jax.random.PRNGKey(1000 + t))
+        np.testing.assert_array_equal(np.asarray(ba["y"]),
+                                      np.asarray(bb["y"]))
+
+
+def test_epoch_reshuffles_between_epochs():
+    """Consecutive epochs must (with overwhelming probability) use
+    different permutations — a fixed-order pass would be epoch sampling
+    only in name."""
+    sizes = [12, 12]
+    seq, idx = _drain(sizes, 2, 3, rounds=8, seed=1)
+    for i, c in enumerate(sizes):
+        epochs = [tuple(seq[i][e * c:(e + 1) * c]) for e in range(3)]
+        assert len(set(epochs)) > 1, "identical order in every epoch"
+
+
+# ---------------------------------------------------------------------------
+# host-vs-chunked parity with the carried SamplerState
+# ---------------------------------------------------------------------------
+
+M, S, B, DIM = 6, 3, 4, 4
+
+
+def _fl_run(strategy, *, flat, chunk, T=6, K=4):
+    rng = np.random.default_rng(0)
+    n = 48
+    store = device_store(
+        dict(x=rng.normal(size=(n, DIM)).astype(np.float32),
+             y=rng.normal(size=(n, DIM)).astype(np.float32)),
+        [np.arange(i, n, M) for i in range(M)])
+    init_fn, sample_fn = make_device_sampler(M, S, B, mode="epoch")
+
+    def loss_fn(tr, frozen, batch, rng):
+        return 0.5 * jnp.mean((batch["x"] @ tr["w"] - batch["y"]) ** 2)
+
+    cfg = FLConfig(m=M, s=S, eta_l=0.03, strategy=strategy,
+                   lr_schedule=False, grad_clip=0.0, flat_state=flat)
+    rf = make_round_fn(cfg, loss_fn, {}, AvailabilityCfg(kind="sine"),
+                       jnp.full((M,), 0.6))
+    state = init_fl_state(jax.random.PRNGKey(0), cfg,
+                          {"w": jnp.ones((DIM, DIM)) * 0.1})
+    data_key = jax.random.PRNGKey(42)
+    kw = dict(sample_fn=sample_fn, store=store, data_key=data_key,
+              sampler_state=init_fn(store, data_key))
+    if chunk:
+        return run_rounds(state, rf, None, T, chunk_rounds=K, **kw)
+    return run_rounds(state, rf, None, T, **kw)
+
+
+@pytest.mark.parametrize("flat", [False, True])
+@pytest.mark.parametrize("strategy", ["fedawe", "mifa"])
+def test_epoch_chunked_matches_host_loop(strategy, flat):
+    """T=6 at K=4 exercises the mid-epoch chunk boundary AND the shorter
+    tail chunk: the SamplerState carried out of the first dispatch must
+    resume the permutation walk exactly where the host loop does."""
+    s_h, h_h = _fl_run(strategy, flat=flat, chunk=False)
+    s_c, h_c = _fl_run(strategy, flat=flat, chunk=True)
+    for a, b in zip(jax.tree.leaves(s_h._replace(spec=None)),
+                    jax.tree.leaves(s_c._replace(spec=None))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    assert len(h_h) == len(h_c)
+    for rh, rc in zip(h_h, h_c):
+        assert set(rh) == set(rc)
+        for k in rh:
+            np.testing.assert_allclose(rh[k], rc[k], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# uniform mode: exact randint draw
+# ---------------------------------------------------------------------------
+
+def test_uniform_sampler_randint_distribution():
+    """Every index of every ragged shard must be reachable and uniformly
+    hit (the replaced floor(u * count) draw was biased at the edges and
+    collapsed for counts past the f32 mantissa)."""
+    sizes = [3, 7, 11]
+    m, s, b = len(sizes), 4, 8
+    store, idx = _owner_store(sizes)
+    init_fn, sample = make_device_sampler(m, s, b, mode="uniform")
+    ss = init_fn(store, jax.random.PRNGKey(0))
+    counts = np.zeros((m, max(sizes)), np.int64)
+    rounds = 400
+    for t in range(rounds):
+        batch, ss = sample(store, ss, jax.random.PRNGKey(t))
+        y = np.asarray(batch["y"]).reshape(m, -1)
+        for i in range(m):
+            local = y[i] - idx[i][0]          # global id -> position in shard
+            np.add.at(counts[i], local, 1)
+    draws = rounds * s * b
+    for i, c in enumerate(sizes):
+        assert counts[i, c:].sum() == 0, "drew a padded column"
+        freq = counts[i, :c] / draws
+        np.testing.assert_allclose(freq, np.full(c, 1.0 / c),
+                                   atol=4.0 * np.sqrt(1.0 / (c * draws)))

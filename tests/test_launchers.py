@@ -22,6 +22,20 @@ def test_train_cli_image_preset(tmp_path):
 
 
 @pytest.mark.slow
+def test_train_cli_epoch_sampling(tmp_path):
+    """--sampling epoch drives the device sampler through BOTH executors:
+    the chunked run and the host-loop run thread the same carried
+    SamplerState (smoke: finite results either way)."""
+    common = ["--preset", "image", "--strategy", "fedawe", "--rounds", "6",
+              "--m", "8", "--s", "2", "--batch", "8", "--n-samples", "1500",
+              "--eval-every", "6", "--sampling", "epoch"]
+    final_chunk = train.main(common + ["--chunk-rounds", "3"])
+    assert 0.0 <= final_chunk["eval_acc"] <= 1.0
+    final_host = train.main(common)
+    assert 0.0 <= final_host["eval_acc"] <= 1.0
+
+
+@pytest.mark.slow
 def test_train_cli_lm_preset(tmp_path):
     final = train.main([
         "--preset", "lm", "--strategy", "fedau", "--dynamics", "stationary",

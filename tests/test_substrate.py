@@ -60,6 +60,58 @@ def test_markov_trace_has_persistence():
     assert corr > 0.3
 
 
+def test_markov_probs_at_matches_empirical_frequency():
+    """probs_at under kind="markov" must be the chain's per-client
+    stationary marginal up_i/(up_i + down) — the ground truth the known-p
+    reweighting is evaluated against — not base_p (the chain never admits
+    base_p as its occupancy unless up/(up+down) happens to equal it)."""
+    cfg = AvailabilityCfg(kind="markov", markov_up=0.3, markov_down=0.4)
+    base_p = jnp.asarray(np.linspace(0.1, 0.9, 12).astype(np.float32))
+    T = 6000
+    masks = np.asarray(availability_trace(jax.random.PRNGKey(2), cfg,
+                                          base_p, T))
+    emp = masks[T // 10:].mean(axis=0)        # drop burn-in from all-on init
+    p = np.asarray(probs_at(cfg, base_p, 0))
+    np.testing.assert_allclose(emp, p, atol=0.05)
+    # and it must NOT be base_p (the old bug): the gap is macroscopic
+    assert np.max(np.abs(p - np.asarray(base_p))) > 0.1
+
+
+def test_markov_turn_on_clamped_for_hot_clients():
+    """markov_up * base_p / mean(base_p) exceeds 1 for hot clients; the
+    clamp keeps the turn-on a probability AND the marginal ordered/in
+    (0, 1], preserving heterogeneity instead of flattening it."""
+    from repro.core.availability import markov_turn_on
+
+    cfg = AvailabilityCfg(kind="markov", markov_up=0.9, markov_down=0.2)
+    base_p = jnp.asarray([0.05, 0.1, 0.2, 0.95, 1.0], jnp.float32)
+    up = np.asarray(markov_turn_on(cfg, base_p))
+    raw = 0.9 * np.asarray(base_p) / np.asarray(base_p).mean()
+    assert raw.max() > 1.0                    # the regime the clamp fixes
+    assert up.max() <= 1.0 and up.min() >= 0.0
+    p = np.asarray(probs_at(cfg, base_p, 0))
+    assert np.all(p > 0.0) and np.all(p <= 1.0)
+    assert np.all(np.diff(p) >= -1e-7)        # monotone in base_p
+    # empirical occupancy of the clamped chain agrees with the marginal
+    emp = np.asarray(availability_trace(jax.random.PRNGKey(3), cfg, base_p,
+                                        4000))[400:].mean(axis=0)
+    np.testing.assert_allclose(emp, p, atol=0.05)
+
+
+def test_markov_probs_at_respects_delta_floor():
+    """The floor is applied in the chain's dynamics, so the reported
+    marginal must both respect it AND match what sample_active actually
+    simulates (a clip of the report alone would diverge from the chain)."""
+    cfg = AvailabilityCfg(kind="markov", markov_up=0.01, markov_down=0.9,
+                          delta_floor=0.2)
+    base_p = jnp.asarray([0.01, 0.5, 1.0], jnp.float32)
+    p = np.asarray(probs_at(cfg, base_p, 0))
+    assert np.all(p >= 0.2 - 1e-6)    # floor holds up to f32 rounding
+    emp = np.asarray(availability_trace(jax.random.PRNGKey(5), cfg, base_p,
+                                        6000))[600:].mean(axis=0)
+    np.testing.assert_allclose(emp, p, atol=0.05)
+
+
 # ---------------------------------------------------------------------------
 # data pipeline
 # ---------------------------------------------------------------------------

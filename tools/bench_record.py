@@ -14,8 +14,10 @@ populated:
 measurement is compared row-by-row against the committed baseline (or
 ``--baseline PATH``) and the process exits non-zero when any row's
 us_per_call regressed by more than ``--threshold`` (default 25%) — so the
-rounds_per_sec/{host_loop,chunked} executor numbers and the kernel
-micro-benches are guarded:
+rounds_per_sec/{host_loop,chunked,chunked_epoch} executor numbers and the
+kernel micro-benches are guarded.  Thresholds are ratio-based against the
+committed number and the bench itself is min-of-reps, because container
+wall-clock is 2-3x noisy — never gate on absolute times:
 
     python tools/bench_record.py --check
 """
