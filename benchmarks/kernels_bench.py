@@ -87,8 +87,16 @@ def _bench_round_executor(quick):
     sampling, donated FLState, one metrics fetch per chunk) — on the tiny
     FL bench config, flat substrate and pytree state, plus the chunked
     executor under epoch-permutation sampling (the carried SamplerState
-    rides the scan).  us_per_call is per ROUND; derived is rounds/sec
-    (higher = better)."""
+    rides the scan), plus the S-batched multi-seed executor
+    (engine.make_seeds_chunk_fn: one dispatch advances S=4 independent
+    seed replicates a chunk, vs the S sequential chunked runs the paper's
+    multi-seed grid would otherwise cost, measured explicitly as the
+    chunked_seeds_seq row with the same per-seed init and fold_in keys).
+    us_per_call is per wall-clock ROUND; derived is rounds/sec — except
+    the chunked_seeds row, whose derived is the speedup of the one
+    S-batched dispatch stream over the S sequential runs
+    (chunked_seeds_seq time / chunked_seeds time; > 1 = batching the
+    seed axis wins)."""
     from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
                             make_round_fn, run_rounds)
     from repro.data import FederatedDataset, make_device_sampler
@@ -154,6 +162,53 @@ def _bench_round_executor(quick):
 
         return once
 
+    n_seeds = 4
+
+    def make_seeds_execs(S=n_seeds):
+        """(batched, sequential) multi-seed executors: the same S seed
+        replicates (init rng / data key ``fold_in(base, j)``) advanced by
+        one S-batched dispatch stream vs S back-to-back single-seed
+        chunked runs — the cost a multi-seed grid cell pays without
+        make_seeds_chunk_fn.  Both include per-seed state init, as a real
+        cell does."""
+        from repro.core import make_chunk_fn, make_seeds_chunk_fn
+        from repro.launch.experiments import build_seed_batch, \
+            run_seed_rounds
+
+        cfg = FLConfig(m=m, s=s, eta_l=0.05, strategy="fedawe",
+                       lr_schedule=False, grad_clip=0.0, flat_state=True)
+        rf = make_round_fn(cfg, loss_fn, {}, av, base_p)
+        init_sampler, sample_fn = make_device_sampler(
+            m, s, b, mode="uniform", min_count=n // m)
+        batched_fn = make_seeds_chunk_fn(cfg, rf, sample_fn, K, S)
+        single_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+
+        def once_batched(rounds):
+            states, sss, dks = build_seed_batch(
+                cfg, tr0, jax.random.PRNGKey(0), data_key, init_sampler,
+                store, S)
+            states, hists = run_seed_rounds(
+                states, batched_fn, rounds, K, sampler_states=sss,
+                store=store, data_keys=dks, n_seeds=S)
+            return states, hists[0]
+
+        def once_seq(rounds):
+            hists = []
+            for j in range(S):
+                st = init_fl_state(
+                    jax.random.fold_in(jax.random.PRNGKey(0), j), cfg, tr0)
+                dk = jax.random.fold_in(data_key, j)
+                st, h_ = run_rounds(st, rf, None, rounds, chunk_rounds=K,
+                                    chunk_fn=single_fn, sample_fn=sample_fn,
+                                    store=store, data_key=dk,
+                                    sampler_state=init_sampler(store, dk))
+                hists.append(h_)
+            return st, hists[0]
+
+        return once_batched, once_seq
+
+    seeds_batched, seeds_seq = make_seeds_execs()
+
     execs = {
         "host_loop": make_exec(True, chunked=False),
         "chunked": make_exec(True, chunked=True),
@@ -163,6 +218,9 @@ def _bench_round_executor(quick):
         # substrate): the exactly-once cursor walk should ride within ~25%
         # of the uniform chunked row
         "chunked_epoch": make_exec(True, chunked=True, sampling="epoch"),
+        # S-batched multi-seed executor vs its S-sequential-runs baseline
+        "chunked_seeds": seeds_batched,
+        "chunked_seeds_seq": seeds_seq,
     }
     for once in execs.values():
         once(K)                        # warmup: compile round/chunk
@@ -178,8 +236,19 @@ def _bench_round_executor(quick):
             assert len(hist) == T
             b_ = best[name]
             best[name] = dt if b_ is None else min(b_, dt)
-    return [(f"rounds_per_sec/{name}", round(t / T * 1e6, 1),
-             round(T / t, 1)) for name, t in best.items()]
+    rows = []
+    for name, t in best.items():
+        if name == "chunked_seeds":
+            # derived: the S sequential chunked runs this one batched
+            # dispatch stream replaces, over the batched time (> 1 = the
+            # seed-axis vmap wins; same interleaved bench run, so the
+            # ratio is robust to container load)
+            rows.append((f"rounds_per_sec/{name}", round(t / T * 1e6, 1),
+                         round(best["chunked_seeds_seq"] / t, 2)))
+        else:
+            rows.append((f"rounds_per_sec/{name}", round(t / T * 1e6, 1),
+                         round(T / t, 1)))
+    return rows
 
 
 def run(quick=False):

@@ -6,12 +6,15 @@ from repro.core.engine import (  # noqa: F401
     FLState,
     client_trainables,
     global_trainables,
+    index_seed,
     init_fl_state,
     local_sgd,
     make_chunk_fn,
     make_round_fn,
     make_round_fn_with_frozen,
+    make_seeds_chunk_fn,
     run_rounds,
+    stack_seeds,
 )
 from repro.core.flatten import FlatSpec  # noqa: F401
 from repro.core.strategies import REGISTRY, get_strategy  # noqa: F401

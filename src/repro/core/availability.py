@@ -25,6 +25,22 @@ KINDS = ("stationary", "staircase", "sine", "interleaved_sine", "markov")
 
 @dataclasses.dataclass(frozen=True)
 class AvailabilityCfg:
+    """Static config of one availability process (hashable; closed over by
+    the jitted round function).
+
+    ``kind`` selects the process (one of ``KINDS``); the remaining fields
+    are its knobs — ``gamma``/``period`` shape the sine family,
+    ``staircase_low`` the staircase's second half-period level,
+    ``cutoff`` the interleaved_sine hard threshold (probabilities below it
+    become EXACT zeros, deliberately violating Assumption 1 unless
+    ``delta_floor`` re-clamps them), and ``markov_up``/``markov_down`` the
+    Gilbert-Elliott transition rates (``markov_up`` is a *scale*:
+    per-client turn-on is ``markov_up * p_i / mean(p)``, clamped — see
+    ``markov_turn_on``).  Consumed by ``sample_active`` (one mask draw per
+    round, carrying the ``[m]`` markov state) and ``probs_at`` (the
+    per-client marginal the importance-weighted strategies compare
+    against).
+    """
     kind: str = "stationary"
     gamma: float = 0.3
     period: int = 20

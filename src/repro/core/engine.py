@@ -20,7 +20,7 @@ and at eval/checkpoint boundaries (``global_trainables``). Stateless
 strategies keep no client stack at all; their local SGD starts from a
 broadcast *view* of the flat global instead of a materialized copy.
 
-Two executors drive the round function:
+Three executors drive the round function:
 
   * host loop (``run_rounds`` default): one jitted dispatch per round,
     batches sampled on the host and uploaded, one blocking metrics fetch
@@ -44,6 +44,13 @@ Two executors drive the round function:
     (sharding/rules.flat_pspecs + sampler_pspecs) so the fused flat
     aggregation lowers to the implicit-gossip all-reduce; eval/checkpoint
     align to chunk boundaries.
+  * seed-batched executor (``make_seeds_chunk_fn``): the chunk body vmapped
+    over a leading seed axis — ONE dispatch advances S independent seed
+    replicates K rounds each (states stacked with ``stack_seeds``, per-seed
+    data keys, shared store), donated and shardable via
+    sharding/rules.seed_pspecs.  Per-seed results are bit-identical to S
+    single-seed chunked runs, which is how the paper's multi-seed
+    experiment grid (launch/experiments.py) runs as one-dispatch cells.
 """
 from __future__ import annotations
 
@@ -61,6 +68,8 @@ from repro.core.strategies import Strategy, get_strategy
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
+    """Static config of the federated optimization (hashable; closed over
+    by the jitted round function — changing any field retraces)."""
     m: int                      # number of clients
     s: int = 10                 # local steps per round
     eta_l: float = 0.05         # local lr (eta_0; 1/sqrt(t/10+1) schedule)
@@ -73,6 +82,13 @@ class FLConfig:
 
 
 class FLState(NamedTuple):
+    """Whole persistent state of a run — the (donated) executor carry.
+
+    Every field owns its buffer (``init_fl_state`` copies), because the
+    chunked executors donate the entire tuple; ``spec`` is leafless static
+    metadata and survives ``jax.tree`` operations unchanged.  Under the
+    S-batched executor every array leaf grows a leading ``[S]`` seed axis
+    (``stack_seeds``)."""
     global_tr: Any              # global trainables ([N] flat when flat_state)
     clients_tr: Any             # [m, ...] stacked trainables (or None;
                                 # [m, N] flat when flat_state)
@@ -331,6 +347,98 @@ def make_chunk_fn(cfg, round_fn, sample_fn, chunk_rounds, *,
     else:
         def chunk(state, sampler_state, store, data_key):
             return _scan(state, None, sampler_state, store, data_key)
+        donate_idx = (0, 1)
+
+    if not jit:
+        return chunk
+    kwargs = {}
+    if donate:
+        kwargs["donate_argnums"] = donate_idx
+    if in_shardings is not None:
+        kwargs["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kwargs["out_shardings"] = out_shardings
+    return jax.jit(chunk, **kwargs)
+
+
+def stack_seeds(trees):
+    """Stack a list of identically-structured pytrees along a new leading
+    seed axis: ``[tree_0, ..., tree_{S-1}] -> tree with [S, ...] leaves``.
+
+    This is how per-seed replicate state enters the S-batched executor
+    (``make_seeds_chunk_fn``): build each seed's ``FLState`` /
+    ``SamplerState`` / data key exactly as a single-seed run would, then
+    stack.  ``jnp.stack`` is bitwise-preserving, so slice ``j`` of the
+    stacked tree is the byte-for-byte input of independent run ``j`` —
+    the root of the multi-seed parity guarantee.  Static treedef metadata
+    (the ``FlatSpec`` riding in ``FLState.spec``) is leafless and passes
+    through unchanged; all trees must share it.
+    """
+    assert trees, "stack_seeds needs at least one tree"
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def index_seed(tree, j):
+    """Slice seed replicate ``j`` out of a seed-stacked pytree (inverse of
+    one row of ``stack_seeds``): ``[S, ...]`` leaves -> ``[...]`` leaves.
+    Used at eval/checkpoint boundaries, where per-seed models are examined
+    one at a time (``global_trainables(index_seed(states, j))``)."""
+    return jax.tree.map(lambda x: x[j], tree)
+
+
+def make_seeds_chunk_fn(cfg, round_fn, sample_fn, chunk_rounds, n_seeds, *,
+                        with_frozen=False, donate=True, jit=True,
+                        in_shardings=None, out_shardings=None):
+    """S-batched chunk executor: one dispatch advances ``n_seeds``
+    INDEPENDENT seed replicates by ``chunk_rounds`` rounds each.
+
+    This is ``make_chunk_fn``'s scan body vmapped over a leading seed axis:
+    the ``FLState``, the ``SamplerState`` and the per-seed data keys carry
+    ``[S, ...]`` leaves (built with ``stack_seeds``), while the device
+    ``store`` and (with ``with_frozen``) the frozen params are closed over
+    and shared by every replicate.  Each replicate evolves exactly as its
+    single-seed chunked run would — same availability draws (per-seed
+    ``FLState.rng`` / markov state), same sampler stream (per-seed data
+    key + carried sampler state) — so per-seed results are bit-identical
+    to S independent runs with the corresponding keys; only the dispatch
+    is fused.  This scales the *experiment* axis the way the chunked
+    executor scales the round axis: an S-seed, K-round cell of the paper's
+    grid costs one dispatch instead of S*K.
+
+    Returned callable::
+
+        chunk(states, sampler_states, store, data_keys)
+            -> (states, sampler_states, metrics)     # metrics [S, K] per key
+
+    or with ``with_frozen`` (frozen params as runtime arg, pod tier)::
+
+        chunk(states, frozen, sampler_states, store, data_keys)
+
+    ``states``/``sampler_states`` are donated (every per-seed buffer —
+    dominated by the ``[S, m, N]`` client stacks — updates in place).
+    ``in_shardings``/``out_shardings`` place the seed axis on the mesh
+    (``sharding/rules.seed_pspecs``: seeds ride ``('pod','data')`` — or a
+    dedicated mesh axis — with any inner client-axis placement they
+    displace stripped to replicated).
+    """
+    del cfg  # kept for signature symmetry with make_chunk_fn
+    S = int(n_seeds)
+    assert S >= 1, "n_seeds must be >= 1"
+    base = make_chunk_fn(None, round_fn, sample_fn, chunk_rounds,
+                         with_frozen=with_frozen, donate=False, jit=False)
+
+    if with_frozen:
+        def chunk(states, frozen, sampler_states, store, data_keys):
+            # frozen/store close over the vmapped fn -> broadcast, unbatched
+            return jax.vmap(
+                lambda st, ss, dk: base(st, frozen, ss, store, dk)
+            )(states, sampler_states, data_keys)
+        donate_idx = (0, 2)
+    else:
+        def chunk(states, sampler_states, store, data_keys):
+            return jax.vmap(
+                lambda st, ss, dk: base(st, ss, store, dk)
+            )(states, sampler_states, data_keys)
         donate_idx = (0, 1)
 
     if not jit:

@@ -9,6 +9,8 @@ from repro.data.federated import (  # noqa: F401
     SAMPLING_MODES,
     FederatedDataset,
     device_store,
+    init_seed_sampler_states,
     make_device_sampler,
     padded_client_index,
+    seed_data_keys,
 )

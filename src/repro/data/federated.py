@@ -137,6 +137,42 @@ def device_store(arrays: Dict[str, np.ndarray], client_indices,
 SAMPLING_MODES = ("uniform", "epoch")
 
 
+def seed_data_keys(data_key, n_seeds):
+    """Per-seed data keys for the S-batched executor: ``[S, 2] uint32``
+    with row ``j = fold_in(data_key, j)``.
+
+    This is THE key convention of the multi-seed parity guarantee: seed
+    replicate ``j`` of a ``--seeds S`` run must see exactly the sample
+    stream (and epoch reshuffles) of an independent single-seed run driven
+    by ``fold_in(data_key, j)`` — tests pin the correspondence down
+    bitwise.  Each seed's stream is then further keyed per round by
+    ``fold_in(seed_key, t)`` inside the executors, so seeds never share
+    draws and rounds never collide within a seed.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    return jax.vmap(lambda j: jax.random.fold_in(data_key, j))(
+        jnp.arange(int(n_seeds)))
+
+
+def init_seed_sampler_states(init_sampler_state, store, data_keys):
+    """Stacked per-seed ``SamplerState``: ``init_sampler_state(store,
+    data_keys[j])`` per seed, tree-stacked along a new leading ``[S]`` axis
+    (the layout ``engine.make_seeds_chunk_fn`` carries and donates).
+
+    Built seed-by-seed on the host — bitwise the states the S independent
+    runs would start from — rather than under vmap, so init cost is paid
+    once and parity holds by construction.  The uniform sampler's empty
+    state stacks to an (empty) ``{}`` with no leaves, which batches and
+    donates trivially.
+    """
+    from repro.core.engine import stack_seeds
+
+    return stack_seeds([init_sampler_state(store, data_keys[j])
+                        for j in range(int(data_keys.shape[0]))])
+
+
 def _gather_batches(store, cols, m, s, b):
     """cols [m, s*b]: per-client columns into the padded index matrix ->
     {k: [m, s, b, ...]} round batches, as one gather per array."""

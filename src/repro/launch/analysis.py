@@ -1,17 +1,27 @@
-"""Roofline-term extraction from lowered/compiled XLA artifacts.
+"""Run analysis: roofline-term extraction from compiled XLA artifacts, and
+seed-stack metric aggregation for the multi-seed experiment grid.
 
-Sources:
+Roofline sources:
   * compiled.cost_analysis()  -> HLO FLOPs and bytes accessed (per-device
     SPMD module).
   * lowered/compiled .as_text() -> collective operand bytes, by summing the
     operand shapes of every all-reduce / all-gather / reduce-scatter /
     all-to-all / collective-permute.
 Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Seed aggregation (launch/experiments.py consumes these):
+  * aggregate_seed_histories — per-seed metric histories -> mean±std curves.
+  * seed_summary — final-window per-seed scalars -> mean±std per metric.
+  * write_results_table — paper-style markdown+JSON table under results/.
 """
 from __future__ import annotations
 
+import json
+import os
 import re
-from typing import Dict
+from typing import Dict, List
+
+import numpy as np
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
@@ -221,3 +231,85 @@ def model_flops(cfg, n_tokens: int, kind: str) -> float:
     n = active_param_count(cfg)
     mult = 6.0 if kind == "train" else 2.0
     return mult * n * n_tokens
+
+
+# ---------------------------------------------------------------------------
+# multi-seed metric aggregation (the experiment grid's reporting layer)
+# ---------------------------------------------------------------------------
+
+def aggregate_seed_histories(histories: List[List[dict]]) -> dict:
+    """Per-seed metric histories -> mean±std curves.
+
+    ``histories`` is what the multi-seed executor hands back: one history
+    per seed, each a list of per-round dicts (``{"t": int, "loss": ...}``;
+    eval keys may appear only at eval rounds).  Returns::
+
+        {"seeds": S, "t": [T],
+         "metrics": {key: {"mean": [T], "std": [T], "n": [T]}}}
+
+    where ``n[t]`` counts the seeds that recorded ``key`` at round ``t``
+    (so sparsely-recorded eval metrics aggregate over exactly the seeds
+    and rounds that have them; rounds where no seed recorded the key hold
+    ``None`` — not NaN, so the dict round-trips through strict JSON).
+    ``std`` is the population std across seeds — the ±band of the paper's
+    curves.
+    """
+    assert histories and all(histories), "need at least one non-empty history"
+    T = max(len(h) for h in histories)
+    keys = sorted({k for h in histories for r in h for k in r if k != "t"})
+    out = {"seeds": len(histories), "t": list(range(T)), "metrics": {}}
+    for k in keys:
+        mean, std, n = [], [], []
+        for t in range(T):
+            vals = np.asarray([h[t][k] for h in histories
+                               if t < len(h) and k in h[t]], np.float64)
+            n.append(int(vals.size))
+            mean.append(float(vals.mean()) if vals.size else None)
+            std.append(float(vals.std()) if vals.size else None)
+        out["metrics"][k] = {"mean": mean, "std": std, "n": n}
+    return out
+
+
+def seed_summary(per_seed_finals: List[dict]) -> dict:
+    """Per-seed final scalars (e.g. each seed's last eval) -> per-metric
+    ``{key: {"mean": float, "std": float, "seeds": S}}`` — one table cell
+    of the paper-style results table."""
+    assert per_seed_finals, "need at least one seed"
+    keys = sorted({k for d in per_seed_finals for k in d})
+    out = {}
+    for k in keys:
+        vals = np.asarray([float(d[k]) for d in per_seed_finals if k in d],
+                          np.float64)
+        out[k] = {"mean": float(vals.mean()), "std": float(vals.std()),
+                  "seeds": int(vals.size)}
+    return out
+
+
+def write_results_table(rows: List[dict], path: str,
+                        title: str = "Experiment grid results") -> str:
+    """Write a paper-style results table (markdown + sibling ``.json``).
+
+    ``rows``: one dict per grid cell, e.g. from ``launch/experiments.py``:
+    ``{"scenario": ..., "strategy": ..., "dynamics": ..., "sampling": ...,
+    "seeds": S, "rounds": T, "<metric>": "m±s", ...}`` — every key across
+    all rows becomes a column (missing cells render empty).  Returns the
+    markdown path; the raw rows land next to it as JSON so plots can be
+    regenerated without re-running the grid.
+    """
+    assert rows, "no rows to tabulate"
+    lead = ["scenario", "strategy", "dynamics", "sampling", "seeds",
+            "rounds"]
+    keys = [k for k in lead if any(k in r for r in rows)]
+    keys += sorted({k for r in rows for k in r} - set(keys))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(f"# {title}\n\n")
+        f.write("| " + " | ".join(keys) + " |\n")
+        f.write("|" + "|".join("---" for _ in keys) + "|\n")
+        for r in rows:
+            f.write("| " + " | ".join(str(r.get(k, "")) for k in keys)
+                    + " |\n")
+    with open(os.path.splitext(path)[0] + ".json", "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+        f.write("\n")
+    return path

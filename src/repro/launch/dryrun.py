@@ -29,7 +29,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, supported_shapes
 from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
-                        make_chunk_fn, make_round_fn_with_frozen)
+                        make_chunk_fn, make_round_fn_with_frozen,
+                        make_seeds_chunk_fn)
 from repro.data import make_device_sampler
 from repro.launch import analysis
 from repro.launch.mesh import make_production_mesh, make_test_mesh, n_chips
@@ -38,7 +39,7 @@ from repro.models import (init_cache, init_params, lm_loss, merge_trainable,
 from repro.models.model import prefill, serve_step
 from repro.sharding import (batch_pspecs, cache_pspecs, client_stack_pspecs,
                             flat_pspecs, param_pspecs, sampler_pspecs,
-                            serve_batch_pspecs)
+                            seed_pspecs, serve_batch_pspecs)
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -171,6 +172,16 @@ def _chunk_sampling(variant):
     return "epoch" if "epoch" in variant.split("+") else "uniform"
 
 
+def _chunk_seeds(variant):
+    """'+seeds<S>' selects the S-batched multi-seed executor (S seed
+    replicates advanced per dispatch, seed axis over the client mesh
+    axes); 0 = single-seed flat_chunk."""
+    for tok in variant.split("+"):
+        if tok.startswith("seeds"):
+            return int(tok[len("seeds"):] or 4)
+    return 0
+
+
 def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
     """The donated, sharded, scan-chunked round executor on the flat
     substrate: K FedAWE rounds per dispatch, the [m, N] client stack over
@@ -229,6 +240,28 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
         counts=P(ca),
     )
     metrics_spec = dict(loss=P(None), n_active=P(None), mean_echo=P(None))
+
+    S = _chunk_seeds(variant)
+    if S:
+        # S-batched multi-seed executor: FLState/SamplerState/data keys
+        # grow a leading [S] axis that takes over the client mesh axes
+        # (seed_pspecs strips the displaced inner client placement); the
+        # store and the frozen base stay shared across replicates
+        def _seed_sds(t):
+            return jax.tree.map(lambda x: _sds((S,) + x.shape, x.dtype), t)
+
+        state_spec = seed_pspecs(state_spec, seed_axes=ca)
+        sampler_spec = seed_pspecs(sampler_spec, seed_axes=ca)
+        metrics_spec = seed_pspecs(metrics_spec, seed_axes=ca)
+        fn = make_seeds_chunk_fn(
+            fl, round_fn, sample_fn, K, S, with_frozen=True, donate=True,
+            in_shardings=(_ns(mesh, state_spec), _ns(mesh, frozen_spec),
+                          _ns(mesh, sampler_spec), _ns(mesh, store_spec),
+                          NamedSharding(mesh, P(None, None))),
+            out_shardings=(_ns(mesh, state_spec), _ns(mesh, sampler_spec),
+                           _ns(mesh, metrics_spec)))
+        return fn, (_seed_sds(state_sds), frozen_sds, _seed_sds(sampler_sds),
+                    store_sds, _sds((S, 2), jnp.uint32))
 
     fn = make_chunk_fn(
         fl, round_fn, sample_fn, K, with_frozen=True, donate=True,
@@ -316,13 +349,16 @@ def run_one(arch, shape_name, mesh_kind, *, test_mesh=False, verbose=True,
                                                       multi_pod, variant)
                     rec["chunk_rounds"] = K
                     rec["sampling"] = _chunk_sampling(variant)
+                    if _chunk_seeds(variant):
+                        rec["seeds"] = _chunk_seeds(variant)
                 else:
                     fn, args = build_train_step(cfg, shape, mesh, multi_pod,
                                                 variant=variant)
                 rec["clients"] = fl_clients(mesh)
                 toks = (fl_clients(mesh) * cfg.local_steps
                         * max(1, shape.global_batch // fl_clients(mesh))
-                        * shape.seq_len) * max(1, K)
+                        * shape.seq_len) * max(1, K) \
+                    * max(1, _chunk_seeds(variant))
                 rec["model_flops"] = analysis.model_flops(cfg, toks, "train")
             elif shape.kind == "prefill":
                 fn, args = build_prefill_step(cfg, shape, mesh,
@@ -365,8 +401,9 @@ def run_one(arch, shape_name, mesh_kind, *, test_mesh=False, verbose=True,
             ana = rl.analytic_costs(cfg, shape, ax)
             if shape.kind == "train" and _chunk_k(variant):
                 # analytic model is per round; a chunked dispatch covers K
-                ana = {k: v * _chunk_k(variant)
-                       if isinstance(v, (int, float)) else v
+                # rounds (x S seed replicates under +seedsS)
+                mul = _chunk_k(variant) * max(1, _chunk_seeds(variant))
+                ana = {k: v * mul if isinstance(v, (int, float)) else v
                        for k, v in ana.items()}
             # baseline: cross-check analytic vs measured; variants change
             # the collective schedule, so trust the (trip-count-corrected)
@@ -415,7 +452,9 @@ def main():
                          "dots_remat, seq_shard, flat_chunk[K] (donated "
                          "scan-chunked flat-substrate executor, K rounds "
                          "per dispatch), epoch (epoch-permutation device "
-                         "sampling with the carried SamplerState)")
+                         "sampling with the carried SamplerState), seedsS "
+                         "(S-batched multi-seed executor: S replicates per "
+                         "dispatch, seed axis over the client mesh axes)")
     args = ap.parse_args()
 
     results = []

@@ -1,0 +1,445 @@
+"""Scenario-matrix runner for the paper's experiment grid.
+
+The paper's headline claims (FedAWE's linear speedup, robustness across
+heterogeneous and non-stationary availability) are claims about a GRID —
+strategy x availability dynamics x sampler x heterogeneity — evaluated over
+multiple seeds, not about a single run.  This module makes every cell of
+that grid a one-command, one-dispatch-per-chunk answer:
+
+  * a **scenario registry**: named cells (``"fedawe/sine"``,
+    ``"fedau/markov"``, ...) binding a strategy to an availability process,
+    a sampling mode and the Dirichlet heterogeneity knob, with the paper's
+    Section 7 grid and the F3AST-style Markov setting (Ribero et al.)
+    pre-registered, plus named sub-grids (``GRIDS``) for the paper's
+    figures;
+  * a **vmapped multi-seed executor**: ``engine.make_seeds_chunk_fn``
+    batches the ``FLState``, the ``SamplerState`` and the per-seed data
+    keys over a leading seed axis, so ONE jitted dispatch advances S
+    independent replicates K rounds (donated in place; shardable over the
+    pod mesh via ``sharding/rules.seed_pspecs``).  Seed replicate ``j``
+    is bit-identical to an independent single-seed chunked run driven by
+    ``fold_in(rng, j)`` / ``fold_in(data_key, j)`` — the parity tests pin
+    this down byte-for-byte;
+  * a **reporting layer**: per-seed histories aggregate into mean±std
+    curves and a paper-style results table under ``results/``
+    (``launch/analysis.aggregate_seed_histories`` / ``seed_summary`` /
+    ``write_results_table``).
+
+CLI::
+
+    python -m repro.launch.experiments --list
+    python -m repro.launch.experiments --scenario fedawe/sine --seeds 4 \
+        --rounds 24 --chunk-rounds 8
+    python -m repro.launch.experiments --scenario 'fedawe/*' --seeds 4
+    python -m repro.launch.experiments --grid speedup-sine --seeds 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import fnmatch
+import json
+import os
+import re
+
+import jax
+
+from repro.core import (FLConfig, index_seed, init_fl_state, make_round_fn,
+                        make_seeds_chunk_fn, stack_seeds)
+from repro.core.availability import KINDS, AvailabilityCfg
+from repro.core.strategies import REGISTRY
+from repro.data import (SAMPLING_MODES, init_seed_sampler_states,
+                        make_device_sampler, seed_data_keys)
+from repro.launch import analysis
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named cell of the experiment grid.
+
+    A scenario fixes everything that defines a *comparison point* in the
+    paper — the aggregation strategy, the availability process and its
+    knobs, the sampling mode, and the Dirichlet heterogeneity ``alpha`` —
+    while run-scale knobs (clients, rounds, seeds, batch) stay CLI
+    arguments so the same cell runs as a smoke test or a full
+    reproduction.  ``availability()`` materializes the ``AvailabilityCfg``
+    the round engine consumes.
+    """
+    name: str
+    strategy: str = "fedawe"
+    kind: str = "stationary"        # availability dynamics (one of KINDS)
+    sampling: str = "uniform"       # device-sampler mode
+    alpha: float = 0.1              # Dirichlet heterogeneity (data + avail)
+    gamma: float = 0.3              # sine family amplitude
+    period: int = 20                # staircase / sine period
+    staircase_low: float = 0.4
+    cutoff: float = 0.1             # interleaved_sine hard cutoff
+    delta_floor: float = 0.0        # Assumption-1 clamp
+    markov_up: float = 0.2          # Gilbert-Elliott P(off -> on) scale
+    markov_down: float = 0.2        # Gilbert-Elliott P(on -> off)
+    eta_l: float = 0.05
+    eta_g: float = 1.0
+    flat_state: bool = True         # flat [m, N] substrate by default
+    note: str = ""
+
+    def __post_init__(self):
+        assert self.strategy in REGISTRY, self.strategy
+        assert self.kind in KINDS, self.kind
+        assert self.sampling in SAMPLING_MODES, self.sampling
+
+    def availability(self) -> AvailabilityCfg:
+        return AvailabilityCfg(
+            kind=self.kind, gamma=self.gamma, period=self.period,
+            staircase_low=self.staircase_low, cutoff=self.cutoff,
+            delta_floor=self.delta_floor, markov_up=self.markov_up,
+            markov_down=self.markov_down)
+
+
+SCENARIOS: dict = {}
+
+#: Named sub-grids: lists of scenario names matching the paper's figures.
+GRIDS: dict = {}
+
+
+def register_scenario(sc: Scenario) -> Scenario:
+    assert sc.name not in SCENARIOS, f"duplicate scenario {sc.name!r}"
+    SCENARIOS[sc.name] = sc
+    return sc
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; see --list "
+                       f"({len(SCENARIOS)} registered)")
+    return SCENARIOS[name]
+
+
+def match_scenarios(patterns) -> list:
+    """Expand names / fnmatch patterns into sorted scenario names; raises
+    on a pattern matching nothing (silent empty grids hide typos)."""
+    names = []
+    for pat in patterns:
+        hit = sorted(n for n in SCENARIOS if fnmatch.fnmatch(n, pat))
+        if not hit:
+            raise KeyError(f"pattern {pat!r} matches no scenario; see --list")
+        names.extend(h for h in hit if h not in names)
+    return names
+
+
+def _register_paper_grid():
+    """The paper's Section 7 grid: every strategy in REGISTRY against every
+    availability process, uniform sampling, Dirichlet(0.1) heterogeneity.
+    The markov column is the beyond-paper F3AST setting (Ribero et al.);
+    cells are named ``<strategy>/<kind>``."""
+    for strat in sorted(REGISTRY):
+        for kind in KINDS:
+            note = ("F3AST-style Gilbert-Elliott availability "
+                    "(Ribero et al.)" if kind == "markov" else
+                    "paper Section 7 dynamics")
+            register_scenario(Scenario(name=f"{strat}/{kind}",
+                                       strategy=strat, kind=kind, note=note))
+    # epoch-permutation sampler cells for the headline strategy: same
+    # dynamics, exactly-once-per-epoch data order (PR 3 sampler substrate)
+    for kind in KINDS:
+        register_scenario(Scenario(
+            name=f"fedawe/{kind}+epoch", strategy="fedawe", kind=kind,
+            sampling="epoch", note="epoch-permutation device sampler"))
+    # heterogeneity ablations (Section 7's Dirichlet sweep, sine dynamics)
+    for alpha, tag in ((100.0, "iid"), (0.3, "dir03"), (0.05, "dir005")):
+        register_scenario(Scenario(
+            name=f"fedawe/sine@{tag}", strategy="fedawe", kind="sine",
+            alpha=alpha, note=f"Dirichlet alpha={alpha} heterogeneity"))
+    # Assumption-1 floor ablation: the clamp keeps every client reachable
+    register_scenario(Scenario(
+        name="fedawe/interleaved_sine@floor", strategy="fedawe",
+        kind="interleaved_sine", delta_floor=0.05,
+        note="delta_floor=0.05 keeps Assumption 1 in the dynamics"))
+
+    GRIDS.update({
+        # speedup-vs-availability comparison (Yan et al. 2020 framing)
+        "speedup-sine": ["fedawe/sine", "fedawe_m/sine",
+                         "fedavg_active/sine", "fedavg_known_p/sine",
+                         "fedau/sine", "mifa/sine", "fedvarp/sine"],
+        # Fig. 3-style non-stationarity sweep for the headline strategies
+        "nonstationary": [f"{s}/{k}" for s in ("fedawe", "fedavg_active",
+                                               "fedau")
+                          for k in ("staircase", "sine",
+                                    "interleaved_sine")],
+        # the F3AST/Ribero Markov column, every strategy
+        "f3ast-markov": [f"{s}/markov" for s in sorted(REGISTRY)],
+        # the full Section 7 grid
+        "paper-sec7": [f"{s}/{k}" for s in sorted(REGISTRY)
+                       for k in ("stationary", "staircase", "sine",
+                                 "interleaved_sine")],
+    })
+
+
+_register_paper_grid()
+
+
+# ---------------------------------------------------------------------------
+# vmapped multi-seed executor driver
+# ---------------------------------------------------------------------------
+
+def build_seed_batch(cfg: FLConfig, template, base_rng, data_key,
+                     init_sampler_state, store, n_seeds: int):
+    """Stacked per-seed carry for ``make_seeds_chunk_fn``.
+
+    Seed replicate ``j`` is initialized EXACTLY as an independent
+    single-seed run with ``rng_j = fold_in(base_rng, j)`` and
+    ``data_key_j = fold_in(data_key, j)`` would be — states are built
+    one-by-one and tree-stacked (bitwise-preserving), which is the root
+    of the multi-seed parity guarantee.  The model template (and the
+    device store) is shared: seeds vary the stochastic draws
+    (availability, local-SGD noise, batch sampling), not the init point.
+
+    Returns ``(states, sampler_states, data_keys)`` with ``[S, ...]``
+    leaves (``sampler_states`` is ``{}`` under uniform sampling).
+    """
+    states = stack_seeds([
+        init_fl_state(jax.random.fold_in(base_rng, j), cfg, template)
+        for j in range(n_seeds)])
+    data_keys = seed_data_keys(data_key, n_seeds)
+    sampler_states = init_seed_sampler_states(init_sampler_state, store,
+                                              data_keys)
+    return states, sampler_states, data_keys
+
+
+def run_seed_rounds(states, chunk_fn, T, K, *, sampler_states, store,
+                    data_keys, n_seeds, make_tail_fn=None, eval_fn=None,
+                    eval_every=0, log_every=0):
+    """Drive the S-batched executor for T rounds in ceil(T/K) dispatches.
+
+    The seed-axis analogue of ``engine.run_rounds(chunk_rounds=K)``: each
+    dispatch advances every replicate K rounds and fetches the stacked
+    ``[S, K]`` metrics with one ``jax.device_get``.  ``eval_fn`` (taking a
+    single-seed ``FLState``) runs per seed at the first chunk boundary at
+    or past each ``eval_every`` multiple, on ``index_seed(states, j)``.
+    A ``T % K`` tail needs ``make_tail_fn(k)`` (an S-batched executor for
+    the shorter chunk) when T is not a multiple of K.
+
+    Returns ``(states, histories)`` — one history (list of per-round
+    metric dicts) per seed.
+    """
+    from repro.core.engine import _crossed
+
+    if T % K and make_tail_fn is None:
+        # fail BEFORE the first dispatch (mirrors _run_rounds_chunked's
+        # tail footgun): discovering the missing tail builder after T-T%K
+        # rounds would throw away all completed seed-replicate work
+        raise ValueError(
+            f"T={T} is not a multiple of chunk_rounds={K}: pass "
+            "make_tail_fn(k) to build the S-batched tail executor, or "
+            "make T a multiple of K")
+    histories = [[] for _ in range(n_seeds)]
+    tail_fn, done = None, 0
+    while done < T:
+        k = min(K, T - done)
+        if k == K:
+            f = chunk_fn
+        else:
+            tail_fn = tail_fn or make_tail_fn(k)
+            f = tail_fn
+        states, sampler_states, metrics = f(states, sampler_states, store,
+                                            data_keys)
+        metrics = jax.device_get(metrics)      # ONE host sync per dispatch
+        for j in range(n_seeds):
+            for i in range(k):
+                rec = {key: float(v[j][i]) for key, v in metrics.items()}
+                rec["t"] = done + i
+                histories[j].append(rec)
+        done += k
+        if eval_fn is not None and _crossed(done, k, eval_every):
+            for j in range(n_seeds):
+                histories[j][-1].update(eval_fn(index_seed(states, j)))
+        if _crossed(done, k, log_every):
+            mean_loss = sum(h[-1].get("loss", float("nan"))
+                            for h in histories) / n_seeds
+            print(f"[round {done:5d}] seeds={n_seeds} "
+                  f"mean_loss={mean_loss:.4f}")
+    return states, histories
+
+
+def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
+                   batch, seeds, rounds, chunk_rounds, rng, data_key,
+                   eval_fn=None, eval_every=0, log_every=0):
+    """THE multi-seed driver (used by both this module's ``run_scenario``
+    and ``train.py --seeds``): device store + stateful sampler + stacked
+    per-seed carry + S-batched executor, end to end.
+
+    ``chunk_rounds`` of 0 defaults to K=8; K is clamped to ``rounds`` and
+    a ``T % K`` tail executor is built automatically.  Returns
+    ``(states, histories, finals)`` — the seed-stacked final ``FLState``,
+    one metric history per seed, and (when ``eval_fn`` is given) one
+    final-eval dict per seed via ``index_seed``.
+    """
+    store = ds.device_store()
+    init_fn, sample_fn = make_device_sampler(
+        fl.m, fl.s, batch, mode=sampling,
+        min_count=min(len(ix) for ix in ds.client_indices))
+    states, sampler_states, data_keys = build_seed_batch(
+        fl, template, rng, data_key, init_fn, store, seeds)
+    K = min(int(chunk_rounds) or 8, int(rounds))
+    chunk_fn = make_seeds_chunk_fn(fl, round_fn, sample_fn, K, seeds)
+    states, histories = run_seed_rounds(
+        states, chunk_fn, rounds, K, sampler_states=sampler_states,
+        store=store, data_keys=data_keys, n_seeds=seeds,
+        make_tail_fn=lambda k: make_seeds_chunk_fn(fl, round_fn, sample_fn,
+                                                   k, seeds),
+        eval_fn=eval_fn, eval_every=eval_every, log_every=log_every)
+    finals = ([eval_fn(index_seed(states, j)) for j in range(seeds)]
+              if eval_fn is not None else [])
+    return states, histories, finals
+
+
+def run_scenario(sc: Scenario, *, seeds=4, rounds=24, chunk_rounds=8,
+                 m=16, s=3, batch=8, n_samples=4000, preset="image",
+                 seed=0, eval_every=0, use_kernel=False, log_every=0):
+    """Run one grid cell: S seed replicates of ``rounds`` rounds, advanced
+    K rounds per dispatch by the vmapped multi-seed executor.
+
+    Returns the cell record: per-seed final evals, their mean±std
+    (``final``), mean±std metric curves (``curves``), and the raw
+    per-seed ``histories``.
+    """
+    # lazy import: train.py imports this module for --scenario/--seeds
+    from repro.launch import train as train_mod
+
+    args = argparse.Namespace(seed=seed, n_samples=n_samples, m=m,
+                              alpha=sc.alpha, batch=batch)
+    rng = jax.random.PRNGKey(seed)
+    build = (train_mod.build_image_task if preset == "image"
+             else train_mod.build_lm_task)
+    params, loss_fn, ds, base_p, eval_fn = build(args, rng)
+
+    fl = FLConfig(m=m, s=s, eta_l=sc.eta_l, eta_g=sc.eta_g,
+                  strategy=sc.strategy, flat_state=sc.flat_state,
+                  use_kernel=use_kernel)
+    rf = make_round_fn(fl, loss_fn, {}, sc.availability(), base_p)
+    K = min(int(chunk_rounds) or 8, int(rounds))
+    states, histories, finals = run_multi_seed(
+        fl, rf, params, ds, sampling=sc.sampling, batch=batch, seeds=seeds,
+        rounds=rounds, chunk_rounds=K, rng=rng,
+        data_key=jax.random.PRNGKey(seed + 1), eval_fn=eval_fn,
+        eval_every=eval_every, log_every=log_every)
+    return dict(
+        scenario=sc.name, strategy=sc.strategy, dynamics=sc.kind,
+        sampling=sc.sampling, alpha=sc.alpha, seeds=seeds, rounds=rounds,
+        chunk_rounds=K, note=sc.note,
+        final=analysis.seed_summary(finals),
+        curves=analysis.aggregate_seed_histories(histories),
+        histories=histories,
+    )
+
+
+def _cell_row(rec: dict) -> dict:
+    """Flatten a cell record into one results-table row (final metrics
+    rendered paper-style as ``mean±std``)."""
+    row = {k: rec[k] for k in ("scenario", "strategy", "dynamics",
+                               "sampling", "seeds", "rounds")}
+    for k, v in rec["final"].items():
+        row[k] = f"{v['mean']:.4f}±{v['std']:.4f}"
+    loss = rec["curves"]["metrics"].get("loss")
+    if loss is not None:
+        row["last_loss"] = f"{loss['mean'][-1]:.4f}±{loss['std'][-1]:.4f}"
+    return row
+
+
+def _slug(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", name)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.experiments",
+        description="Run named cells of the paper's experiment grid with "
+                    "the vmapped multi-seed executor (one dispatch "
+                    "advances all seeds one chunk).")
+    ap.add_argument("--scenario", action="append", default=None,
+                    metavar="NAME",
+                    help="scenario name or fnmatch pattern (e.g. "
+                         "'fedawe/sine', 'fedau/*'); repeatable")
+    ap.add_argument("--grid", default=None, choices=sorted(GRIDS),
+                    help="named sub-grid preset (expands to its scenarios)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and grids, then exit")
+    ap.add_argument("--seeds", type=int, default=4,
+                    help="seed replicates per cell, advanced together by "
+                         "the S-batched executor")
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--chunk-rounds", type=int, default=8,
+                    help="K rounds per dispatch (clamped to --rounds)")
+    ap.add_argument("--m", type=int, default=16, help="clients")
+    ap.add_argument("--s", type=int, default=3, help="local steps")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-samples", type=int, default=4000)
+    ap.add_argument("--preset", default="image", choices=["image", "lm"])
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed; replicate j uses fold_in(seed, j)")
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--out-dir", default="results",
+                    help="per-cell JSON + the results table land here")
+    ap.add_argument("--no-save", action="store_true")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    if args.list:
+        for name in sorted(SCENARIOS):
+            sc = SCENARIOS[name]
+            print(f"{name:40s} {sc.strategy:15s} {sc.kind:17s} "
+                  f"{sc.sampling:8s} alpha={sc.alpha:<6g} {sc.note}")
+        print()
+        for g, names in sorted(GRIDS.items()):
+            print(f"grid {g}: {len(names)} cells")
+        return []
+
+    patterns = list(args.scenario or [])
+    if args.grid:
+        patterns.extend(GRIDS[args.grid])
+    if not patterns:
+        raise SystemExit("nothing to run: pass --scenario and/or --grid "
+                         "(or --list)")
+    names = match_scenarios(patterns)
+
+    rows = []
+    for name in names:
+        print(f"=== scenario {name} (seeds={args.seeds}, "
+              f"rounds={args.rounds}) ===", flush=True)
+        rec = run_scenario(
+            get_scenario(name), seeds=args.seeds, rounds=args.rounds,
+            chunk_rounds=args.chunk_rounds, m=args.m, s=args.s,
+            batch=args.batch, n_samples=args.n_samples, preset=args.preset,
+            seed=args.seed, eval_every=args.eval_every,
+            use_kernel=args.use_kernel,
+            log_every=max(1, args.rounds // 4))
+        rows.append(_cell_row(rec))
+        if not args.no_save:
+            path = os.path.join(args.out_dir, "experiments",
+                                _slug(name) + ".json")
+            os.makedirs(os.path.dirname(os.path.abspath(path)),
+                        exist_ok=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+            print(f"wrote {path}")
+    if not args.no_save:
+        table = analysis.write_results_table(
+            rows, os.path.join(args.out_dir, "experiments_table.md"))
+        print(f"wrote {table}")
+    for row in rows:
+        print(json.dumps(row))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

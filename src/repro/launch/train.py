@@ -85,21 +85,36 @@ def build_lm_task(args, rng):
     return params, loss_fn, ds, base_p, eval_fn
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+# resolution order for the scenario-overridable flags: explicit CLI value
+# (even when it equals the default) > --scenario registry cell > default.
+# Their argparse defaults are None sentinels so "passed the default value"
+# and "not passed" are distinguishable.
+_SCENARIO_FLAG_DEFAULTS = dict(strategy="fedawe", dynamics="stationary",
+                               sampling="uniform", gamma=0.3, alpha=0.1,
+                               eta_l=0.05, eta_g=1.0)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.train")
     ap.add_argument("--preset", default="image", choices=["image", "lm"])
-    ap.add_argument("--strategy", default="fedawe")
-    ap.add_argument("--dynamics", default="stationary",
+    ap.add_argument("--strategy", default=None,
+                    help="aggregation strategy (default: fedawe)")
+    ap.add_argument("--dynamics", default=None,
                     choices=["stationary", "staircase", "sine",
-                             "interleaved_sine", "markov"])
-    ap.add_argument("--gamma", type=float, default=0.3)
+                             "interleaved_sine", "markov"],
+                    help="availability process (default: stationary)")
+    ap.add_argument("--gamma", type=float, default=None,
+                    help="sine-family amplitude (default: 0.3)")
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--m", type=int, default=32)
     ap.add_argument("--s", type=int, default=5)
     ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--eta-l", type=float, default=0.05)
-    ap.add_argument("--eta-g", type=float, default=1.0)
-    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--eta-l", type=float, default=None,
+                    help="local lr (default: 0.05)")
+    ap.add_argument("--eta-g", type=float, default=None,
+                    help="global lr (default: 1.0)")
+    ap.add_argument("--alpha", type=float, default=None,
+                    help="Dirichlet heterogeneity (default: 0.1)")
     ap.add_argument("--n-samples", type=int, default=20000)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true",
@@ -111,19 +126,56 @@ def main(argv=None):
                     help="K>0: scan-chunked executor — K rounds per "
                          "dispatch, device-resident batch sampling, "
                          "donated FLState, eval/ckpt at chunk boundaries")
-    ap.add_argument("--sampling", default="uniform",
+    ap.add_argument("--sampling", default=None,
                     choices=list(SAMPLING_MODES),
-                    help="device-sampler mode: i.i.d. uniform with "
-                         "replacement, or epoch-permutation (every client "
-                         "visits each of its samples exactly once per "
-                         "epoch; carried cursor, identical in host and "
-                         "chunked executors)")
+                    help="device-sampler mode (default: uniform): i.i.d. "
+                         "uniform with replacement, or epoch-permutation "
+                         "(every client visits each of its samples exactly "
+                         "once per epoch; carried cursor, identical in "
+                         "host and chunked executors)")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="S>1: run S seed replicates at once through the "
+                         "vmapped multi-seed executor (one dispatch "
+                         "advances every replicate one chunk; per-seed "
+                         "results bit-identical to S independent runs "
+                         "with rng/data keys fold_in(seed_key, j)); "
+                         "reports mean±std over seeds")
+    ap.add_argument("--scenario", default=None,
+                    help="named experiment-grid cell (launch/experiments "
+                         "--list): supplies --strategy/--dynamics/"
+                         "--sampling/--gamma/--alpha/--eta-l/--eta-g and "
+                         "the availability knobs from the registry; any "
+                         "of those flags you pass explicitly still wins, "
+                         "even when passed its default value")
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
-                    help="overwrite --ckpt every N rounds (chunk-aligned)")
+                    help="overwrite --ckpt every N rounds (chunk-aligned; "
+                         "multi-seed runs checkpoint seed 0 at the end)")
+    return ap
+
+
+def main(argv=None):
+    ap = build_parser()
     args = ap.parse_args(argv)
+
+    scenario = None
+    if args.scenario:
+        from repro.launch.experiments import get_scenario
+        scenario = get_scenario(args.scenario)
+        args.flat_state = args.flat_state or scenario.flat_state
+    # None sentinel = flag not passed: fill from the scenario cell (when
+    # given) else the documented default — an explicitly-passed flag wins
+    # over the scenario even when it equals the default (a sweep point at
+    # --eta-l 0.05 must not be silently flattened to the cell's eta_l)
+    for attr, fallback in _SCENARIO_FLAG_DEFAULTS.items():
+        if getattr(args, attr) is None:
+            if scenario is not None:
+                sc_attr = "kind" if attr == "dynamics" else attr
+                setattr(args, attr, getattr(scenario, sc_attr))
+            else:
+                setattr(args, attr, fallback)
 
     rng = jax.random.PRNGKey(args.seed)
     build = build_image_task if args.preset == "image" else build_lm_task
@@ -132,9 +184,19 @@ def main(argv=None):
     fl = FLConfig(m=args.m, s=args.s, eta_l=args.eta_l, eta_g=args.eta_g,
                   strategy=args.strategy, use_kernel=args.use_kernel,
                   flat_state=args.flat_state)
-    av = AvailabilityCfg(kind=args.dynamics, gamma=args.gamma)
-    state = init_fl_state(rng, fl, params)
+    if scenario:
+        import dataclasses
+        # registry availability knobs, with any explicit CLI winner on top
+        av = dataclasses.replace(scenario.availability(),
+                                 kind=args.dynamics, gamma=args.gamma)
+    else:
+        av = AvailabilityCfg(kind=args.dynamics, gamma=args.gamma)
     round_fn = make_round_fn(fl, loss_fn, {}, av, base_p)
+
+    if args.seeds > 1:
+        return _main_multi_seed(args, fl, round_fn, params, ds, eval_fn,
+                                rng)
+    state = init_fl_state(rng, fl, params)
 
     ckpt_fn = None
     if args.ckpt and args.ckpt_every:
@@ -177,6 +239,39 @@ def main(argv=None):
             json.dump(dict(args=vars(args), final=final, history=hist), f)
     if args.ckpt:
         save_fl_state(args.ckpt, state)
+    return final
+
+
+def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng):
+    """``--seeds S > 1``: drive the vmapped multi-seed executor.
+
+    Always chunked (``--chunk-rounds`` or K=8): one dispatch advances all
+    S replicates one chunk.  Replicate ``j`` uses ``fold_in(rng, j)`` /
+    ``fold_in(data_key, j)`` — bit-identical to an independent run with
+    those keys.  Reports per-metric mean±std over seeds; ``--out`` records
+    the aggregate curves plus every per-seed history; ``--ckpt`` saves
+    seed 0's final state.
+    """
+    from repro.core import index_seed
+    from repro.launch import analysis
+    from repro.launch.experiments import run_multi_seed
+
+    states, hists, finals = run_multi_seed(
+        fl, round_fn, params, ds, sampling=args.sampling, batch=args.batch,
+        seeds=args.seeds, rounds=args.rounds,
+        chunk_rounds=args.chunk_rounds, rng=rng,
+        data_key=jax.random.PRNGKey(args.seed + 1), eval_fn=eval_fn,
+        eval_every=args.eval_every, log_every=max(1, args.rounds // 10))
+    final = analysis.seed_summary(finals)
+    print("final (mean±std over seeds):", final)
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(dict(args=vars(args), final=final,
+                           curves=analysis.aggregate_seed_histories(hists),
+                           history_per_seed=hists), f)
+    if args.ckpt:
+        save_fl_state(args.ckpt, index_seed(states, 0))
     return final
 
 

@@ -5,5 +5,6 @@ from repro.sharding.rules import (  # noqa: F401
     flat_pspecs,
     param_pspecs,
     sampler_pspecs,
+    seed_pspecs,
     serve_batch_pspecs,
 )

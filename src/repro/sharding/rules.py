@@ -203,6 +203,42 @@ def sampler_pspecs(mesh, sampler_sds, m, *, multi_pod=False):
     return jax.tree_util.tree_map_with_path(leaf, sampler_sds)
 
 
+def seed_pspecs(spec_tree, *, seed_axes=None):
+    """Prepend a leading seed axis to every ``PartitionSpec`` in a spec
+    tree — the placement story of the S-batched multi-seed executor
+    (``engine.make_seeds_chunk_fn``).
+
+    ``spec_tree`` is an inner (single-seed) spec tree, e.g. from
+    ``flat_pspecs`` / ``sampler_pspecs``; the returned tree describes the
+    same state with ``[S, ...]`` leaves.  ``seed_axes`` is the mesh
+    axis (name or tuple of names) the seed dimension shards over — seeds
+    are independent replicates, so this is pure data parallelism.  Any
+    inner dimension that was using one of those mesh axes is stripped to
+    replicated (a mesh axis can appear at most once per spec): when seeds
+    ride ``('pod','data')`` the per-seed client axis gives its placement
+    up, which is the right trade exactly when S reaches the device count.
+    ``seed_axes=None`` replicates the seed axis (small-S simulation tier)
+    and leaves inner placements untouched.
+    """
+    used = set()
+    if seed_axes is not None:
+        used = set(seed_axes if isinstance(seed_axes, (tuple, list))
+                   else (seed_axes,))
+
+    def strip(dim):
+        if isinstance(dim, (tuple, list)):
+            kept = tuple(a for a in dim if a not in used)
+            return kept if kept else None
+        return None if dim in used else dim
+
+    def f(p):
+        lead = tuple(seed_axes) if isinstance(seed_axes, (tuple, list)) \
+            else seed_axes
+        return P(lead, *[strip(d) for d in p])
+
+    return jax.tree.map(f, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
 def batch_pspecs(mesh, batches_shape, *, multi_pod=False, mode="tp"):
     """FL round batches [m, s, b, ...] -> client axis sharded; in 'dp' mode
     the within-client batch dim additionally takes the 'model' axis."""

@@ -64,12 +64,20 @@ def test_committed_record_has_executor_rows():
     for name in ("rounds_per_sec/host_loop", "rounds_per_sec/chunked",
                  "rounds_per_sec/host_loop_tree",
                  "rounds_per_sec/chunked_tree",
-                 "rounds_per_sec/chunked_epoch"):
+                 "rounds_per_sec/chunked_epoch",
+                 "rounds_per_sec/chunked_seeds",
+                 "rounds_per_sec/chunked_seeds_seq"):
         assert name in rows and rows[name]["us_per_call"] > 0
     assert rows["rounds_per_sec/chunked"]["derived"] >= \
         2.0 * rows["rounds_per_sec/host_loop"]["derived"]
     assert rows["rounds_per_sec/chunked_epoch"]["us_per_call"] <= \
         1.25 * rows["rounds_per_sec/chunked"]["us_per_call"]
+    # the S-batched multi-seed dispatch must beat the S sequential chunked
+    # runs it replaces (both measured in the same interleaved bench run;
+    # derived = seq time / batched time)
+    assert rows["rounds_per_sec/chunked_seeds"]["derived"] > 1.0
+    assert rows["rounds_per_sec/chunked_seeds"]["us_per_call"] < \
+        rows["rounds_per_sec/chunked_seeds_seq"]["us_per_call"]
 
 
 @pytest.mark.slow

@@ -67,6 +67,23 @@ def test_mini_dryrun_flat_chunk_epoch_train(tmp_path):
 
 
 @pytest.mark.slow
+def test_mini_dryrun_flat_chunk_seeds_train(tmp_path):
+    """flat_chunk + the S-batched multi-seed executor: FLState/SamplerState
+    grow a leading [S] axis riding the client mesh axes (seed_pspecs) and
+    the whole thing lowers, compiles and donates on the mini multi-pod
+    mesh — the experiment grid's one-dispatch-per-chunk cell."""
+    out = str(tmp_path / "dry.json")
+    r = _run_dryrun(["--arch", "tiny", "--shape", "train_4k",
+                     "--mesh", "multi", "--test-mesh",
+                     "--variant", "flat_chunk2+seeds4", "--out", out])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(out))[0]
+    assert rec["ok"] and rec["chunk_rounds"] == 2
+    assert rec["seeds"] == 4
+    assert rec["memory"]["alias_size_in_bytes"] > 0
+
+
+@pytest.mark.slow
 def test_mini_dryrun_decode_multi_pod(tmp_path):
     out = str(tmp_path / "dry.json")
     r = _run_dryrun(["--arch", "tiny", "--shape", "decode_32k",

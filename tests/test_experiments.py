@@ -1,0 +1,331 @@
+"""Multi-seed vmapped executor (engine.make_seeds_chunk_fn) and the
+scenario-matrix runner (launch/experiments.py).
+
+Guarantees under test:
+  * seed parity — an S-batched run's per-seed states AND per-round metric
+    histories are BIT-IDENTICAL to S independent single-seed chunked runs
+    driven by the corresponding keys (``fold_in(rng, j)`` /
+    ``fold_in(data_key, j)``), across flat + tree substrate, uniform +
+    epoch sampling, and sine + markov availability — including a
+    ``T % K`` tail chunk.
+  * donation — the S-batched executor donates the stacked ``[S, m, N]``
+    client stacks and the stacked sampler state.
+  * key conventions — ``seed_data_keys`` is exactly the per-seed fold_in;
+    ``stack_seeds``/``index_seed`` round-trip bitwise.
+  * scenario registry — the paper's Section 7 grid (every strategy x
+    every availability kind) is registered, lookups fail loudly, patterns
+    expand deterministically, grids reference real cells.
+  * seed_pspecs — prepends the seed axis and strips displaced mesh axes.
+  * seed aggregation — mean±std curves, final summaries and the
+    paper-style results table.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AvailabilityCfg, FLConfig, index_seed,
+                        init_fl_state, make_chunk_fn, make_round_fn,
+                        make_seeds_chunk_fn, run_rounds, stack_seeds)
+from repro.data import (device_store, init_seed_sampler_states,
+                        make_device_sampler, seed_data_keys)
+from repro.launch import analysis
+from repro.launch.experiments import (GRIDS, SCENARIOS, Scenario,
+                                      build_seed_batch, get_scenario,
+                                      match_scenarios, run_seed_rounds)
+
+M, S_, B, DIM = 6, 3, 4, 4
+SEEDS = 4
+
+
+def _problem(sampling="uniform"):
+    rng = np.random.default_rng(0)
+    n = 48
+    arrays = dict(x=rng.normal(size=(n, DIM)).astype(np.float32),
+                  y=rng.normal(size=(n, DIM)).astype(np.float32))
+    idx = [np.arange(i, n, M) for i in range(M)]
+    init_fn, sample_fn = make_device_sampler(M, S_, B, mode=sampling)
+    return device_store(arrays, idx), init_fn, sample_fn
+
+
+def _loss_fn(tr, frozen, batch, rng):
+    return (0.5 * jnp.mean((batch["x"] @ tr["w"] - batch["y"]) ** 2)
+            + jnp.sum(tr["b"] ** 2))
+
+
+def _tr0():
+    return {"w": jnp.ones((DIM, DIM)) * 0.1, "b": jnp.zeros((7,))}
+
+
+def _cfg_rf(flat, sampling, kind, strategy="fedawe"):
+    store, init_fn, sample_fn = _problem(sampling)
+    cfg = FLConfig(m=M, s=S_, eta_l=0.03, strategy=strategy,
+                   lr_schedule=False, grad_clip=0.0, flat_state=flat)
+    av = AvailabilityCfg(kind=kind, gamma=0.3)
+    rf = make_round_fn(cfg, _loss_fn, {}, av, jnp.full((M,), 0.6))
+    return cfg, rf, store, init_fn, sample_fn
+
+
+BASE_RNG = jax.random.PRNGKey(0)
+BASE_DATA = jax.random.PRNGKey(42)
+
+
+def _single_seed_runs(cfg, rf, store, init_fn, sample_fn, T, K):
+    """The S independent single-seed chunked runs the batched executor
+    must reproduce: replicate j uses fold_in(BASE_RNG, j) for the FLState
+    and fold_in(BASE_DATA, j) for the data stream."""
+    out = []
+    for j in range(SEEDS):
+        st = init_fl_state(jax.random.fold_in(BASE_RNG, j), cfg, _tr0())
+        dk = jax.random.fold_in(BASE_DATA, j)
+        st, hist = run_rounds(st, rf, None, T, chunk_rounds=K,
+                              sample_fn=sample_fn, store=store,
+                              data_key=dk,
+                              sampler_state=init_fn(store, dk))
+        out.append((st, hist))
+    return out
+
+
+@pytest.mark.parametrize("flat,sampling,kind,T", [
+    (True, "uniform", "sine", 4),
+    (True, "epoch", "markov", 5),      # T=5, K=2: tail chunk covered
+    (False, "uniform", "markov", 4),
+    (False, "epoch", "sine", 4),
+])
+def test_seeds_batched_bit_identical(flat, sampling, kind, T):
+    """One S-batched dispatch stream == S independent chunked runs, to the
+    bit — states and metric histories, corresponding keys."""
+    K = 2
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf(flat, sampling, kind)
+    singles = _single_seed_runs(cfg, rf, store, init_fn, sample_fn, T, K)
+
+    states, sss, dks = build_seed_batch(cfg, _tr0(), BASE_RNG, BASE_DATA,
+                                        init_fn, store, SEEDS)
+    chunk_fn = make_seeds_chunk_fn(cfg, rf, sample_fn, K, SEEDS)
+    states, hists = run_seed_rounds(
+        states, chunk_fn, T, K, sampler_states=sss, store=store,
+        data_keys=dks, n_seeds=SEEDS,
+        make_tail_fn=lambda k: make_seeds_chunk_fn(cfg, rf, sample_fn, k,
+                                                   SEEDS))
+    for j in range(SEEDS):
+        st_j = index_seed(states, j)
+        ref_st, ref_hist = singles[j]
+        for a, b in zip(jax.tree.leaves(ref_st._replace(spec=None)),
+                        jax.tree.leaves(st_j._replace(spec=None))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert len(ref_hist) == len(hists[j]) == T
+        for rh, rb in zip(ref_hist, hists[j]):
+            assert set(rh) == set(rb)
+            for k in rh:
+                assert rh[k] == rb[k], (j, k, rh, rb)
+
+
+def test_seeds_executor_donates_stacked_state():
+    """The [S, m, N] client stacks and the stacked epoch SamplerState are
+    donated: inputs are consumed, outputs alive."""
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf(True, "epoch", "sine")
+    states, sss, dks = build_seed_batch(cfg, _tr0(), BASE_RNG, BASE_DATA,
+                                        init_fn, store, SEEDS)
+    chunk_fn = make_seeds_chunk_fn(cfg, rf, sample_fn, 2, SEEDS)
+    assert states.clients_tr.shape[0] == SEEDS
+    states2, sss2, _ = chunk_fn(states, sss, store, dks)
+    assert states.clients_tr.is_deleted()
+    assert sss["perm"].is_deleted()
+    assert not states2.clients_tr.is_deleted()
+    assert not sss2["perm"].is_deleted()
+    assert sss2["perm"].shape == (SEEDS, M, store["idx"].shape[1])
+
+
+def test_run_seed_rounds_tail_requires_builder_upfront():
+    """T % K != 0 without make_tail_fn must raise BEFORE any dispatch
+    (not after T - T%K rounds of discarded work): the donated states
+    survive untouched."""
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf(True, "uniform", "sine")
+    states, sss, dks = build_seed_batch(cfg, _tr0(), BASE_RNG, BASE_DATA,
+                                        init_fn, store, SEEDS)
+    chunk_fn = make_seeds_chunk_fn(cfg, rf, sample_fn, 2, SEEDS)
+    with pytest.raises(ValueError, match="make_tail_fn"):
+        run_seed_rounds(states, chunk_fn, 5, 2, sampler_states=sss,
+                        store=store, data_keys=dks, n_seeds=SEEDS)
+    assert not states.clients_tr.is_deleted()
+
+
+def test_seed_data_keys_are_per_seed_fold_in():
+    keys = seed_data_keys(BASE_DATA, SEEDS)
+    assert keys.shape == (SEEDS, 2)
+    for j in range(SEEDS):
+        np.testing.assert_array_equal(
+            np.asarray(keys[j]),
+            np.asarray(jax.random.fold_in(BASE_DATA, j)))
+
+
+def test_stack_and_index_seed_roundtrip():
+    trees = [{"a": jnp.arange(3) + j, "b": jnp.float32(j)}
+             for j in range(SEEDS)]
+    stacked = stack_seeds(trees)
+    assert stacked["a"].shape == (SEEDS, 3)
+    for j in range(SEEDS):
+        got = index_seed(stacked, j)
+        np.testing.assert_array_equal(np.asarray(got["a"]),
+                                      np.asarray(trees[j]["a"]))
+        assert float(got["b"]) == float(j)
+
+
+def test_init_seed_sampler_states_layouts():
+    store, init_fn, _ = _problem("epoch")
+    keys = seed_data_keys(BASE_DATA, SEEDS)
+    sss = init_seed_sampler_states(init_fn, store, keys)
+    cap = store["idx"].shape[1]
+    assert sss["perm"].shape == (SEEDS, M, cap)
+    assert sss["cursor"].shape == (SEEDS, M)
+    # uniform: stateless sampler -> empty state, no leaves to batch
+    store_u, init_u, _ = _problem("uniform")
+    assert init_seed_sampler_states(init_u, store_u, keys) == {}
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_paper_grid():
+    from repro.core.availability import KINDS
+    from repro.core.strategies import REGISTRY
+
+    for strat in REGISTRY:
+        for kind in KINDS:
+            name = f"{strat}/{kind}"
+            sc = get_scenario(name)
+            assert sc.strategy == strat and sc.kind == kind
+    assert len(SCENARIOS) >= len(REGISTRY) * len(KINDS)
+
+
+def test_registry_lookup_and_patterns():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope/nothing")
+    with pytest.raises(KeyError, match="matches no scenario"):
+        match_scenarios(["zzz*"])
+    names = match_scenarios(["fedawe/s*"])
+    assert "fedawe/sine" in names and "fedawe/staircase" in names
+    assert names == sorted(set(names)), "deterministic, deduped"
+    # grids only reference registered cells
+    for g, cells in GRIDS.items():
+        for c in cells:
+            assert c in SCENARIOS, (g, c)
+
+
+def test_scenario_materializes_availability_cfg():
+    sc = get_scenario("fedau/markov")
+    av = sc.availability()
+    assert av.kind == "markov"
+    assert av.markov_up == sc.markov_up
+    floor = get_scenario("fedawe/interleaved_sine@floor").availability()
+    assert floor.kind == "interleaved_sine" and floor.delta_floor == 0.05
+    with pytest.raises(AssertionError):
+        Scenario(name="bad", strategy="not_a_strategy")
+
+
+# ---------------------------------------------------------------------------
+# seed_pspecs
+# ---------------------------------------------------------------------------
+
+def test_seed_pspecs_prepends_and_strips():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import seed_pspecs
+
+    inner = {"stack": P(("pod", "data"), None), "vec": P(("data",)),
+             "glob": P(None), "scalar": P()}
+    # seeds take over the client axes -> inner client placement stripped
+    out = seed_pspecs(inner, seed_axes=("pod", "data"))
+    assert out["stack"] == P(("pod", "data"), None, None)
+    assert out["vec"] == P(("pod", "data"), None)
+    assert out["glob"] == P(("pod", "data"), None)
+    assert out["scalar"] == P(("pod", "data"))
+    # dedicated seed axis -> inner placements survive
+    out = seed_pspecs(inner, seed_axes="seed")
+    assert out["stack"] == P("seed", ("pod", "data"), None)
+    assert out["vec"] == P("seed", ("data",))
+    # replicated seed axis (simulation tier)
+    out = seed_pspecs(inner, seed_axes=None)
+    assert out["stack"] == P(None, ("pod", "data"), None)
+    # partial overlap: only the displaced name is stripped
+    out = seed_pspecs({"x": P(("pod", "data"), None)}, seed_axes="data")
+    assert out["x"] == P("data", ("pod",), None)
+
+
+# ---------------------------------------------------------------------------
+# seed aggregation + results table
+# ---------------------------------------------------------------------------
+
+def test_aggregate_seed_histories_mean_std_and_sparse_keys():
+    h0 = [{"t": 0, "loss": 1.0}, {"t": 1, "loss": 0.5, "eval_acc": 0.8}]
+    h1 = [{"t": 0, "loss": 3.0}, {"t": 1, "loss": 1.5, "eval_acc": 0.6}]
+    agg = analysis.aggregate_seed_histories([h0, h1])
+    assert agg["seeds"] == 2 and agg["t"] == [0, 1]
+    np.testing.assert_allclose(agg["metrics"]["loss"]["mean"], [2.0, 1.0])
+    np.testing.assert_allclose(agg["metrics"]["loss"]["std"], [1.0, 0.5])
+    # eval_acc only recorded at t=1 -> n tracks coverage, t=0 is None
+    # (not NaN: the aggregate must survive strict JSON round-trips)
+    assert agg["metrics"]["eval_acc"]["n"] == [0, 2]
+    assert agg["metrics"]["eval_acc"]["mean"][0] is None
+    import json
+    json.loads(json.dumps(agg, allow_nan=False))
+    np.testing.assert_allclose(agg["metrics"]["eval_acc"]["mean"][1], 0.7)
+
+
+def test_seed_summary_and_results_table(tmp_path):
+    summ = analysis.seed_summary([{"eval_acc": 0.5}, {"eval_acc": 0.7}])
+    np.testing.assert_allclose(summ["eval_acc"]["mean"], 0.6)
+    np.testing.assert_allclose(summ["eval_acc"]["std"], 0.1)
+    assert summ["eval_acc"]["seeds"] == 2
+
+    rows = [dict(scenario="fedawe/sine", strategy="fedawe", dynamics="sine",
+                 sampling="uniform", seeds=4, rounds=8,
+                 eval_acc="0.6000±0.1000")]
+    path = analysis.write_results_table(rows, str(tmp_path / "table.md"))
+    text = open(path).read()
+    assert "| scenario |" in text and "fedawe/sine" in text
+    import json
+    assert json.load(open(str(tmp_path / "table.json"))) == rows
+
+
+# ---------------------------------------------------------------------------
+# end-to-end cell (small, but real task + eval)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_run_scenario_smoke():
+    from repro.launch.experiments import run_scenario
+
+    rec = run_scenario(get_scenario("fedawe/sine"), seeds=2, rounds=4,
+                       chunk_rounds=2, m=6, s=2, batch=4, n_samples=600)
+    assert rec["seeds"] == 2 and rec["rounds"] == 4
+    assert 0.0 <= rec["final"]["eval_acc"]["mean"] <= 1.0
+    assert len(rec["histories"]) == 2
+    assert len(rec["curves"]["metrics"]["loss"]["mean"]) == 4
+
+
+@pytest.mark.slow
+def test_train_cli_multi_seed_matches_single_seed_runs(tmp_path):
+    """--seeds 4 through the train CLI: the mean±std final lands, --out
+    records one full finite history per seed plus the aggregate curves
+    (the engine-level bit-identity is pinned by
+    test_seeds_batched_bit_identical above)."""
+    import json
+
+    from repro.launch import train
+
+    out = tmp_path / "seeds.json"
+    final = train.main([
+        "--preset", "image", "--scenario", "fedawe/sine", "--seeds", "4",
+        "--rounds", "4", "--chunk-rounds", "2", "--m", "6", "--s", "2",
+        "--batch", "4", "--n-samples", "600", "--eval-every", "4",
+        "--out", str(out)])
+    assert final["eval_acc"]["seeds"] == 4
+    rec = json.load(open(out))
+    assert len(rec["history_per_seed"]) == 4
+    assert rec["curves"]["seeds"] == 4
+    # every seed's curve has T entries and finite losses
+    for hist in rec["history_per_seed"]:
+        assert len(hist) == 4
+        assert all(np.isfinite(r["loss"]) for r in hist)
