@@ -91,12 +91,14 @@ def _bench_round_executor(quick):
     (engine.make_seeds_chunk_fn: one dispatch advances S=4 independent
     seed replicates a chunk, vs the S sequential chunked runs the paper's
     multi-seed grid would otherwise cost, measured explicitly as the
-    chunked_seeds_seq row with the same per-seed init and fold_in keys).
+    chunked_seeds_seq row with the same per-seed init and fold_in keys),
+    plus the S-batched executor with the live ('seed','pod','data')-mesh
+    shardings threaded through its jit (chunked_seeds_mesh).
     us_per_call is per wall-clock ROUND; derived is rounds/sec — except
-    the chunked_seeds row, whose derived is the speedup of the one
-    S-batched dispatch stream over the S sequential runs
-    (chunked_seeds_seq time / chunked_seeds time; > 1 = batching the
-    seed axis wins)."""
+    the chunked_seeds[_mesh] rows, whose derived is the speedup of the
+    one S-batched dispatch stream over the S sequential runs
+    (chunked_seeds_seq time / row time; > 1 = batching the seed axis
+    wins)."""
     from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
                             make_round_fn, run_rounds)
     from repro.data import FederatedDataset, make_device_sampler
@@ -165,15 +167,20 @@ def _bench_round_executor(quick):
     n_seeds = 4
 
     def make_seeds_execs(S=n_seeds):
-        """(batched, sequential) multi-seed executors: the same S seed
-        replicates (init rng / data key ``fold_in(base, j)``) advanced by
-        one S-batched dispatch stream vs S back-to-back single-seed
-        chunked runs — the cost a multi-seed grid cell pays without
-        make_seeds_chunk_fn.  Both include per-seed state init, as a real
-        cell does."""
+        """(batched, sequential, mesh) multi-seed executors: the same S
+        seed replicates (init rng / data key ``fold_in(base, j)``)
+        advanced by one S-batched dispatch stream vs S back-to-back
+        single-seed chunked runs — the cost a multi-seed grid cell pays
+        without make_seeds_chunk_fn — plus the S-batched executor with
+        the live ('seed','pod','data')-mesh shardings
+        (launch/mesh.make_seed_mesh + experiments.seed_chunk_shardings)
+        threaded through its jit, proving the placement machinery adds no
+        dispatch-path overhead.  All include per-seed state init, as a
+        real cell does."""
         from repro.core import make_chunk_fn, make_seeds_chunk_fn
         from repro.launch.experiments import build_seed_batch, \
-            run_seed_rounds
+            build_seed_executor, run_seed_rounds
+        from repro.launch.mesh import make_seed_mesh
 
         cfg = FLConfig(m=m, s=s, eta_l=0.05, strategy="fedawe",
                        lr_schedule=False, grad_clip=0.0, flat_state=True)
@@ -182,15 +189,23 @@ def _bench_round_executor(quick):
             m, s, b, mode="uniform", min_count=n // m)
         batched_fn = make_seeds_chunk_fn(cfg, rf, sample_fn, K, S)
         single_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+        mesh = make_seed_mesh(S)   # auto-sizes to this host's devices
+        probe = build_seed_batch(cfg, tr0, jax.random.PRNGKey(0), data_key,
+                                 init_sampler, store, S)
+        mesh_fn = build_seed_executor(
+            cfg, rf, sample_fn, S, mesh=mesh, states=probe[0],
+            sampler_states=probe[1], store=store, data_keys=probe[2])(K)
 
-        def once_batched(rounds):
-            states, sss, dks = build_seed_batch(
-                cfg, tr0, jax.random.PRNGKey(0), data_key, init_sampler,
-                store, S)
-            states, hists = run_seed_rounds(
-                states, batched_fn, rounds, K, sampler_states=sss,
-                store=store, data_keys=dks, n_seeds=S)
-            return states, hists[0]
+        def make_once_batched(chunk_fn):
+            def once(rounds):
+                states, sss, dks = build_seed_batch(
+                    cfg, tr0, jax.random.PRNGKey(0), data_key,
+                    init_sampler, store, S)
+                states, hists = run_seed_rounds(
+                    states, chunk_fn, rounds, K, sampler_states=sss,
+                    store=store, data_keys=dks, n_seeds=S)
+                return states, hists[0]
+            return once
 
         def once_seq(rounds):
             hists = []
@@ -205,9 +220,10 @@ def _bench_round_executor(quick):
                 hists.append(h_)
             return st, hists[0]
 
-        return once_batched, once_seq
+        return make_once_batched(batched_fn), once_seq, \
+            make_once_batched(mesh_fn)
 
-    seeds_batched, seeds_seq = make_seeds_execs()
+    seeds_batched, seeds_seq, seeds_mesh = make_seeds_execs()
 
     execs = {
         "host_loop": make_exec(True, chunked=False),
@@ -221,6 +237,9 @@ def _bench_round_executor(quick):
         # S-batched multi-seed executor vs its S-sequential-runs baseline
         "chunked_seeds": seeds_batched,
         "chunked_seeds_seq": seeds_seq,
+        # the same S-batched executor with live ('seed','pod','data')-mesh
+        # shardings in its jit — placement must not cost dispatch time
+        "chunked_seeds_mesh": seeds_mesh,
     }
     for once in execs.values():
         once(K)                        # warmup: compile round/chunk
@@ -238,11 +257,12 @@ def _bench_round_executor(quick):
             best[name] = dt if b_ is None else min(b_, dt)
     rows = []
     for name, t in best.items():
-        if name == "chunked_seeds":
+        if name in ("chunked_seeds", "chunked_seeds_mesh"):
             # derived: the S sequential chunked runs this one batched
             # dispatch stream replaces, over the batched time (> 1 = the
-            # seed-axis vmap wins; same interleaved bench run, so the
-            # ratio is robust to container load)
+            # seed-axis vmap wins, with or without the mesh shardings;
+            # same interleaved bench run, so the ratio is robust to
+            # container load)
             rows.append((f"rounds_per_sec/{name}", round(t / T * 1e6, 1),
                          round(best["chunked_seeds_seq"] / t, 2)))
         else:

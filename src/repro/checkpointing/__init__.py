@@ -1,6 +1,8 @@
 from repro.checkpointing.io import (  # noqa: F401
     load_pytree,
     restore_fl_state,
+    restore_run_state,
     save_fl_state,
     save_pytree,
+    save_run_state,
 )

@@ -78,3 +78,36 @@ def save_fl_state(path: str, state, round_t: int | None = None):
 def restore_fl_state(path: str, template):
     d = load_pytree(path, template._asdict())
     return type(template)(**d)
+
+
+def save_run_state(path: str, state, sampler_state, round_t=None):
+    """Checkpoint a RESUMABLE run: the ``FLState`` AND the carried
+    ``SamplerState`` in one artifact.
+
+    ``save_fl_state`` alone is enough for eval/export, but resuming a run
+    mid-stream needs the sampler's carry too — under epoch-permutation
+    sampling the ``[m, cap]`` permutation, cursors and epoch counters are
+    part of the stream state, and restarting them from scratch would
+    replay (or skip) samples.  ``state`` may be single-seed or the
+    seed-stacked ``[S, ...]`` carry of the multi-seed executor; both are
+    plain pytrees to the manifest.  Written at chunk boundaries
+    (``engine.run_rounds`` fires ``ckpt_fn`` there), so ``state.t`` is
+    exactly the number of completed rounds and the chunked executor's
+    ``fold_in(data_key, t)`` keying continues the stream without replay.
+    """
+    if round_t is None:
+        import numpy as _np
+        round_t = int(_np.asarray(state.t).reshape(-1)[0])
+    save_pytree(path, {"fl": state._asdict(), "sampler": sampler_state},
+                extra_meta={"t": round_t})
+
+
+def restore_run_state(path: str, state_template, sampler_template):
+    """Inverse of ``save_run_state``: structure-checked against templates
+    (an abstract ``FLState`` from ``init_fl_state`` and the sampler's
+    ``init_sampler_state`` output).  Returns ``(state, sampler_state)``
+    ready to hand back to the executor — bit-identical to the saved carry,
+    which the resume-parity tests pin down end to end."""
+    d = load_pytree(path, {"fl": state_template._asdict(),
+                           "sampler": sampler_template})
+    return type(state_template)(**d["fl"]), d["sampler"]

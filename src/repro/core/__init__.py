@@ -10,6 +10,7 @@ from repro.core.engine import (  # noqa: F401
     init_fl_state,
     local_sgd,
     make_chunk_fn,
+    make_grid_chunk_fn,
     make_round_fn,
     make_round_fn_with_frozen,
     make_seeds_chunk_fn,

@@ -48,9 +48,15 @@ Three executors drive the round function:
     over a leading seed axis — ONE dispatch advances S independent seed
     replicates K rounds each (states stacked with ``stack_seeds``, per-seed
     data keys, shared store), donated and shardable via
-    sharding/rules.seed_pspecs.  Per-seed results are bit-identical to S
-    single-seed chunked runs, which is how the paper's multi-seed
-    experiment grid (launch/experiments.py) runs as one-dispatch cells.
+    sharding/rules.seed_pspecs (on a dedicated ``('seed','pod','data')``
+    mesh from launch/mesh.make_seed_mesh, or over the client axes).
+    Per-seed results are bit-identical to S single-seed chunked runs,
+    which is how the paper's multi-seed experiment grid
+    (launch/experiments.py) runs as one-dispatch cells.
+  * packed grid executor (``make_grid_chunk_fn``): C seed-batched cell
+    bodies unrolled inside ONE donated jit — one dispatch advances a whole
+    shape-compatible group of grid cells (C cells x S seeds x K rounds),
+    the scaling step behind ``launch/experiments.py --packed``.
 """
 from __future__ import annotations
 
@@ -453,6 +459,61 @@ def make_seeds_chunk_fn(cfg, round_fn, sample_fn, chunk_rounds, n_seeds, *,
     return jax.jit(chunk, **kwargs)
 
 
+def make_grid_chunk_fn(cells, chunk_rounds, n_seeds, *, donate=True,
+                       jit=True, in_shardings=None, out_shardings=None):
+    """Packed grid executor: ONE donated dispatch advances C grid cells x
+    ``n_seeds`` seed replicates x ``chunk_rounds`` rounds.
+
+    ``cells`` is a list of ``(round_fn, sample_fn)`` pairs — one per grid
+    cell (strategy x availability x sampling knobs are baked into each
+    cell's round/sample functions).  Different cells trace different
+    computations (static strategy/availability branches), so they cannot
+    share one vmap the way seeds do; instead each cell's S-batched chunk
+    body (``make_seeds_chunk_fn``) is unrolled INSIDE a single jit.  The
+    cells are independent subgraphs, so XLA schedules them concurrently
+    and the whole group costs one dispatch per chunk — the grid-packing
+    layer (``launch/experiments.run_packed_grid``) groups registry cells
+    with identical array shapes and drives one of these per group, so a
+    Section 7 grid completes in a handful of dispatch streams instead of
+    one per cell.  Per-cell, per-seed results stay bit-identical to the
+    unpacked ``make_seeds_chunk_fn`` runs (each cell's subgraph is the
+    same expression; packing changes scheduling, not math).
+
+    Returned callable::
+
+        packed(states_t, sampler_states_t, stores_t, data_keys_t)
+            -> (states_t, sampler_states_t, metrics_t)
+
+    where every argument/result is a C-tuple over cells and element ``i``
+    has the ``[S, ...]`` layout of ``make_seeds_chunk_fn`` (stores may
+    differ in shape across cells — per-cell Dirichlet partitions).  The
+    state and sampler tuples are donated whole.
+    """
+    assert cells, "make_grid_chunk_fn needs at least one cell"
+    bodies = [make_seeds_chunk_fn(None, rf, sf, chunk_rounds, n_seeds,
+                                  donate=False, jit=False)
+              for rf, sf in cells]
+
+    def packed(states_t, sampler_states_t, stores_t, data_keys_t):
+        outs = [body(st, ss, store, dk)
+                for body, st, ss, store, dk in zip(
+                    bodies, states_t, sampler_states_t, stores_t,
+                    data_keys_t)]
+        return (tuple(o[0] for o in outs), tuple(o[1] for o in outs),
+                tuple(o[2] for o in outs))
+
+    if not jit:
+        return packed
+    kwargs = {}
+    if donate:
+        kwargs["donate_argnums"] = (0, 1)
+    if in_shardings is not None:
+        kwargs["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kwargs["out_shardings"] = out_shardings
+    return jax.jit(packed, **kwargs)
+
+
 def run_rounds(state: FLState, round_fn, batch_fn, T, *, jit=True,
                log_every=0, eval_fn=None, eval_every=0,
                chunk_rounds=0, sample_fn=None, store=None, data_key=None,
@@ -474,7 +535,12 @@ def run_rounds(state: FLState, round_fn, batch_fn, T, *, jit=True,
     device-side sampling via ``sample_fn``/``store``/``data_key``/
     ``sampler_state`` and one metrics fetch per chunk.  ``eval_fn``/
     ``ckpt_fn`` fire at the first chunk boundary at or past each
-    ``eval_every``/``ckpt_every`` multiple.  A prebuilt ``chunk_fn`` (e.g.
+    ``eval_every``/``ckpt_every`` multiple.  A 2-arg ``ckpt_fn(state,
+    t)`` writes eval/export checkpoints; a 3-arg ``ckpt_fn(state, t,
+    sampler_state)`` additionally receives the CARRIED sampler state —
+    required for a RESUMABLE checkpoint (``checkpointing.save_run_state``),
+    since the donated carry is otherwise consumed by the next dispatch
+    and never returned.  A prebuilt ``chunk_fn`` (e.g.
     with explicit shardings) is used for full-K chunks when given; because
     an implicitly rebuilt ``T % K`` tail would silently drop those
     shardings, a prebuilt ``chunk_fn`` with ``T % K != 0`` requires
@@ -489,6 +555,7 @@ def run_rounds(state: FLState, round_fn, batch_fn, T, *, jit=True,
             donate=donate, log_every=log_every, eval_fn=eval_fn,
             eval_every=eval_every, ckpt_fn=ckpt_fn, ckpt_every=ckpt_every)
 
+    _ss = None
     if batch_fn is None:
         assert sample_fn is not None and store is not None \
             and data_key is not None and sampler_state is not None, (
@@ -518,7 +585,8 @@ def run_rounds(state: FLState, round_fn, batch_fn, T, *, jit=True,
             rec.update(eval_fn(state))
         history.append(rec)
         if ckpt_fn is not None and ckpt_every and (t + 1) % ckpt_every == 0:
-            ckpt_fn(state, t + 1)
+            _call_ckpt(ckpt_fn, state, t + 1,
+                       _ss[0] if _ss is not None else None)
         if log_every and (t + 1) % log_every == 0:
             print(f"[round {t+1:5d}] " +
                   " ".join(f"{k}={v:.4f}" for k, v in rec.items()
@@ -529,6 +597,29 @@ def run_rounds(state: FLState, round_fn, batch_fn, T, *, jit=True,
 def _crossed(done, k, every):
     """Did [done-k, done] cross a multiple of ``every``?"""
     return every and (done // every) > ((done - k) // every)
+
+
+def _call_ckpt(ckpt_fn, state, done, sampler_state):
+    """Dispatch a checkpoint hook by arity: 2-arg ``(state, t)`` hooks
+    write eval/export checkpoints (the train-CLI default), 3-arg hooks
+    also get the carried sampler state so they can write a RESUMABLE
+    checkpoint (``checkpointing.save_run_state``) — the executors donate
+    the carry, so the hook is the only place both halves are in hand.
+    Variadic hooks (``*args``) count as 3-arg: a hook that absorbs
+    arguments must get the full run state, never a silent downgrade."""
+    import inspect
+
+    try:
+        params = inspect.signature(ckpt_fn).parameters.values()
+        variadic = any(p.kind == inspect.Parameter.VAR_POSITIONAL
+                       for p in params)
+        n = 3 if variadic else len(params)
+    except (TypeError, ValueError):  # builtins/partials without signature
+        n = 2
+    if n >= 3:
+        ckpt_fn(state, done, sampler_state)
+    else:
+        ckpt_fn(state, done)
 
 
 def _run_rounds_chunked(state, round_fn, T, K, *, sample_fn, store, data_key,
@@ -577,7 +668,7 @@ def _run_rounds_chunked(state, round_fn, T, K, *, sample_fn, store, data_key,
         if eval_fn is not None and _crossed(done, k, eval_every):
             history[-1].update(eval_fn(state))
         if ckpt_fn is not None and _crossed(done, k, ckpt_every):
-            ckpt_fn(state, done)
+            _call_ckpt(ckpt_fn, state, done, sampler_state)
         if _crossed(done, k, log_every):
             rec = history[-1]
             print(f"[round {done:5d}] " +

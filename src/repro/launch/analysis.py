@@ -252,10 +252,22 @@ def aggregate_seed_histories(histories: List[List[dict]]) -> dict:
     and rounds that have them; rounds where no seed recorded the key hold
     ``None`` — not NaN, so the dict round-trips through strict JSON).
     ``std`` is the population std across seeds — the ±band of the paper's
-    curves.
+    curves (population, so S=1 gives a 0-width band, never NaN).
+
+    Ragged per-seed lengths raise: every executor drive
+    (``run_seed_rounds`` / ``run_packed_group``) records exactly T rounds
+    per seed, so unequal lengths mean truncated or mixed-up histories —
+    silently averaging over a shrinking seed population would
+    misrepresent the paper's ±std band.
     """
     assert histories and all(histories), "need at least one non-empty history"
-    T = max(len(h) for h in histories)
+    lengths = sorted({len(h) for h in histories})
+    if len(lengths) > 1:
+        raise ValueError(
+            f"ragged per-seed histories (lengths {lengths}): every seed "
+            "must record the same number of rounds — a shorter history "
+            "means a truncated or mismatched run, not a valid replicate")
+    T = lengths[0]
     keys = sorted({k for h in histories for r in h for k in r if k != "t"})
     out = {"seeds": len(histories), "t": list(range(T)), "metrics": {}}
     for k in keys:

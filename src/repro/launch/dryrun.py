@@ -33,7 +33,8 @@ from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
                         make_seeds_chunk_fn)
 from repro.data import make_device_sampler
 from repro.launch import analysis
-from repro.launch.mesh import make_production_mesh, make_test_mesh, n_chips
+from repro.launch.mesh import (make_production_mesh, make_seed_mesh,
+                               make_test_mesh, n_chips)
 from repro.models import (init_cache, init_params, lm_loss, merge_trainable,
                           split_trainable)
 from repro.models.model import prefill, serve_step
@@ -182,6 +183,14 @@ def _chunk_seeds(variant):
     return 0
 
 
+def _chunk_mesh(variant):
+    """'+mesh' (with '+seedsS') runs the S-batched executor on a dedicated
+    ('seed','pod','data') mesh (launch/mesh.make_seed_mesh) instead of
+    folding the seed axis onto the client axes — the inner [m, N] client
+    placement survives under the seed axis."""
+    return "mesh" in variant.split("+")
+
+
 def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
     """The donated, sharded, scan-chunked round executor on the flat
     substrate: K FedAWE rounds per dispatch, the [m, N] client stack over
@@ -244,15 +253,19 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
     S = _chunk_seeds(variant)
     if S:
         # S-batched multi-seed executor: FLState/SamplerState/data keys
-        # grow a leading [S] axis that takes over the client mesh axes
-        # (seed_pspecs strips the displaced inner client placement); the
-        # store and the frozen base stay shared across replicates
+        # grow a leading [S] axis.  On the plain mesh it takes over the
+        # client mesh axes (seed_pspecs strips the displaced inner client
+        # placement); on a '+mesh' seed mesh it rides the dedicated
+        # 'seed' axis and the inner ('pod','data') client placement
+        # SURVIVES.  The store and the frozen base stay shared across
+        # replicates either way.
         def _seed_sds(t):
             return jax.tree.map(lambda x: _sds((S,) + x.shape, x.dtype), t)
 
-        state_spec = seed_pspecs(state_spec, seed_axes=ca)
-        sampler_spec = seed_pspecs(sampler_spec, seed_axes=ca)
-        metrics_spec = seed_pspecs(metrics_spec, seed_axes=ca)
+        sa = "seed" if "seed" in mesh.axis_names else ca
+        state_spec = seed_pspecs(state_spec, seed_axes=sa)
+        sampler_spec = seed_pspecs(sampler_spec, seed_axes=sa)
+        metrics_spec = seed_pspecs(metrics_spec, seed_axes=sa)
         fn = make_seeds_chunk_fn(
             fl, round_fn, sample_fn, K, S, with_frozen=True, donate=True,
             in_shardings=(_ns(mesh, state_spec), _ns(mesh, frozen_spec),
@@ -335,10 +348,17 @@ def run_one(arch, shape_name, mesh_kind, *, test_mesh=False, verbose=True,
     cfg = _apply_cfg_variant(get_config(arch), variant)
     shape = SHAPES[shape_name]
     multi_pod = mesh_kind == "multi"
-    mesh = (make_test_mesh(multi_pod=multi_pod) if test_mesh
-            else make_production_mesh(multi_pod=multi_pod))
+    if _chunk_mesh(variant) and _chunk_seeds(variant):
+        # dedicated ('seed','pod','data') mesh for the S-batched executor
+        mesh = make_seed_mesh(_chunk_seeds(variant), multi_pod=multi_pod,
+                              test=test_mesh)
+    else:
+        mesh = (make_test_mesh(multi_pod=multi_pod) if test_mesh
+                else make_production_mesh(multi_pod=multi_pod))
     rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind,
-               chips=n_chips(mesh), ok=False, variant=variant)
+               chips=n_chips(mesh), ok=False, variant=variant,
+               mesh_axes=dict(zip(mesh.axis_names,
+                                  (int(d) for d in mesh.devices.shape))))
     t0 = time.time()
     try:
         with mesh:
@@ -454,7 +474,10 @@ def main():
                          "per dispatch), epoch (epoch-permutation device "
                          "sampling with the carried SamplerState), seedsS "
                          "(S-batched multi-seed executor: S replicates per "
-                         "dispatch, seed axis over the client mesh axes)")
+                         "dispatch, seed axis over the client mesh axes), "
+                         "mesh (with seedsS: dedicated ('seed','pod','data') "
+                         "mesh from make_seed_mesh — the inner client "
+                         "placement survives under the seed axis)")
     args = ap.parse_args()
 
     results = []

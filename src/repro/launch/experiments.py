@@ -15,11 +15,22 @@ that grid a one-command, one-dispatch-per-chunk answer:
   * a **vmapped multi-seed executor**: ``engine.make_seeds_chunk_fn``
     batches the ``FLState``, the ``SamplerState`` and the per-seed data
     keys over a leading seed axis, so ONE jitted dispatch advances S
-    independent replicates K rounds (donated in place; shardable over the
-    pod mesh via ``sharding/rules.seed_pspecs``).  Seed replicate ``j``
-    is bit-identical to an independent single-seed chunked run driven by
-    ``fold_in(rng, j)`` / ``fold_in(data_key, j)`` — the parity tests pin
-    this down byte-for-byte;
+    independent replicates K rounds (donated in place; the live jit
+    carries ``sharding/rules.seed_pspecs`` shardings on a
+    ``('seed','pod','data')`` mesh from ``launch/mesh.make_seed_mesh``
+    when one is given).  Seed replicate ``j`` is bit-identical to an
+    independent single-seed chunked run driven by ``fold_in(rng, j)`` /
+    ``fold_in(data_key, j)`` — the parity tests pin this down
+    byte-for-byte.  Replication is **shared-template** by default (one
+    model init, seeds vary the stochastic draws) or **full**
+    (``--replicate full``: per-seed model re-init keyed
+    ``fold_in(model_rng, j)``, the paper's fully independent replicates);
+  * a **grid-packing layer** (``--packed``): cells with identical array
+    shapes (same model/m/N/strategy-memory/sampler-state shapes) group
+    into one donated dispatch stream each
+    (``engine.make_grid_chunk_fn``), so a whole Section 7 grid advances
+    as a handful of C-cells x S-seeds x K-rounds dispatches instead of
+    one stream per cell;
   * a **reporting layer**: per-seed histories aggregate into mean±std
     curves and a paper-style results table under ``results/``
     (``launch/analysis.aggregate_seed_histories`` / ``seed_summary`` /
@@ -31,7 +42,8 @@ CLI::
     python -m repro.launch.experiments --scenario fedawe/sine --seeds 4 \
         --rounds 24 --chunk-rounds 8
     python -m repro.launch.experiments --scenario 'fedawe/*' --seeds 4
-    python -m repro.launch.experiments --grid speedup-sine --seeds 8
+    python -m repro.launch.experiments --grid speedup-sine --seeds 8 \
+        --packed
 """
 from __future__ import annotations
 
@@ -43,10 +55,13 @@ import os
 import re
 
 import jax
+import jax.numpy as jnp
 
-from repro.core import (FLConfig, index_seed, init_fl_state, make_round_fn,
+from repro.core import (FLConfig, index_seed, init_fl_state,
+                        make_grid_chunk_fn, make_round_fn,
                         make_seeds_chunk_fn, stack_seeds)
 from repro.core.availability import KINDS, AvailabilityCfg
+from repro.core.engine import _crossed
 from repro.core.strategies import REGISTRY
 from repro.data import (SAMPLING_MODES, init_seed_sampler_states,
                         make_device_sampler, seed_data_keys)
@@ -186,32 +201,159 @@ _register_paper_grid()
 # ---------------------------------------------------------------------------
 
 def build_seed_batch(cfg: FLConfig, template, base_rng, data_key,
-                     init_sampler_state, store, n_seeds: int):
+                     init_sampler_state, store, n_seeds: int, *,
+                     template_fn=None, model_rng=None, seed_ids=None):
     """Stacked per-seed carry for ``make_seeds_chunk_fn``.
 
     Seed replicate ``j`` is initialized EXACTLY as an independent
     single-seed run with ``rng_j = fold_in(base_rng, j)`` and
     ``data_key_j = fold_in(data_key, j)`` would be — states are built
     one-by-one and tree-stacked (bitwise-preserving), which is the root
-    of the multi-seed parity guarantee.  The model template (and the
-    device store) is shared: seeds vary the stochastic draws
-    (availability, local-SGD noise, batch sampling), not the init point.
+    of the multi-seed parity guarantee.
+
+    Template modes (the replication semantics):
+
+      * shared (``template_fn=None``, default): every replicate starts
+        from the one ``template`` passed in — seeds vary only the
+        stochastic draws (availability, local-SGD noise, batch sampling).
+        Bit-compatible with the original executor, which the parity tests
+        pin down.
+      * full (``template_fn`` given): paper-style fully independent
+        replicates — seed ``j``'s model parameters are re-initialized
+        from ``template_fn(fold_in(model_rng, j))`` (``model_rng``
+        defaults to ``base_rng``), so the replicates differ in their init
+        point too, exactly as S independently-seeded runs would.
+
+    ``seed_ids`` (default ``range(n_seeds)``) names which replicate id
+    each stacked row carries: row ``i`` uses fold-in id ``seed_ids[i]``
+    throughout (state rng, data key, template).  Permuting ``seed_ids``
+    therefore permutes the per-seed results identically — the
+    independence property the hypothesis sweep checks.
 
     Returns ``(states, sampler_states, data_keys)`` with ``[S, ...]``
     leaves (``sampler_states`` is ``{}`` under uniform sampling).
     """
+    ids = list(range(n_seeds)) if seed_ids is None else \
+        [int(j) for j in seed_ids]
+    assert len(ids) == n_seeds, (ids, n_seeds)
+    if model_rng is None:
+        model_rng = base_rng
+
+    def tmpl(j):
+        if template_fn is None:
+            return template
+        return template_fn(jax.random.fold_in(model_rng, j))
+
     states = stack_seeds([
-        init_fl_state(jax.random.fold_in(base_rng, j), cfg, template)
-        for j in range(n_seeds)])
-    data_keys = seed_data_keys(data_key, n_seeds)
+        init_fl_state(jax.random.fold_in(base_rng, j), cfg, tmpl(j))
+        for j in ids])
+    if seed_ids is None:
+        data_keys = seed_data_keys(data_key, n_seeds)
+    else:
+        data_keys = jnp.stack([jax.random.fold_in(data_key, j)
+                               for j in ids])
     sampler_states = init_seed_sampler_states(init_sampler_state, store,
                                               data_keys)
     return states, sampler_states, data_keys
 
 
+def seed_chunk_shardings(mesh, fl: FLConfig, round_fn, sample_fn, n_seeds,
+                         states, sampler_states, store, data_keys):
+    """``(in_shardings, out_shardings)`` for the LIVE S-batched executor
+    jit on ``mesh`` — ``sharding/rules.seed_pspecs`` threaded through the
+    running ``make_seeds_chunk_fn``, not just the dry-run.
+
+    The seed axis rides the mesh's dedicated ``'seed'`` axis when there is
+    one (``launch/mesh.make_seed_mesh``'s ``('seed','pod','data')``), in
+    which case the inner ``[m, N]`` client placement over ``('pod','data')``
+    SURVIVES underneath it; on a seed-less mesh the seed axis takes over
+    the client axes and the displaced inner placement is stripped (the
+    PR 4 trade).  The store's index matrix/counts stay on the client axes,
+    backing arrays and the per-seed data keys replicate, and metrics
+    (tiny ``[S, K]`` scalars) replicate.  Flat substrate only — the spec
+    rules key off the ``[m, N]`` layout.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import mesh_axis_sizes
+    from repro.sharding import (flat_pspecs, sampler_pspecs, seed_axes_for,
+                                seed_pspecs)
+
+    assert fl.flat_state, \
+        "seed_chunk_shardings needs the flat [m, N] substrate"
+    ax = mesh_axis_sizes(mesh)
+    multi_pod = "pod" in ax
+    sa = seed_axes_for(mesh)
+    ca = ("pod", "data") if multi_pod else ("data",)
+
+    def ns(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    inner_state = jax.eval_shape(lambda t: index_seed(t, 0), states)
+    inner_sampler = jax.eval_shape(lambda t: index_seed(t, 0),
+                                   sampler_states)
+    state_spec = seed_pspecs(
+        flat_pspecs(mesh, inner_state, multi_pod=multi_pod), seed_axes=sa)
+    sampler_spec = seed_pspecs(
+        sampler_pspecs(mesh, inner_sampler, fl.m, multi_pod=multi_pod),
+        seed_axes=sa)
+    store_spec = dict(
+        arrays=jax.tree.map(lambda v: P(*([None] * v.ndim)),
+                            store["arrays"]),
+        idx=P(ca, None),
+        counts=P(ca),
+    )
+    # metrics structure comes from an abstract trace of the (unjitted)
+    # executor — generic over whatever metric dict round_fn returns
+    probe = make_seeds_chunk_fn(fl, round_fn, sample_fn, 1, n_seeds,
+                                donate=False, jit=False)
+    metrics_sds = jax.eval_shape(probe, states, sampler_states, store,
+                                 data_keys)[2]
+    metrics_spec = jax.tree.map(lambda x: P(*([None] * x.ndim)),
+                                metrics_sds)
+    in_sh = (ns(state_spec), ns(sampler_spec), ns(store_spec),
+             NamedSharding(mesh, P(None, None)))
+    out_sh = (ns(state_spec), ns(sampler_spec), ns(metrics_spec))
+    return in_sh, out_sh
+
+
+def build_seed_executor(fl: FLConfig, round_fn, sample_fn, n_seeds, *,
+                        mesh=None, states=None, sampler_states=None,
+                        store=None, data_keys=None):
+    """``builder(k) -> `` S-batched chunk executor for any chunk length
+    ``k`` (the same builder serves the full-K chunks and the ``T % K``
+    tail, so the tail keeps the caller's placement).  With ``mesh``, the
+    executor jit carries ``seed_chunk_shardings``' in/out shardings on top
+    of the usual donation; without, it is the plain donated executor."""
+    if mesh is None:
+        return lambda k: make_seeds_chunk_fn(fl, round_fn, sample_fn, k,
+                                             n_seeds)
+    in_sh, out_sh = seed_chunk_shardings(
+        mesh, fl, round_fn, sample_fn, n_seeds, states, sampler_states,
+        store, data_keys)
+    return lambda k: make_seeds_chunk_fn(fl, round_fn, sample_fn, k,
+                                         n_seeds, in_shardings=in_sh,
+                                         out_shardings=out_sh)
+
+
+def _append_seed_records(histories, metrics, k, done, n_seeds):
+    """Append one fetched ``[S, k]`` metrics blob to per-seed histories
+    as per-round dicts (``{"t": done+i, <metric>: float, ...}``).  The
+    ONE record builder shared by the unpacked (``run_seed_rounds``) and
+    packed (``run_packed_group``) drivers — their bit-parity guarantee
+    includes the history records, so the construction must not drift."""
+    for j in range(n_seeds):
+        for i in range(k):
+            rec = {key: float(v[j][i]) for key, v in metrics.items()}
+            rec["t"] = done + i
+            histories[j].append(rec)
+
+
 def run_seed_rounds(states, chunk_fn, T, K, *, sampler_states, store,
                     data_keys, n_seeds, make_tail_fn=None, eval_fn=None,
-                    eval_every=0, log_every=0):
+                    eval_every=0, log_every=0, ckpt_fn=None, ckpt_every=0):
     """Drive the S-batched executor for T rounds in ceil(T/K) dispatches.
 
     The seed-axis analogue of ``engine.run_rounds(chunk_rounds=K)``: each
@@ -219,14 +361,17 @@ def run_seed_rounds(states, chunk_fn, T, K, *, sampler_states, store,
     ``[S, K]`` metrics with one ``jax.device_get``.  ``eval_fn`` (taking a
     single-seed ``FLState``) runs per seed at the first chunk boundary at
     or past each ``eval_every`` multiple, on ``index_seed(states, j)``.
-    A ``T % K`` tail needs ``make_tail_fn(k)`` (an S-batched executor for
-    the shorter chunk) when T is not a multiple of K.
+    ``ckpt_fn(states, done, sampler_states)`` fires likewise per
+    ``ckpt_every`` with BOTH seed-stacked carries in hand — feed it
+    ``checkpointing.save_run_state`` for a mid-grid resumable checkpoint
+    (the donated carries are consumed by the next dispatch, so the hook
+    is the only place to capture them).  A ``T % K`` tail needs
+    ``make_tail_fn(k)`` (an S-batched executor for the shorter chunk)
+    when T is not a multiple of K.
 
     Returns ``(states, histories)`` — one history (list of per-round
     metric dicts) per seed.
     """
-    from repro.core.engine import _crossed
-
     if T % K and make_tail_fn is None:
         # fail BEFORE the first dispatch (mirrors _run_rounds_chunked's
         # tail footgun): discovering the missing tail builder after T-T%K
@@ -247,15 +392,13 @@ def run_seed_rounds(states, chunk_fn, T, K, *, sampler_states, store,
         states, sampler_states, metrics = f(states, sampler_states, store,
                                             data_keys)
         metrics = jax.device_get(metrics)      # ONE host sync per dispatch
-        for j in range(n_seeds):
-            for i in range(k):
-                rec = {key: float(v[j][i]) for key, v in metrics.items()}
-                rec["t"] = done + i
-                histories[j].append(rec)
+        _append_seed_records(histories, metrics, k, done, n_seeds)
         done += k
         if eval_fn is not None and _crossed(done, k, eval_every):
             for j in range(n_seeds):
                 histories[j][-1].update(eval_fn(index_seed(states, j)))
+        if ckpt_fn is not None and _crossed(done, k, ckpt_every):
+            ckpt_fn(states, done, sampler_states)
         if _crossed(done, k, log_every):
             mean_loss = sum(h[-1].get("loss", float("nan"))
                             for h in histories) / n_seeds
@@ -266,13 +409,18 @@ def run_seed_rounds(states, chunk_fn, T, K, *, sampler_states, store,
 
 def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
                    batch, seeds, rounds, chunk_rounds, rng, data_key,
-                   eval_fn=None, eval_every=0, log_every=0):
+                   eval_fn=None, eval_every=0, log_every=0, mesh=None,
+                   template_fn=None):
     """THE multi-seed driver (used by both this module's ``run_scenario``
     and ``train.py --seeds``): device store + stateful sampler + stacked
     per-seed carry + S-batched executor, end to end.
 
     ``chunk_rounds`` of 0 defaults to K=8; K is clamped to ``rounds`` and
-    a ``T % K`` tail executor is built automatically.  Returns
+    a ``T % K`` tail executor is built automatically.  ``mesh`` (e.g.
+    ``launch/mesh.make_seed_mesh``'s ``('seed','pod','data')``) threads
+    the live ``seed_chunk_shardings`` through the executor jit;
+    ``template_fn`` switches shared-template replication to paper-style
+    per-seed model re-init (see ``build_seed_batch``).  Returns
     ``(states, histories, finals)`` — the seed-stacked final ``FLState``,
     one metric history per seed, and (when ``eval_fn`` is given) one
     final-eval dict per seed via ``index_seed``.
@@ -282,30 +430,27 @@ def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
         fl.m, fl.s, batch, mode=sampling,
         min_count=min(len(ix) for ix in ds.client_indices))
     states, sampler_states, data_keys = build_seed_batch(
-        fl, template, rng, data_key, init_fn, store, seeds)
+        fl, template, rng, data_key, init_fn, store, seeds,
+        template_fn=template_fn)
     K = min(int(chunk_rounds) or 8, int(rounds))
-    chunk_fn = make_seeds_chunk_fn(fl, round_fn, sample_fn, K, seeds)
+    builder = build_seed_executor(fl, round_fn, sample_fn, seeds,
+                                  mesh=mesh, states=states,
+                                  sampler_states=sampler_states,
+                                  store=store, data_keys=data_keys)
     states, histories = run_seed_rounds(
-        states, chunk_fn, rounds, K, sampler_states=sampler_states,
+        states, builder(K), rounds, K, sampler_states=sampler_states,
         store=store, data_keys=data_keys, n_seeds=seeds,
-        make_tail_fn=lambda k: make_seeds_chunk_fn(fl, round_fn, sample_fn,
-                                                   k, seeds),
+        make_tail_fn=builder,
         eval_fn=eval_fn, eval_every=eval_every, log_every=log_every)
     finals = ([eval_fn(index_seed(states, j)) for j in range(seeds)]
               if eval_fn is not None else [])
     return states, histories, finals
 
 
-def run_scenario(sc: Scenario, *, seeds=4, rounds=24, chunk_rounds=8,
-                 m=16, s=3, batch=8, n_samples=4000, preset="image",
-                 seed=0, eval_every=0, use_kernel=False, log_every=0):
-    """Run one grid cell: S seed replicates of ``rounds`` rounds, advanced
-    K rounds per dispatch by the vmapped multi-seed executor.
-
-    Returns the cell record: per-seed final evals, their mean±std
-    (``final``), mean±std metric curves (``curves``), and the raw
-    per-seed ``histories``.
-    """
+def _cell_task(sc: Scenario, *, m, s, batch, n_samples, preset, seed,
+               use_kernel):
+    """Materialize one cell's task + round function: ``(fl, round_fn,
+    ds, eval_fn, init_fn)``."""
     # lazy import: train.py imports this module for --scenario/--seeds
     from repro.launch import train as train_mod
 
@@ -314,26 +459,178 @@ def run_scenario(sc: Scenario, *, seeds=4, rounds=24, chunk_rounds=8,
     rng = jax.random.PRNGKey(seed)
     build = (train_mod.build_image_task if preset == "image"
              else train_mod.build_lm_task)
-    params, loss_fn, ds, base_p, eval_fn = build(args, rng)
-
+    params, loss_fn, ds, base_p, eval_fn, init_fn = build(args, rng)
     fl = FLConfig(m=m, s=s, eta_l=sc.eta_l, eta_g=sc.eta_g,
                   strategy=sc.strategy, flat_state=sc.flat_state,
                   use_kernel=use_kernel)
     rf = make_round_fn(fl, loss_fn, {}, sc.availability(), base_p)
-    K = min(int(chunk_rounds) or 8, int(rounds))
-    states, histories, finals = run_multi_seed(
-        fl, rf, params, ds, sampling=sc.sampling, batch=batch, seeds=seeds,
-        rounds=rounds, chunk_rounds=K, rng=rng,
-        data_key=jax.random.PRNGKey(seed + 1), eval_fn=eval_fn,
-        eval_every=eval_every, log_every=log_every)
+    return fl, rf, params, ds, eval_fn, init_fn
+
+
+def _cell_record(sc: Scenario, *, seeds, rounds, chunk_rounds, finals,
+                 histories):
     return dict(
         scenario=sc.name, strategy=sc.strategy, dynamics=sc.kind,
         sampling=sc.sampling, alpha=sc.alpha, seeds=seeds, rounds=rounds,
-        chunk_rounds=K, note=sc.note,
+        chunk_rounds=chunk_rounds, note=sc.note,
         final=analysis.seed_summary(finals),
         curves=analysis.aggregate_seed_histories(histories),
         histories=histories,
     )
+
+
+def run_scenario(sc: Scenario, *, seeds=4, rounds=24, chunk_rounds=8,
+                 m=16, s=3, batch=8, n_samples=4000, preset="image",
+                 seed=0, eval_every=0, use_kernel=False, log_every=0,
+                 mesh=None, replicate="shared"):
+    """Run one grid cell: S seed replicates of ``rounds`` rounds, advanced
+    K rounds per dispatch by the vmapped multi-seed executor.
+
+    ``mesh`` threads the live seed-mesh shardings through the executor
+    jit (``seed_chunk_shardings``); ``replicate='full'`` re-initializes
+    the model per seed (see ``build_seed_batch``).  Returns the cell
+    record: per-seed final evals, their mean±std (``final``), mean±std
+    metric curves (``curves``), and the raw per-seed ``histories``.
+    """
+    fl, rf, params, ds, eval_fn, init_fn = _cell_task(
+        sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
+        seed=seed, use_kernel=use_kernel)
+    K = min(int(chunk_rounds) or 8, int(rounds))
+    states, histories, finals = run_multi_seed(
+        fl, rf, params, ds, sampling=sc.sampling, batch=batch, seeds=seeds,
+        rounds=rounds, chunk_rounds=K, rng=jax.random.PRNGKey(seed),
+        data_key=jax.random.PRNGKey(seed + 1), eval_fn=eval_fn,
+        eval_every=eval_every, log_every=log_every, mesh=mesh,
+        template_fn=init_fn if replicate == "full" else None)
+    return _cell_record(sc, seeds=seeds, rounds=rounds, chunk_rounds=K,
+                        finals=finals, histories=histories)
+
+
+# ---------------------------------------------------------------------------
+# grid packing: shape-compatible cells -> one donated dispatch stream
+# ---------------------------------------------------------------------------
+
+def build_cell(sc: Scenario, *, seeds, rounds, chunk_rounds, m, s, batch,
+               n_samples, preset, seed, use_kernel=False,
+               replicate="shared"):
+    """Build everything one PACKED grid cell needs — task, round/sample
+    fns, device store, and the stacked per-seed carry — without running
+    it.  The returned dict is the unit ``pack_cells`` groups and
+    ``run_packed_grid`` drives."""
+    fl, rf, params, ds, eval_fn, init_fn = _cell_task(
+        sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
+        seed=seed, use_kernel=use_kernel)
+    store = ds.device_store()
+    init_sampler, sample_fn = make_device_sampler(
+        fl.m, fl.s, batch, mode=sc.sampling,
+        min_count=min(len(ix) for ix in ds.client_indices))
+    states, sampler_states, data_keys = build_seed_batch(
+        fl, params, jax.random.PRNGKey(seed), jax.random.PRNGKey(seed + 1),
+        init_sampler, store, seeds,
+        template_fn=init_fn if replicate == "full" else None)
+    K = min(int(chunk_rounds) or 8, int(rounds))
+    return dict(sc=sc, fl=fl, round_fn=rf, sample_fn=sample_fn,
+                store=store, states=states, sampler_states=sampler_states,
+                data_keys=data_keys, eval_fn=eval_fn, seeds=seeds,
+                rounds=rounds, K=K)
+
+
+def _shape_sig(tree):
+    """Hashable (path, shape, dtype) signature of a pytree of arrays —
+    the grouping key of the packing layer."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return (str(treedef),) + tuple(
+        (jax.tree_util.keystr(kp), tuple(int(d) for d in x.shape),
+         str(x.dtype)) for kp, x in flat)
+
+
+def pack_cells(cells):
+    """Group built cells by array-shape signature — same model/m/N
+    shapes, same strategy-memory shapes, same sampler-state shapes, same
+    S/K/T — preserving input order within and across groups.  Every group
+    runs as ONE donated dispatch stream (``engine.make_grid_chunk_fn``):
+    the Section 7 grid packs to one group per strategy family instead of
+    one dispatch stream per cell."""
+    groups: dict = {}
+    for c in cells:
+        sig = (_shape_sig(c["states"]), _shape_sig(c["sampler_states"]),
+               _shape_sig(c["store"]), c["seeds"], c["K"], c["rounds"])
+        groups.setdefault(sig, []).append(c)
+    return list(groups.values())
+
+
+def run_packed_group(cells, *, eval_every=0, log_every=0):
+    """Drive one shape-compatible group: ceil(T/K) packed dispatches, each
+    advancing every cell x seed x round in the group.  Per-cell results
+    are identical to the unpacked ``run_seed_rounds`` drive (the packed
+    jit unrolls the same per-cell subgraphs).  Returns ``(states_t,
+    histories_t)`` — per-cell seed-stacked states and per-cell, per-seed
+    metric histories."""
+    assert cells
+    seeds, K, T = cells[0]["seeds"], cells[0]["K"], cells[0]["rounds"]
+    pairs = [(c["round_fn"], c["sample_fn"]) for c in cells]
+    states_t = tuple(c["states"] for c in cells)
+    sampler_t = tuple(c["sampler_states"] for c in cells)
+    stores_t = tuple(c["store"] for c in cells)
+    keys_t = tuple(c["data_keys"] for c in cells)
+    packed = make_grid_chunk_fn(pairs, K, seeds)
+    tail_fn = None
+    histories = [[[] for _ in range(seeds)] for _ in cells]
+    done = 0
+    while done < T:
+        k = min(K, T - done)
+        if k == K:
+            f = packed
+        else:
+            tail_fn = tail_fn or make_grid_chunk_fn(pairs, k, seeds)
+            f = tail_fn
+        states_t, sampler_t, metrics_t = f(states_t, sampler_t, stores_t,
+                                           keys_t)
+        metrics_t = jax.device_get(metrics_t)  # ONE host sync per dispatch
+        for ci, metrics in enumerate(metrics_t):
+            _append_seed_records(histories[ci], metrics, k, done, seeds)
+        done += k
+        if _crossed(done, k, eval_every):
+            for ci, c in enumerate(cells):
+                if c["eval_fn"] is None:
+                    continue
+                for j in range(seeds):
+                    histories[ci][j][-1].update(
+                        c["eval_fn"](index_seed(states_t[ci], j)))
+        if _crossed(done, k, log_every):
+            print(f"[round {done:5d}] packed group: {len(cells)} cells "
+                  f"x {seeds} seeds", flush=True)
+    return states_t, histories
+
+
+def run_packed_grid(names, *, seeds=4, rounds=24, chunk_rounds=8, m=16,
+                    s=3, batch=8, n_samples=4000, preset="image", seed=0,
+                    eval_every=0, use_kernel=False, log_every=0,
+                    replicate="shared"):
+    """The packed grid driver behind ``--packed``: build every named
+    cell, group shape-compatible cells (``pack_cells``), advance each
+    group as one donated dispatch stream, and return the per-cell records
+    in input order (same shape as ``run_scenario``'s)."""
+    cells = [build_cell(get_scenario(n), seeds=seeds, rounds=rounds,
+                        chunk_rounds=chunk_rounds, m=m, s=s, batch=batch,
+                        n_samples=n_samples, preset=preset, seed=seed,
+                        use_kernel=use_kernel, replicate=replicate)
+             for n in names]
+    groups = pack_cells(cells)
+    print(f"packed {len(cells)} cells into {len(groups)} dispatch "
+          f"stream(s)", flush=True)
+    recs = {}
+    for group in groups:
+        states_t, hists = run_packed_group(group, eval_every=eval_every,
+                                           log_every=log_every)
+        for c, st, hs in zip(group, states_t, hists):
+            finals = ([c["eval_fn"](index_seed(st, j))
+                       for j in range(seeds)]
+                      if c["eval_fn"] is not None else [])
+            recs[c["sc"].name] = _cell_record(
+                c["sc"], seeds=seeds, rounds=rounds, chunk_rounds=c["K"],
+                finals=finals, histories=hs)
+    return [recs[n] for n in names]
 
 
 def _cell_row(rec: dict) -> dict:
@@ -386,6 +683,24 @@ def build_parser() -> argparse.ArgumentParser:
                     help="base seed; replicate j uses fold_in(seed, j)")
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="grid packing: group shape-compatible cells and "
+                         "advance each group as ONE donated dispatch per "
+                         "chunk (C cells x S seeds x K rounds), instead "
+                         "of one dispatch stream per cell")
+    ap.add_argument("--replicate", default="shared",
+                    choices=["shared", "full"],
+                    help="seed-replication mode: 'shared' starts every "
+                         "replicate from one model init (original "
+                         "behaviour), 'full' re-initializes the model "
+                         "per seed from fold_in(model_rng, j) — the "
+                         "paper's fully independent replicates")
+    ap.add_argument("--seed-mesh", action="store_true",
+                    help="build a ('seed','pod','data') mesh "
+                         "(launch/mesh.make_seed_mesh, auto-sized from "
+                         "--seeds and the device count) and thread the "
+                         "seed_pspecs shardings through the live "
+                         "executor jit (unpacked cells)")
     ap.add_argument("--out-dir", default="results",
                     help="per-cell JSON + the results table land here")
     ap.add_argument("--no-save", action="store_true")
@@ -412,17 +727,46 @@ def main(argv=None):
                          "(or --list)")
     names = match_scenarios(patterns)
 
-    rows = []
-    for name in names:
-        print(f"=== scenario {name} (seeds={args.seeds}, "
-              f"rounds={args.rounds}) ===", flush=True)
-        rec = run_scenario(
-            get_scenario(name), seeds=args.seeds, rounds=args.rounds,
+    mesh = None
+    if args.seed_mesh:
+        if args.packed:
+            # refuse rather than silently run the packed executor
+            # unsharded while claiming a seed mesh (threading per-cell
+            # mesh shardings through make_grid_chunk_fn is a ROADMAP
+            # follow-up)
+            raise SystemExit(
+                "--seed-mesh is not yet wired into --packed: the packed "
+                "executor would run without the mesh shardings; drop one "
+                "of the two flags")
+        from repro.launch.mesh import make_seed_mesh
+        mesh = make_seed_mesh(args.seeds)
+        print(f"seed mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}",
+              flush=True)
+
+    if args.packed:
+        recs = run_packed_grid(
+            names, seeds=args.seeds, rounds=args.rounds,
             chunk_rounds=args.chunk_rounds, m=args.m, s=args.s,
-            batch=args.batch, n_samples=args.n_samples, preset=args.preset,
-            seed=args.seed, eval_every=args.eval_every,
-            use_kernel=args.use_kernel,
-            log_every=max(1, args.rounds // 4))
+            batch=args.batch, n_samples=args.n_samples,
+            preset=args.preset, seed=args.seed,
+            eval_every=args.eval_every, use_kernel=args.use_kernel,
+            log_every=max(1, args.rounds // 4), replicate=args.replicate)
+    else:
+        recs = []
+        for name in names:
+            print(f"=== scenario {name} (seeds={args.seeds}, "
+                  f"rounds={args.rounds}) ===", flush=True)
+            recs.append(run_scenario(
+                get_scenario(name), seeds=args.seeds, rounds=args.rounds,
+                chunk_rounds=args.chunk_rounds, m=args.m, s=args.s,
+                batch=args.batch, n_samples=args.n_samples,
+                preset=args.preset, seed=args.seed,
+                eval_every=args.eval_every, use_kernel=args.use_kernel,
+                log_every=max(1, args.rounds // 4), mesh=mesh,
+                replicate=args.replicate))
+
+    rows = []
+    for name, rec in zip(names, recs):
         rows.append(_cell_row(rec))
         if not args.no_save:
             path = os.path.join(args.out_dir, "experiments",

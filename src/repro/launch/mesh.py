@@ -40,6 +40,56 @@ def make_test_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devs[:n])
 
 
+def seed_mesh_shape(n_seeds: int, n_devices: int, *, multi_pod: bool = False):
+    """Auto-size a ('seed', 'pod', 'data') mesh, or None when it cannot fit.
+
+    The seed axis must be a DIVISOR of ``n_seeds`` (so an ``[S, ...]``
+    state shards evenly; size 1 degenerates to replicated seeds).  Among
+    the divisors that fit beside the pod axis, pick the one that uses the
+    most devices — ``seed * pods * (devices // (seed * pods))`` — with
+    the larger seed axis breaking ties (more seed parallelism at equal
+    utilization): e.g. S=4 on 6 single-pod devices gives (2, 1, 3), all
+    six chips, not (4, 1, 1).  Returns ``None`` exactly when even the
+    pod axis alone exceeds the device count — the caller then degrades
+    to the standard 2-/3-axis mesh and seeds ride the client axes
+    instead (``sharding/rules.seed_pspecs(seed_axes=('pod','data'))``,
+    the PR 4 placement).
+    """
+    assert n_seeds >= 1 and n_devices >= 0
+    pods = 2 if multi_pod else 1
+    if pods > n_devices:
+        return None
+    s_ax = max((d for d in range(1, n_seeds + 1)
+                if n_seeds % d == 0 and d * pods <= n_devices),
+               key=lambda d: (d * pods * (n_devices // (d * pods)), d))
+    return (s_ax, pods, n_devices // (s_ax * pods))
+
+
+def make_seed_mesh(n_seeds: int, *, multi_pod: bool = False,
+                   test: bool = False):
+    """('seed', 'pod', 'data') mesh for the S-batched grid executor.
+
+    The dedicated seed axis is pure data parallelism over independent
+    replicates — with it, the per-seed client placement survives
+    (``seed_pspecs(seed_axes='seed')`` does not strip the inner
+    ('pod','data') axes).  Sized by ``seed_mesh_shape`` (the divisor of
+    S using the most devices; when S·pods exceeds the device count the
+    seed axis shrinks), and when even the pod axis does not fit this degrades
+    gracefully to the current 2-/3-axis mesh (``make_test_mesh`` /
+    ``make_production_mesh``) — callers detect which mesh they got via
+    ``'seed' in mesh.axis_names``.  ``test`` caps the mesh at 8 chips for
+    CI (mirroring ``make_test_mesh``'s miniature tier).
+    """
+    devs = jax.devices()
+    budget = min(len(devs), 8) if test else len(devs)
+    shape = seed_mesh_shape(n_seeds, budget, multi_pod=multi_pod)
+    if shape is None:
+        return (make_test_mesh(multi_pod=multi_pod) if test
+                else make_production_mesh(multi_pod=multi_pod))
+    return jax.make_mesh(shape, ("seed", "pod", "data"),
+                         devices=devs[:math.prod(shape)])
+
+
 def mesh_axis_sizes(mesh):
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

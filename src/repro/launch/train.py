@@ -33,6 +33,11 @@ from repro.models import init_params, lm_loss
 
 
 def build_image_task(args, rng):
+    """Synthetic image-classification task.  Returns ``(params, loss_fn,
+    ds, base_p, eval_fn, init_fn)`` — ``init_fn(key)`` re-initializes the
+    model from any PRNG key (paper-style per-seed full replication:
+    ``--replicate full`` draws seed j's template from
+    ``init_fn(fold_in(model_rng, j))``)."""
     task = make_image_classification(seed=args.seed, n=args.n_samples,
                                      shape=(8, 8, 1))
     nprng = np.random.default_rng(args.seed)
@@ -41,8 +46,12 @@ def build_image_task(args, rng):
     ds = FederatedDataset(dict(images=task.images, labels=task.labels), idx,
                           seed=args.seed)
     base_p = base_probs_from_data(rng, jnp.asarray(nu))
-    params = cnn.init_cnn(jax.random.PRNGKey(args.seed), in_shape=(8, 8, 1),
-                          n_classes=task.n_classes)
+
+    def init_fn(key):
+        return cnn.init_cnn(key, in_shape=(8, 8, 1),
+                            n_classes=task.n_classes)
+
+    params = init_fn(jax.random.PRNGKey(args.seed))
     loss_fn = cnn.make_image_loss_fn(cnn.cnn_apply)
 
     def eval_fn(state):
@@ -51,7 +60,7 @@ def build_image_task(args, rng):
                            {k: jnp.asarray(v) for k, v in batch.items()})
         return {"eval_acc": float(acc)}
 
-    return params, loss_fn, ds, base_p, eval_fn
+    return params, loss_fn, ds, base_p, eval_fn, init_fn
 
 
 def build_lm_task(args, rng):
@@ -69,7 +78,11 @@ def build_lm_task(args, rng):
     ds = FederatedDataset(dict(tokens=tokens, labels=labels), idx,
                           seed=args.seed)
     base_p = base_probs_from_data(rng, jnp.asarray(nu))
-    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    def init_fn(key):
+        return init_params(key, cfg)
+
+    params = init_fn(jax.random.PRNGKey(args.seed))
 
     def loss_fn(tr, frozen, batch, key):
         b = dict(tokens=batch["tokens"], labels=batch["labels"],
@@ -82,7 +95,7 @@ def build_lm_task(args, rng):
         b["mask"] = jnp.ones_like(b["labels"], jnp.float32)
         return {"eval_loss": float(lm_loss(global_trainables(state), cfg, b))}
 
-    return params, loss_fn, ds, base_p, eval_fn
+    return params, loss_fn, ds, base_p, eval_fn, init_fn
 
 
 # resolution order for the scenario-overridable flags: explicit CLI value
@@ -140,6 +153,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "results bit-identical to S independent runs "
                          "with rng/data keys fold_in(seed_key, j)); "
                          "reports mean±std over seeds")
+    ap.add_argument("--replicate", default="shared",
+                    choices=["shared", "full"],
+                    help="multi-seed template mode (--seeds S>1): 'shared' "
+                         "starts every replicate from one model init "
+                         "(seeds vary only the stochastic draws; the "
+                         "original executor behaviour), 'full' re-"
+                         "initializes the model per seed from "
+                         "fold_in(model_rng, j) — the paper's fully "
+                         "independent replicates")
     ap.add_argument("--scenario", default=None,
                     help="named experiment-grid cell (launch/experiments "
                          "--list): supplies --strategy/--dynamics/"
@@ -179,7 +201,7 @@ def main(argv=None):
 
     rng = jax.random.PRNGKey(args.seed)
     build = build_image_task if args.preset == "image" else build_lm_task
-    params, loss_fn, ds, base_p, eval_fn = build(args, rng)
+    params, loss_fn, ds, base_p, eval_fn, init_fn = build(args, rng)
 
     fl = FLConfig(m=args.m, s=args.s, eta_l=args.eta_l, eta_g=args.eta_g,
                   strategy=args.strategy, use_kernel=args.use_kernel,
@@ -195,7 +217,7 @@ def main(argv=None):
 
     if args.seeds > 1:
         return _main_multi_seed(args, fl, round_fn, params, ds, eval_fn,
-                                rng)
+                                rng, init_fn)
     state = init_fl_state(rng, fl, params)
 
     ckpt_fn = None
@@ -242,15 +264,19 @@ def main(argv=None):
     return final
 
 
-def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng):
+def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng, init_fn):
     """``--seeds S > 1``: drive the vmapped multi-seed executor.
 
     Always chunked (``--chunk-rounds`` or K=8): one dispatch advances all
     S replicates one chunk.  Replicate ``j`` uses ``fold_in(rng, j)`` /
     ``fold_in(data_key, j)`` — bit-identical to an independent run with
-    those keys.  Reports per-metric mean±std over seeds; ``--out`` records
-    the aggregate curves plus every per-seed history; ``--ckpt`` saves
-    seed 0's final state.
+    those keys.  ``--replicate full`` additionally re-initializes the
+    MODEL per seed (template ``init_fn(fold_in(rng, j))``, the paper's
+    fully independent replicates); the default ``shared`` keeps one init
+    template for every seed (bit-compatible with the original executor).
+    Reports per-metric mean±std over seeds; ``--out`` records the
+    aggregate curves plus every per-seed history; ``--ckpt`` saves seed
+    0's final state.
     """
     from repro.core import index_seed
     from repro.launch import analysis
@@ -261,7 +287,8 @@ def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng):
         seeds=args.seeds, rounds=args.rounds,
         chunk_rounds=args.chunk_rounds, rng=rng,
         data_key=jax.random.PRNGKey(args.seed + 1), eval_fn=eval_fn,
-        eval_every=args.eval_every, log_every=max(1, args.rounds // 10))
+        eval_every=args.eval_every, log_every=max(1, args.rounds // 10),
+        template_fn=init_fn if args.replicate == "full" else None)
     final = analysis.seed_summary(finals)
     print("final (mean±std over seeds):", final)
     if args.out:

@@ -5,6 +5,7 @@ from repro.sharding.rules import (  # noqa: F401
     flat_pspecs,
     param_pspecs,
     sampler_pspecs,
+    seed_axes_for,
     seed_pspecs,
     serve_batch_pspecs,
 )

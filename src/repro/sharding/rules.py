@@ -43,8 +43,11 @@ def _in_stack(path):
 
 
 def _base_spec(name, shape, ax):
-    """PartitionSpec for a 'bare' (unstacked) parameter leaf."""
-    md = ax.get("model", 1)
+    """PartitionSpec for a 'bare' (unstacked) parameter leaf.  On a mesh
+    without a 'model' axis (the ('seed','pod','data') grid mesh) every
+    would-be model-parallel dim stays replicated (``_div(n, 0)`` is
+    False), which is always correct."""
+    md = ax.get("model", 0)
 
     def m(dim):
         return "model" if _div(shape[dim], md) else None
@@ -203,6 +206,19 @@ def sampler_pspecs(mesh, sampler_sds, m, *, multi_pod=False):
     return jax.tree_util.tree_map_with_path(leaf, sampler_sds)
 
 
+def seed_axes_for(mesh, *, multi_pod=None):
+    """Which mesh axes the leading seed dimension rides on ``mesh``: the
+    dedicated ``'seed'`` axis when the mesh has one
+    (``launch/mesh.make_seed_mesh``), else the client axes — the PR 4
+    placement where seeds displace the per-seed client sharding.  Feed the
+    result straight to ``seed_pspecs(..., seed_axes=...)``."""
+    ax = _axis_sizes(mesh)
+    if "seed" in ax:
+        return "seed"
+    mp = ("pod" in ax) if multi_pod is None else multi_pod
+    return _client_axes(ax, mp)
+
+
 def seed_pspecs(spec_tree, *, seed_axes=None):
     """Prepend a leading seed axis to every ``PartitionSpec`` in a spec
     tree — the placement story of the S-batched multi-seed executor
@@ -244,7 +260,7 @@ def batch_pspecs(mesh, batches_shape, *, multi_pod=False, mode="tp"):
     the within-client batch dim additionally takes the 'model' axis."""
     ax = _axis_sizes(mesh)
     client_axes = _client_axes(ax, multi_pod)
-    md = ax.get("model", 1)
+    md = ax.get("model", 0)
 
     def f(leaf):
         rest = [None] * (len(leaf.shape) - 1)

@@ -1,0 +1,69 @@
+"""Edge cases of the seed-aggregation reporting layer
+(launch/analysis.py): S=1 degenerate bands, ragged-history rejection, and
+the results table's JSON round-trip."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch import analysis
+
+
+def test_aggregate_single_seed_std_is_zero_not_nan():
+    """S=1 is a legal grid run (quick sweeps): the ±band must collapse to
+    0 (population std), never NaN, and the aggregate must stay
+    strict-JSON-serializable."""
+    h = [[{"t": 0, "loss": 2.0}, {"t": 1, "loss": 1.0, "eval_acc": 0.5}]]
+    agg = analysis.aggregate_seed_histories(h)
+    assert agg["seeds"] == 1
+    assert agg["metrics"]["loss"]["std"] == [0.0, 0.0]
+    assert agg["metrics"]["loss"]["mean"] == [2.0, 1.0]
+    assert agg["metrics"]["eval_acc"]["std"][1] == 0.0
+    json.loads(json.dumps(agg, allow_nan=False))
+    summ = analysis.seed_summary([{"eval_acc": 0.5}])
+    assert summ["eval_acc"]["std"] == 0.0 and summ["eval_acc"]["seeds"] == 1
+
+
+def test_aggregate_ragged_histories_raise_clearly():
+    """Unequal per-seed lengths mean a truncated/mismatched run —
+    averaging over a shrinking seed population would misrepresent the
+    ±std band, so it must raise with the offending lengths named."""
+    good = [{"t": 0, "loss": 1.0}, {"t": 1, "loss": 0.5}]
+    short = [{"t": 0, "loss": 2.0}]
+    with pytest.raises(ValueError, match=r"ragged.*\[1, 2\]"):
+        analysis.aggregate_seed_histories([good, short])
+    # empty histories still rejected up front
+    with pytest.raises(AssertionError):
+        analysis.aggregate_seed_histories([good, []])
+    with pytest.raises(AssertionError):
+        analysis.aggregate_seed_histories([])
+
+
+def test_results_table_round_trips_through_results_json(tmp_path):
+    """write_results_table's sibling JSON is the machine-readable source
+    for replotting: loading it and re-writing the table must reproduce
+    the markdown byte-for-byte (no lossy cells)."""
+    rows = [
+        dict(scenario="fedawe/sine", strategy="fedawe", dynamics="sine",
+             sampling="uniform", seeds=4, rounds=8,
+             eval_acc="0.6000±0.1000", last_loss="1.2000±0.0100"),
+        dict(scenario="mifa/markov", strategy="mifa", dynamics="markov",
+             sampling="epoch", seeds=2, rounds=8,
+             eval_acc="0.5000±0.0000"),
+    ]
+    out_dir = tmp_path / "results"
+    path = analysis.write_results_table(rows,
+                                        str(out_dir / "table.md"))
+    assert os.path.exists(path)
+    loaded = json.load(open(str(out_dir / "table.json")))
+    assert loaded == rows
+    # re-write from the loaded JSON: identical markdown
+    path2 = analysis.write_results_table(loaded,
+                                         str(out_dir / "table2.md"))
+    assert open(path).read() == open(path2).read()
+    # missing cells render empty, not crash — and the header is stable
+    text = open(path).read()
+    assert "| scenario | strategy | dynamics | sampling | seeds | " \
+           "rounds |" in text
+    assert "| mifa/markov" in text and "|  |" in text

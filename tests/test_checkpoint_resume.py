@@ -1,0 +1,189 @@
+"""Checkpoint-resume parity, end to end through ``checkpointing/io.py``.
+
+PR 3 made resumed states key the sample stream by the GLOBAL round counter
+(``fold_in(data_key, state.t)``) instead of replaying from round 0; these
+tests guard that fix end to end: a run saved at a chunk boundary
+(``save_run_state``: the ``FLState`` AND the carried ``SamplerState``),
+restored (``restore_run_state``, structure-checked against fresh
+templates), and finished must produce the final ``FLState``, final
+``SamplerState`` and per-round metrics BIT-IDENTICAL to the uninterrupted
+run — multi-seed (mid-grid, seed-stacked carry) and single-seed (host-loop
+finish, the train-CLI shape) both.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import restore_run_state, save_run_state
+from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                        make_round_fn, make_seeds_chunk_fn, run_rounds)
+from repro.data import device_store, make_device_sampler
+from repro.launch.experiments import build_seed_batch, run_seed_rounds
+
+M, S_, B, DIM = 6, 3, 4, 4
+SEEDS = 3
+
+
+def BASE_RNG():
+    # fresh array per use: the donated executors consume FLState.rng,
+    # which init_fl_state aliases from this key
+    return jax.random.PRNGKey(3)
+
+
+def BASE_DATA():
+    return jax.random.PRNGKey(17)
+
+
+def _problem(sampling="epoch"):
+    rng = np.random.default_rng(0)
+    n = 48
+    arrays = dict(x=rng.normal(size=(n, DIM)).astype(np.float32),
+                  y=rng.normal(size=(n, DIM)).astype(np.float32))
+    idx = [np.arange(i, n, M) for i in range(M)]
+    init_fn, sample_fn = make_device_sampler(M, S_, B, mode=sampling)
+    return device_store(arrays, idx), init_fn, sample_fn
+
+
+def _loss_fn(tr, frozen, batch, rng):
+    return (0.5 * jnp.mean((batch["x"] @ tr["w"] - batch["y"]) ** 2)
+            + jnp.sum(tr["b"] ** 2))
+
+
+def _tr0():
+    return {"w": jnp.ones((DIM, DIM)) * 0.1, "b": jnp.zeros((7,))}
+
+
+def _cfg_rf(flat=True, sampling="epoch", kind="sine"):
+    store, init_fn, sample_fn = _problem(sampling)
+    cfg = FLConfig(m=M, s=S_, eta_l=0.03, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0, flat_state=flat)
+    av = AvailabilityCfg(kind=kind, gamma=0.3)
+    rf = make_round_fn(cfg, _loss_fn, {}, av, jnp.full((M,), 0.6))
+    return cfg, rf, store, init_fn, sample_fn
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("sampling", ["epoch", "uniform"])
+def test_multi_seed_resume_bit_identical(tmp_path, sampling):
+    """Mid-grid resume, end to end through the DRIVER's checkpoint hook:
+    ``run_seed_rounds(ckpt_fn=..., ckpt_every=4)`` saves the seed-stacked
+    carry at the t=4 chunk boundary; restoring into fresh templates and
+    finishing yields final FLState, SamplerState and the resumed rounds'
+    metrics bit-identical to the uninterrupted multi-seed run."""
+    K, T = 2, 6
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf(sampling=sampling)
+    chunk_fn = make_seeds_chunk_fn(cfg, rf, sample_fn, K, SEEDS)
+    path = str(tmp_path / "mid_grid")
+
+    def run(states, sss, dks, T, **kw):
+        return run_seed_rounds(states, chunk_fn, T, K, sampler_states=sss,
+                               store=store, data_keys=dks, n_seeds=SEEDS,
+                               **kw)
+
+    # uninterrupted run, checkpointing mid-grid at the t=4 boundary
+    st_a, ss_a, dks = build_seed_batch(cfg, _tr0(), BASE_RNG(),
+                                       BASE_DATA(), init_fn, store, SEEDS)
+    st_a, hist_a = run(
+        st_a, ss_a, dks, T,
+        ckpt_fn=lambda st, t, ss: save_run_state(path, st, ss, round_t=t),
+        ckpt_every=4)
+
+    # fresh templates (only structure/shape/dtype matter for the restore)
+    tmpl_st, tmpl_ss, _ = build_seed_batch(cfg, _tr0(), BASE_RNG(),
+                                           BASE_DATA(), init_fn, store,
+                                           SEEDS)
+    st_r, ss_r = restore_run_state(path, tmpl_st, tmpl_ss)
+    np.testing.assert_array_equal(np.asarray(st_r.t),
+                                  np.full((SEEDS,), 4, np.int32))
+    # finish: ONE more chunk to T, bit-identical to the uninterrupted run
+    final_ss = [None]
+
+    def grab(st, t, ss):
+        final_ss[0] = ss
+
+    st_r, hist_r = run(st_r, ss_r, dks, T - 4, ckpt_fn=grab, ckpt_every=2)
+
+    _assert_trees_equal(st_a._replace(spec=None), st_r._replace(spec=None))
+    for j in range(SEEDS):
+        assert len(hist_r[j]) == T - 4
+        for i, rec_r in enumerate(hist_r[j]):
+            rec_a = hist_a[j][4 + i]
+            for key in set(rec_a) - {"t"}:
+                assert rec_a[key] == rec_r[key], (j, i, key)
+
+    # the resumed sampler carry matches an uninterrupted run's carry: the
+    # stream continues (epoch cursors/permutations), never replays
+    st_c, ss_c, dks_c = build_seed_batch(cfg, _tr0(), BASE_RNG(),
+                                         BASE_DATA(), init_fn, store,
+                                         SEEDS)
+    carry_c = [None]
+    run(st_c, ss_c, dks_c, T,
+        ckpt_fn=lambda st, t, ss: carry_c.__setitem__(0, ss),
+        ckpt_every=T)
+    _assert_trees_equal(carry_c[0], final_ss[0])
+
+
+def test_single_seed_resume_host_loop_finish(tmp_path):
+    """Single-seed, train-CLI-shaped resume: chunked run saved at a chunk
+    boundary, restored, FINISHED BY THE HOST LOOP — the host loop keys
+    the stream by the global round counter (``t0 = state.t``), so the
+    restored run must land bit-identical to the uninterrupted chunked
+    run (host/chunked parity is pinned elsewhere; this guards the resume
+    keying through the checkpoint round-trip)."""
+    K, T = 2, 4
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf()
+    st0 = init_fl_state(BASE_RNG(), cfg, _tr0())
+    ss0 = init_fn(store, BASE_DATA())
+    st_a, hist_a = run_rounds(st0, rf, None, T, chunk_rounds=K,
+                              sample_fn=sample_fn, store=store,
+                              data_key=BASE_DATA(), sampler_state=ss0)
+
+    # interrupted leg: the 3-arg ckpt hook receives the CARRIED sampler
+    # state (the donated carry is consumed by the next dispatch — the
+    # hook is the only place both halves of the run state are in hand)
+    st_b = init_fl_state(BASE_RNG(), cfg, _tr0())
+    ss_b = init_fn(store, BASE_DATA())
+    st_b, hist_b = run_rounds(
+        st_b, rf, None, 2, chunk_rounds=K, sample_fn=sample_fn,
+        store=store, data_key=BASE_DATA(), sampler_state=ss_b,
+        ckpt_fn=lambda st, t, ss: save_run_state(
+            str(tmp_path / "single"), st, ss, round_t=t),
+        ckpt_every=2)
+
+    tmpl_st = init_fl_state(BASE_RNG(), cfg, _tr0())
+    tmpl_ss = init_fn(store, BASE_DATA())
+    st_r, ss_r = restore_run_state(str(tmp_path / "single"), tmpl_st,
+                                   tmpl_ss)
+    assert int(st_r.t) == 2
+    st_r, hist_r = run_rounds(st_r, rf, None, T - 2, sample_fn=sample_fn,
+                              store=store, data_key=BASE_DATA(),
+                              sampler_state=ss_r)
+
+    _assert_trees_equal(st_a._replace(spec=None), st_r._replace(spec=None))
+    assert len(hist_a) == T and len(hist_b) == 2 and len(hist_r) == T - 2
+    for i, rec_r in enumerate(hist_r):
+        rec_a = hist_a[2 + i]
+        for k in set(rec_a) - {"t"}:
+            assert rec_a[k] == rec_r[k], (i, k, rec_a, rec_r)
+
+
+def test_restore_rejects_wrong_shapes(tmp_path):
+    """A checkpoint restored against a template of different shapes must
+    fail loudly (structure-checked manifest), not silently broadcast."""
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf()
+    st = init_fl_state(BASE_RNG(), cfg, _tr0())
+    ss = init_fn(store, BASE_DATA())
+    save_run_state(str(tmp_path / "ck"), st, ss)
+    bad_cfg = FLConfig(m=M + 2, s=S_, eta_l=0.03, strategy="fedawe",
+                       lr_schedule=False, grad_clip=0.0, flat_state=True)
+    bad_tmpl = init_fl_state(BASE_RNG(), bad_cfg, _tr0())
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_run_state(str(tmp_path / "ck"), bad_tmpl, ss)

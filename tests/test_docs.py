@@ -116,6 +116,35 @@ def test_readme_scenario_names_registered():
         assert name in GRIDS, f"README --grid {name} unregistered"
 
 
+def test_readme_list_command_runs():
+    """The README's cheap, side-effect-free experiments command
+    (``--list``) actually executes and prints registered cells/grids."""
+    cmds = [c for c in _shell_commands() if "--list" in c]
+    assert cmds, "README lost its --list quickstart command"
+    r = _run(cmds[0], timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "fedawe/sine" in r.stdout and "grid speedup-sine" in r.stdout
+
+
+def test_readme_bench_dry_gate_runs():
+    """The README's ``--check --dry`` schema gate executes against the
+    committed BENCH_kernels.json (no measurement, CI-safe)."""
+    cmds = [c for c in _shell_commands() if "--dry" in c]
+    assert cmds, "README lost its bench --check --dry command"
+    r = _run(cmds[0], timeout=300)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "schema gate OK" in r.stdout
+
+
+def test_readme_shows_seed_axis_flags():
+    """The seed-axis production features stay documented: the README must
+    keep showing --packed / --replicate and the +mesh dry-run variant."""
+    text = open(README).read()
+    for needle in ("--packed", "--replicate", "seeds4+mesh",
+                   "chunked_seeds_mesh", "--check --dry"):
+        assert needle in text, f"README lost {needle}"
+
+
 @pytest.mark.slow
 def test_readme_dryrun_command_runs(tmp_path):
     """Smoke-run the README's mini dry-run command (rewritten to a tmp

@@ -84,6 +84,26 @@ def test_mini_dryrun_flat_chunk_seeds_train(tmp_path):
 
 
 @pytest.mark.slow
+def test_mini_dryrun_flat_chunk_seeds_mesh_train(tmp_path):
+    """flat_chunk + seeds + the DEDICATED ('seed','pod','data') mesh:
+    make_seed_mesh auto-sizes the seed axis (here 4 devices, S=4,
+    pods=2 -> (2, 2, 1)), the inner [m, N] client placement over
+    ('pod','data') survives under the seed axis (seed_pspecs with
+    seed_axes='seed'), and the executor still lowers, compiles, donates
+    and emits the gossip all-reduce."""
+    out = str(tmp_path / "dry.json")
+    r = _run_dryrun(["--arch", "tiny", "--shape", "train_4k",
+                     "--mesh", "multi", "--test-mesh",
+                     "--variant", "flat_chunk2+seeds4+mesh", "--out", out])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(out))[0]
+    assert rec["ok"] and rec["chunk_rounds"] == 2 and rec["seeds"] == 4
+    assert rec["mesh_axes"] == {"seed": 2, "pod": 2, "data": 1}
+    assert rec["collectives"]["all-reduce"] > 0
+    assert rec["memory"]["alias_size_in_bytes"] > 0
+
+
+@pytest.mark.slow
 def test_mini_dryrun_decode_multi_pod(tmp_path):
     out = str(tmp_path / "dry.json")
     r = _run_dryrun(["--arch", "tiny", "--shape", "decode_32k",

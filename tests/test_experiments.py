@@ -306,6 +306,40 @@ def test_run_scenario_smoke():
 
 
 @pytest.mark.slow
+def test_experiments_cli_packed_matches_unpacked(tmp_path):
+    """--packed through the real CLI: same cells, one packed dispatch
+    stream per shape group, per-cell results table identical to the
+    unpacked CLI run (the engine-level bit-parity of packing is pinned in
+    test_seed_mesh.py)."""
+    import json
+
+    from repro.launch.experiments import main
+
+    common = ["--scenario", "fedawe/sine", "--scenario", "fedawe/markov",
+              "--seeds", "2", "--rounds", "5", "--chunk-rounds", "2",
+              "--m", "6", "--s", "2", "--batch", "4", "--n-samples",
+              "600", "--no-save"]
+    rows_packed = main(common + ["--packed"])
+    rows_plain = main(common)
+    assert json.dumps(rows_packed) == json.dumps(rows_plain)
+
+
+@pytest.mark.slow
+def test_experiments_cli_seed_mesh_and_full_replication(tmp_path):
+    """--seed-mesh (live sharded executor jit) and --replicate full (per-
+    seed model re-init) both run end to end through the CLI; on this
+    1-device host the seed mesh is degenerate but the sharded jit is
+    real."""
+    from repro.launch.experiments import main
+
+    rows = main(["--scenario", "fedawe/sine", "--seeds", "2", "--rounds",
+                 "4", "--chunk-rounds", "2", "--m", "6", "--s", "2",
+                 "--batch", "4", "--n-samples", "600", "--no-save",
+                 "--seed-mesh", "--replicate", "full"])
+    assert len(rows) == 1 and rows[0]["scenario"] == "fedawe/sine"
+
+
+@pytest.mark.slow
 def test_train_cli_multi_seed_matches_single_seed_runs(tmp_path):
     """--seeds 4 through the train CLI: the mean±std final lands, --out
     records one full finite history per seed plus the aggregate curves

@@ -1,0 +1,150 @@
+"""Seed-replication independence properties (hypothesis, via the
+``tests/_hyp.py`` shim — the randomized sweeps skip cleanly when
+hypothesis is not installed; the deterministic pinned cases always run).
+
+Properties:
+  * permutation equivariance — replicates are INDEPENDENT, so permuting
+    the seed order (``build_seed_batch(seed_ids=perm)``) and re-running
+    yields the identically permuted per-seed states and histories, bit
+    for bit, for random S, strategy, availability kind and template mode.
+  * shared-template bit-compat — the default ``template_fn=None`` path
+    reproduces the original (PR 4) ``build_seed_batch`` construction
+    exactly: same stacked states, same ``seed_data_keys`` keys, same
+    stacked sampler states.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hyp import given, settings, st
+from repro.core import (AvailabilityCfg, FLConfig, index_seed,
+                        init_fl_state, make_round_fn, stack_seeds)
+from repro.data import (device_store, init_seed_sampler_states,
+                        make_device_sampler, seed_data_keys)
+from repro.launch.experiments import (build_seed_batch, build_seed_executor,
+                                      run_seed_rounds)
+
+M, S_, B, DIM = 6, 2, 4, 4
+
+
+def _problem(sampling):
+    rng = np.random.default_rng(0)
+    n = 48
+    arrays = dict(x=rng.normal(size=(n, DIM)).astype(np.float32),
+                  y=rng.normal(size=(n, DIM)).astype(np.float32))
+    idx = [np.arange(i, n, M) for i in range(M)]
+    init_fn, sample_fn = make_device_sampler(M, S_, B, mode=sampling)
+    return device_store(arrays, idx), init_fn, sample_fn
+
+
+def _loss_fn(tr, frozen, batch, rng):
+    return (0.5 * jnp.mean((batch["x"] @ tr["w"] - batch["y"]) ** 2)
+            + jnp.sum(tr["b"] ** 2))
+
+
+def _tr0():
+    return {"w": jnp.ones((DIM, DIM)) * 0.1, "b": jnp.zeros((7,))}
+
+
+def _template_fn(key):
+    return {"w": jax.random.normal(key, (DIM, DIM)) * 0.1,
+            "b": jnp.zeros((7,))}
+
+
+def _run(seed_ids, n_seeds, strategy, kind, sampling, template_fn, T=4,
+         K=2):
+    store, init_fn, sample_fn = _problem(sampling)
+    cfg = FLConfig(m=M, s=S_, eta_l=0.03, strategy=strategy,
+                   lr_schedule=False, grad_clip=0.0, flat_state=True)
+    rf = make_round_fn(cfg, _loss_fn, {}, AvailabilityCfg(kind=kind,
+                                                          gamma=0.3),
+                       jnp.full((M,), 0.6))
+    states, sss, dks = build_seed_batch(
+        cfg, _tr0(), jax.random.PRNGKey(0), jax.random.PRNGKey(42),
+        init_fn, store, n_seeds, template_fn=template_fn,
+        seed_ids=seed_ids)
+    builder = build_seed_executor(cfg, rf, sample_fn, n_seeds)
+    states, hists = run_seed_rounds(
+        states, builder(K), T, K, sampler_states=sss, store=store,
+        data_keys=dks, n_seeds=n_seeds, make_tail_fn=builder)
+    return states, hists
+
+
+def _assert_permuted(base, permuted, perm):
+    st_b, h_b = base
+    st_p, h_p = permuted
+    for i, j in enumerate(perm):
+        a = index_seed(st_b, j)
+        b = index_seed(st_p, i)
+        for x, y in zip(jax.tree.leaves(a._replace(spec=None)),
+                        jax.tree.leaves(b._replace(spec=None))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert h_b[j] == h_p[i], (i, j)
+
+
+def test_seed_permutation_equivariance_pinned():
+    """Deterministic pinned case (always runs): reversing the seed order
+    reverses the per-seed states and histories exactly."""
+    S = 3
+    perm = [2, 0, 1]
+    base = _run(None, S, "fedawe", "sine", "epoch", None)
+    permuted = _run(perm, S, "fedawe", "sine", "epoch", None)
+    _assert_permuted(base, permuted, perm)
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_seed_permutation_equivariance_random(data):
+    """Randomized sweep: random S, strategy, availability kind, sampling
+    mode, template mode and permutation — permuting the seed order
+    permutes the per-seed results identically (independence)."""
+    S = data.draw(st.integers(min_value=2, max_value=4), label="S")
+    strategy = data.draw(st.sampled_from(
+        ["fedawe", "fedavg_active", "fedau", "mifa"]), label="strategy")
+    kind = data.draw(st.sampled_from(
+        ["stationary", "sine", "markov"]), label="kind")
+    sampling = data.draw(st.sampled_from(["uniform", "epoch"]),
+                         label="sampling")
+    template_fn = data.draw(st.sampled_from([None, _template_fn]),
+                            label="template_fn")
+    perm = data.draw(st.permutations(list(range(S))), label="perm")
+    base = _run(None, S, strategy, kind, sampling, template_fn, T=3, K=2)
+    permuted = _run(list(perm), S, strategy, kind, sampling, template_fn,
+                    T=3, K=2)
+    _assert_permuted(base, permuted, list(perm))
+
+
+def test_shared_template_flag_bit_compatible_with_pr4_construction():
+    """``template_fn=None`` must rebuild EXACTLY the original stacked
+    carry: per-seed ``init_fl_state(fold_in(rng, j), cfg, template)``
+    tree-stacked, ``seed_data_keys`` keys, per-seed sampler states."""
+    store, init_fn, _ = _problem("epoch")
+    cfg = FLConfig(m=M, s=S_, eta_l=0.03, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0, flat_state=True)
+    rng, dkey, S = jax.random.PRNGKey(0), jax.random.PRNGKey(42), 3
+    states, sss, dks = build_seed_batch(cfg, _tr0(), rng, dkey, init_fn,
+                                        store, S)
+    ref_states = stack_seeds([
+        init_fl_state(jax.random.fold_in(rng, j), cfg, _tr0())
+        for j in range(S)])
+    ref_dks = seed_data_keys(dkey, S)
+    ref_sss = init_seed_sampler_states(init_fn, store, ref_dks)
+    np.testing.assert_array_equal(np.asarray(dks), np.asarray(ref_dks))
+    for a, b in zip(jax.tree.leaves(ref_states._replace(spec=None)),
+                    jax.tree.leaves(states._replace(spec=None))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(ref_sss), jax.tree.leaves(sss)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_seed_ids_validates_length():
+    store, init_fn, _ = _problem("uniform")
+    cfg = FLConfig(m=M, s=S_, eta_l=0.03, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0, flat_state=True)
+    try:
+        build_seed_batch(cfg, _tr0(), jax.random.PRNGKey(0),
+                         jax.random.PRNGKey(1), init_fn, store, 3,
+                         seed_ids=[0, 1])
+    except AssertionError:
+        return
+    raise AssertionError("mismatched seed_ids length must be rejected")

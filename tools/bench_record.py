@@ -14,12 +14,18 @@ populated:
 measurement is compared row-by-row against the committed baseline (or
 ``--baseline PATH``) and the process exits non-zero when any row's
 us_per_call regressed by more than ``--threshold`` (default 25%) — so the
-rounds_per_sec/{host_loop,chunked,chunked_epoch} executor numbers and the
-kernel micro-benches are guarded.  Thresholds are ratio-based against the
-committed number and the bench itself is min-of-reps, because container
-wall-clock is 2-3x noisy — never gate on absolute times:
+rounds_per_sec/{host_loop,chunked,chunked_epoch,chunked_seeds[_mesh]}
+executor numbers and the kernel micro-benches are guarded.  Thresholds are
+ratio-based against the committed number and the bench itself is
+min-of-reps, because container wall-clock is 2-3x noisy — never gate on
+absolute times:
 
     python tools/bench_record.py --check
+
+``--check --dry`` validates the committed baseline's SCHEMA without
+running the bench (for CI boxes where the measurement itself would be
+noise): every row must be ``{"us_per_call": number > 0, "derived":
+number}`` and the executor trajectory rows must be present.
 """
 from __future__ import annotations
 
@@ -75,6 +81,54 @@ def run_and_record(out_path=None):
     return rows
 
 
+#: rows the committed trajectory must always carry (--check --dry)
+REQUIRED_ROWS = (
+    "rounds_per_sec/host_loop",
+    "rounds_per_sec/chunked",
+    "rounds_per_sec/chunked_epoch",
+    "rounds_per_sec/chunked_seeds",
+    "rounds_per_sec/chunked_seeds_seq",
+    "rounds_per_sec/chunked_seeds_mesh",
+)
+
+
+def validate(baseline_path=None):
+    """Schema-check the committed baseline without measuring anything.
+
+    Returns a list of problem strings (empty = valid): the file must be a
+    non-empty JSON object of ``name -> {"us_per_call": number > 0,
+    "derived": number}`` rows and must contain every ``REQUIRED_ROWS``
+    entry — a committed trajectory holding an ERROR string or missing an
+    executor row is a broken gate, caught here before any PR relies on
+    ``--check`` passing against it."""
+    baseline_path = baseline_path or DEFAULT_OUT
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"cannot read baseline {baseline_path}: {e}"]
+    problems = []
+    if not isinstance(base, dict) or not base:
+        return [f"{baseline_path}: expected a non-empty JSON object"]
+    for name, row in sorted(base.items()):
+        if not isinstance(row, dict) or \
+                set(row) != {"us_per_call", "derived"}:
+            problems.append(f"{name}: expected exactly "
+                            "{us_per_call, derived} keys")
+            continue
+        us = row["us_per_call"]
+        if not isinstance(us, (int, float)) or us <= 0:
+            problems.append(f"{name}: us_per_call must be a positive "
+                            f"number, got {us!r}")
+        if not isinstance(row["derived"], (int, float)):
+            problems.append(f"{name}: derived must be a number, got "
+                            f"{row['derived']!r}")
+    for name in REQUIRED_ROWS:
+        if name not in base:
+            problems.append(f"missing required row {name}")
+    return problems
+
+
 def check(baseline_path=None, threshold=0.25, rows=None):
     """Compare a fresh measurement against the committed baseline.
 
@@ -120,7 +174,22 @@ def main(argv=None):
                          "committed BENCH_kernels.json)")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed us_per_call growth fraction")
+    ap.add_argument("--dry", action="store_true",
+                    help="with --check: validate the baseline's schema "
+                         "(row shape + required executor rows) without "
+                         "running the bench")
     args = ap.parse_args(argv)
+    if args.dry and not args.check:
+        raise SystemExit("--dry only makes sense with --check")
+    if args.check and args.dry:
+        problems = validate(args.baseline)
+        if problems:
+            print("SCHEMA GATE FAILED:")
+            for p in problems:
+                print(f"  {p}")
+            raise SystemExit(1)
+        print("schema gate OK")
+        return
     if args.check:
         regressed = check(args.baseline, args.threshold)
         if regressed:
