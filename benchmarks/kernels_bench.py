@@ -93,14 +93,17 @@ def _bench_round_executor(quick):
     multi-seed grid would otherwise cost, measured explicitly as the
     chunked_seeds_seq row with the same per-seed init and fold_in keys),
     plus the S-batched executor with the live ('seed','pod','data')-mesh
-    shardings threaded through its jit (chunked_seeds_mesh).
+    shardings threaded through its jit (chunked_seeds_mesh), plus the
+    chunked executor with fault injection live (chunked_faults: the
+    mid-round dropout draw + sanitization norm scan of core/faults.py in
+    every round — its cost shows up directly against the chunked row).
     us_per_call is per wall-clock ROUND; derived is rounds/sec — except
     the chunked_seeds[_mesh] rows, whose derived is the speedup of the
     one S-batched dispatch stream over the S sequential runs
     (chunked_seeds_seq time / row time; > 1 = batching the seed axis
     wins)."""
-    from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
-                            make_round_fn, run_rounds)
+    from repro.core import (AvailabilityCfg, FaultCfg, FLConfig,
+                            init_fl_state, make_round_fn, run_rounds)
     from repro.data import FederatedDataset, make_device_sampler
 
     # many clients, tiny model: the regime the chunked executor targets —
@@ -132,12 +135,13 @@ def _bench_round_executor(quick):
     base_p = jnp.full((m,), 0.6, jnp.float32)
     data_key = jax.random.PRNGKey(7)
 
-    def make_exec(flat, chunked, sampling="uniform"):
+    def make_exec(flat, chunked, sampling="uniform", fault_cfg=None):
         from repro.core import make_chunk_fn
 
         cfg = FLConfig(m=m, s=s, eta_l=0.05, strategy="fedawe",
                        lr_schedule=False, grad_clip=0.0, flat_state=flat)
-        rf = make_round_fn(cfg, loss_fn, {}, av, base_p)
+        rf = make_round_fn(cfg, loss_fn, {}, av, base_p,
+                           fault_cfg=fault_cfg)
         # every bench client holds exactly n // m samples; the static
         # min_count hint keeps the epoch mode's per-round reshuffle stack
         # at its true size instead of the 1-sample worst case
@@ -240,6 +244,11 @@ def _bench_round_executor(quick):
         # the same S-batched executor with live ('seed','pod','data')-mesh
         # shardings in its jit — placement must not cost dispatch time
         "chunked_seeds_mesh": seeds_mesh,
+        # fault injection live: mid-round dropout + sanitization norm
+        # scan fused into the chunked scan body (no trace state needed)
+        "chunked_faults": make_exec(
+            True, chunked=True,
+            fault_cfg=FaultCfg(upload_survival=0.9, sanitize=True)),
     }
     for once in execs.values():
         once(K)                        # warmup: compile round/chunk

@@ -17,5 +17,12 @@ from repro.core.engine import (  # noqa: F401
     run_rounds,
     stack_seeds,
 )
+from repro.core.faults import (  # noqa: F401
+    FaultCfg,
+    adversarial_probs_from_nu,
+    clusters_from_nu,
+    diurnal_trace,
+    init_fault_state,
+)
 from repro.core.flatten import FlatSpec  # noqa: F401
 from repro.core.strategies import REGISTRY, get_strategy  # noqa: F401

@@ -145,9 +145,22 @@ def sample_active(rng, cfg: AvailabilityCfg, base_p, t, markov_state=None):
 
 
 def availability_trace(rng, cfg: AvailabilityCfg, base_p, T):
-    """Simulate T rounds; returns mask [T, m] (host-side convenience)."""
+    """Simulate T rounds; returns mask [T, m] (host-side convenience).
+
+    For ``kind="markov"`` the chain state is initialized from a
+    STATIONARY-MARGINAL draw keyed off the trace rng — starting every
+    client "on" (the old all-ones init) biases short-horizon traces
+    toward availability, since the transient toward the stationary
+    occupancy ``up / (up + down)`` takes O(1 / (up + down)) rounds.
+    Non-markov kinds are memoryless and keep their exact previous
+    stream (their rng is not split)."""
     m = base_p.shape[0]
-    state = jnp.ones((m,), jnp.float32)
+    if cfg.kind == "markov":
+        rng, k0 = jax.random.split(rng)
+        pi = probs_at(cfg, base_p, 0)   # the chain's stationary marginal
+        state = (jax.random.uniform(k0, (m,)) < pi).astype(jnp.float32)
+    else:
+        state = jnp.ones((m,), jnp.float32)
 
     def step(carry, t):
         st, key = carry

@@ -104,14 +104,20 @@ class FLState(NamedTuple):
     markov: jnp.ndarray         # availability markov state [m]
     rng: jnp.ndarray
     spec: Any = None            # FlatSpec (static treedef metadata) or None
+    fault: Any = None           # fault-injection carry (core/faults.py):
+                                # [T, m] trace / [m] cluster labels, or None
 
 
 def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
-                  clients_sharding=None) -> FLState:
+                  clients_sharding=None, fault=None) -> FLState:
     """``clients_sharding`` (a ``jax.sharding.Sharding``) places every
     ``[m, N]`` buffer — the client stack and model-shaped strategy memory —
     on its final sharding at birth (compiled broadcast straight into the
-    sharded layout) instead of materializing replicated and resharding."""
+    sharded layout) instead of materializing replicated and resharding.
+    ``fault`` is the fault-injection carry from
+    ``faults.init_fault_state`` (a ``[T, m]`` replay trace and/or ``[m]``
+    cluster labels, or None) — read-only state that rides the donated
+    scan carry like the markov state does."""
     strat = get_strategy(cfg.strategy)
     tau = jnp.full((cfg.m,), -1, jnp.int32)
     markov = jnp.ones((cfg.m,), jnp.float32)
@@ -147,7 +153,7 @@ def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
         else:
             extra = strat.init_extra(g, cfg.m)
         return FLState(g, clients, tau, jnp.zeros((), jnp.int32), extra,
-                       markov, rng, spec)
+                       markov, rng, spec, fault)
     clients = tu.tree_broadcast(trainable_template, cfg.m)
     extra = strat.init_extra(trainable_template, cfg.m)
     return FLState(
@@ -161,6 +167,7 @@ def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
         extra=extra,
         markov=markov,
         rng=rng,
+        fault=fault,
     )
 
 
@@ -214,7 +221,7 @@ def local_sgd(trainable, frozen, batches, rng, *, s, eta_l, loss_fn,
 
 
 def make_round_fn(cfg: FLConfig, loss_fn: Callable, frozen: Any,
-                  avail_cfg: AvailabilityCfg, base_p):
+                  avail_cfg: AvailabilityCfg, base_p, fault_cfg=None):
     """Build the jittable round function (frozen params closed over —
     fine when frozen is empty/small; the pod tier uses
     make_round_fn_with_frozen so FSDP-sharded bases stay runtime args).
@@ -222,7 +229,8 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, frozen: Any,
     loss_fn(trainable, frozen, batch, rng) -> scalar.
     Returned fn: (state, batches[m, s, ...]) -> (state, metrics).
     """
-    inner = make_round_fn_with_frozen(cfg, loss_fn, avail_cfg, base_p)
+    inner = make_round_fn_with_frozen(cfg, loss_fn, avail_cfg, base_p,
+                                      fault_cfg=fault_cfg)
 
     def round_fn(state: FLState, batches):
         return inner(state, frozen, batches)
@@ -231,16 +239,36 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, frozen: Any,
 
 
 def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
-                              avail_cfg: AvailabilityCfg, base_p):
+                              avail_cfg: AvailabilityCfg, base_p,
+                              fault_cfg=None):
     """Variant taking frozen params as a runtime argument:
-    (state, frozen, batches) -> (state, metrics)."""
+    (state, frozen, batches) -> (state, metrics).
+
+    ``fault_cfg`` (a ``faults.FaultCfg``) splits the availability mask in
+    two: ``mask`` (compute — who runs local SGD; trace replay and cluster
+    blackouts apply here) and ``mask_upload`` (who actually delivers —
+    the mid-round survival draw plus update sanitization).  Only
+    delivering clients contribute to aggregation, update client state /
+    τ, or advance participation estimates; the metrics dict grows
+    ``n_dropped`` / ``n_rejected`` per round.  ``fault_cfg=None`` is
+    byte-identical to the fault-free engine (same rng split count, same
+    metrics keys)."""
     strat = get_strategy(cfg.strategy)
+    if fault_cfg is not None:
+        from repro.core import faults as _faults
 
     def round_fn(state: FLState, frozen, batches):
-        rng, k_av, k_loc = jax.random.split(state.rng, 3)
+        if fault_cfg is None:
+            rng, k_av, k_loc = jax.random.split(state.rng, 3)
+            k_up = None
+        else:
+            rng, k_av, k_loc, k_up = jax.random.split(state.rng, 4)
         mask, markov = sample_active(k_av, avail_cfg, base_p, state.t,
                                      state.markov)
         probs_t = probs_at(avail_cfg, base_p, state.t)
+        if fault_cfg is not None:
+            mask = _faults.compute_mask(fault_cfg, state.fault, mask,
+                                        state.t)
 
         eta_l = cfg.eta_l
         if cfg.lr_schedule:
@@ -261,10 +289,22 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
 
             x_end, losses = jax.vmap(local)(start, batches, loc_rngs)
             G = start - x_end
+            mask_upload = None
+            if fault_cfg is not None:
+                mask_upload, n_dropped, n_rejected = _faults.upload_mask(
+                    fault_cfg, k_up, mask, G)
+                if fault_cfg.sanitize:
+                    # scrub demoted rows: a 0-weighted NaN still poisons a
+                    # w·G reduction (0 * NaN = NaN), so rejected clients'
+                    # rows must hold finite values, not just zero weight
+                    keep = mask_upload[:, None] > 0
+                    x_end = jnp.where(keep, x_end, start)
+                    G = jnp.where(keep, G, 0.0)
             new_global, new_clients, new_tau, new_extra = strat.aggregate_flat(
                 global_flat=state.global_tr, clients_flat=start, x_end=x_end,
                 G=G, mask=mask, t=state.t, tau=state.tau, probs=probs_t,
-                extra=state.extra, eta_g=cfg.eta_g, use_kernel=cfg.use_kernel)
+                extra=state.extra, eta_g=cfg.eta_g, use_kernel=cfg.use_kernel,
+                mask_upload=mask_upload)
         else:
             start = state.clients_tr if strat.stateful_clients else \
                 tu.tree_broadcast(state.global_tr, cfg.m)
@@ -276,17 +316,48 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
             )(start, batches, loc_rngs)
             G = tu.tree_sub(start, x_end)
 
+            mask_upload = None
+            if fault_cfg is not None:
+                mask_upload, n_dropped, n_rejected = _faults.upload_mask(
+                    fault_cfg, k_up, mask, G)
+                if fault_cfg.sanitize:
+                    keep = mask_upload > 0
+                    x_end = jax.tree.map(
+                        lambda xe, st_: jnp.where(
+                            tu._bshape(keep, xe), xe, st_), x_end, start)
+                    G = jax.tree.map(
+                        lambda g: jnp.where(tu._bshape(keep, g), g,
+                                            jnp.zeros_like(g)), G)
             new_global, new_clients, new_tau, new_extra = strat.aggregate(
                 global_tr=state.global_tr, clients_tr=start, G=G, mask=mask,
                 t=state.t, tau=state.tau, probs=probs_t, extra=state.extra,
-                eta_g=cfg.eta_g, use_kernel=cfg.use_kernel, x_end=x_end)
+                eta_g=cfg.eta_g, use_kernel=cfg.use_kernel, x_end=x_end,
+                mask_upload=mask_upload)
 
-        metrics = dict(
-            loss=jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0),
-            n_active=jnp.sum(mask),
-            mean_echo=jnp.sum((state.t - state.tau).astype(jnp.float32) * mask)
-            / jnp.maximum(jnp.sum(mask), 1.0),
-        )
+        if fault_cfg is None:
+            metrics = dict(
+                loss=jnp.sum(losses * mask)
+                / jnp.maximum(jnp.sum(mask), 1.0),
+                n_active=jnp.sum(mask),
+                mean_echo=jnp.sum(
+                    (state.t - state.tau).astype(jnp.float32) * mask)
+                / jnp.maximum(jnp.sum(mask), 1.0),
+            )
+        else:
+            # delivered clients define the observed metrics; a rejected
+            # client's loss may itself be non-finite, so it is excluded
+            # by value, not just by weight
+            mu = mask_upload
+            safe = jnp.where(jnp.isfinite(losses), losses, 0.0)
+            metrics = dict(
+                loss=jnp.sum(safe * mu) / jnp.maximum(jnp.sum(mu), 1.0),
+                n_active=jnp.sum(mask),
+                mean_echo=jnp.sum(
+                    (state.t - state.tau).astype(jnp.float32) * mu)
+                / jnp.maximum(jnp.sum(mu), 1.0),
+                n_dropped=n_dropped,
+                n_rejected=n_rejected,
+            )
         new_state = state._replace(
             global_tr=new_global, clients_tr=new_clients, tau=new_tau,
             t=state.t + 1, extra=new_extra, markov=markov, rng=rng)

@@ -1,0 +1,202 @@
+"""Fault injection: client failure as a first-class executor dimension.
+
+The availability processes of ``core/availability.py`` are well-behaved
+synthetic dynamics where a client sampled at round start is guaranteed to
+deliver its update.  Deployments are not like that (FedAR, Jiang et al.
+2024; Ribero et al. 2022): clients vanish between compute and upload, real
+participation follows recorded traces, whole device populations black out
+together, and a crashed client can ship a non-finite update.  This module
+makes each of those a config knob that composes with ANY
+``AvailabilityCfg`` through the same mask interface the round engine
+already grids over:
+
+  * **mid-round dropout** — the single availability mask splits in two:
+    ``mask_compute`` (drawn at round start, decides who runs local SGD)
+    and ``mask_upload`` (a post-compute survival draw; only survivors
+    contribute to aggregation, update their client state, or advance
+    τ / participation estimates).  ``upload_survival`` is the per-client
+    per-round P(computed update reaches the server).
+  * **trace replay** — a device-resident ``[T, m]`` 0/1 trace riding in
+    ``FLState.fault`` (the scan carry, like the markov state) overrides
+    the sampled mask with row ``t mod T``: recorded mobile/diurnal traces
+    and hand-crafted worst cases replay bit-exactly through the unchanged
+    chunked / seeds / packed executors.
+  * **adversarial dynamics** — ``adversarial_probs_from_nu`` couples
+    availability to the client label distributions ν (the heterogeneity ×
+    unavailability interaction behind the paper's Fig. 2 bias argument),
+    and ``blackout_*`` zeroes a whole data cluster (``clusters`` labels in
+    ``FLState.fault``) for B consecutive rounds.
+  * **update sanitization** — non-finite or norm-exploded local updates
+    are detected in-round and the offending client is demoted to
+    "dropped" (its rows are scrubbed so a 0-weighted NaN can never poison
+    a ``w·G`` reduction), with per-round ``n_dropped`` / ``n_rejected``
+    counts surfaced in the metrics dict.
+
+Everything here is pure and jit-safe; ``FaultCfg`` is frozen/hashable and
+closed over by the round function exactly like ``AvailabilityCfg``.  A
+``fault_cfg`` of None keeps the engine byte-identical to the fault-free
+build (same rng split count, same metrics keys).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.availability import AvailabilityCfg, availability_trace
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultCfg:
+    """Static fault-injection config (hashable; closed over by the jitted
+    round function — changing any field retraces).
+
+    ``upload_survival`` < 1 enables the mid-round dropout draw; ``trace``
+    replays ``FLState.fault["trace"]`` instead of sampling the compute
+    mask; ``blackout_len`` > 0 zeroes clients whose
+    ``FLState.fault["clusters"]`` label equals ``blackout_cluster`` for
+    ``blackout_len`` rounds from ``blackout_start`` (recurring every
+    ``blackout_every`` rounds when > 0); ``sanitize`` demotes clients with
+    non-finite — or, with ``norm_cap`` > 0, norm-exploded — innovations to
+    dropped for that round."""
+    upload_survival: float = 1.0
+    trace: bool = False
+    blackout_start: int = 0
+    blackout_len: int = 0
+    blackout_every: int = 0
+    blackout_cluster: int = 0
+    sanitize: bool = False
+    norm_cap: float = 0.0
+
+    def __post_init__(self):
+        assert 0.0 <= self.upload_survival <= 1.0, self.upload_survival
+        assert self.norm_cap >= 0.0, self.norm_cap
+
+    @property
+    def mid_round(self) -> bool:
+        return self.upload_survival < 1.0
+
+    @property
+    def needs_state(self) -> bool:
+        """Does this config require arrays in ``FLState.fault``?"""
+        return self.trace or self.blackout_len > 0
+
+
+def init_fault_state(cfg: FaultCfg | None, *, trace=None, clusters=None):
+    """Build the ``FLState.fault`` pytree (or None when the config needs
+    no carried arrays — pure dropout/sanitize configs keep the state tree
+    unchanged).
+
+    ``trace``: ``[T, m]`` 0/1 availability replay (required when
+    ``cfg.trace``); ``clusters``: ``[m]`` int32 data-cluster labels
+    (required when ``cfg.blackout_len > 0``; see ``clusters_from_nu``).
+    The dict rides the donated scan carry like the markov state, and
+    ``sharding/rules.flat_pspecs`` shards its client dimension over the
+    client mesh axes."""
+    if cfg is None or not cfg.needs_state:
+        return None
+    st = {}
+    if cfg.trace:
+        assert trace is not None, "cfg.trace needs a [T, m] trace array"
+        tr = jnp.asarray(trace, jnp.float32)
+        assert tr.ndim == 2, tr.shape
+        st["trace"] = tr
+    if cfg.blackout_len > 0:
+        assert clusters is not None, \
+            "blackout_len > 0 needs [m] cluster labels (clusters_from_nu)"
+        st["clusters"] = jnp.asarray(clusters, jnp.int32)
+    return st
+
+
+def compute_mask(cfg: FaultCfg, fault_state, mask, t):
+    """Round-start availability under faults.
+
+    Trace replay OVERRIDES the sampled draw with row ``t mod T`` (so the
+    compute mask is a pure function of the carried trace — bit-exact and
+    rng-independent); blackouts then zero the targeted cluster.  The
+    availability rng draw is still consumed either way, keeping the other
+    streams (local SGD, upload survival) aligned across fault configs."""
+    if cfg.trace:
+        tr = fault_state["trace"]
+        row = jnp.mod(jnp.asarray(t, jnp.int32), tr.shape[0])
+        mask = jax.lax.dynamic_index_in_dim(tr, row, keepdims=False)
+    if cfg.blackout_len > 0:
+        tt = jnp.asarray(t, jnp.int32) - cfg.blackout_start
+        if cfg.blackout_every:
+            tt = jnp.mod(tt, cfg.blackout_every)
+        hit = (jnp.asarray(t, jnp.int32) >= cfg.blackout_start) \
+            & (tt < cfg.blackout_len)
+        target = fault_state["clusters"] == cfg.blackout_cluster
+        mask = jnp.where(hit & target, 0.0, mask)
+    return mask
+
+
+def update_norms_sq(G):
+    """Per-client squared innovation norm over a client-stacked update —
+    one ``[m]`` vector whether ``G`` is the flat ``[m, N]`` buffer or a
+    pytree of ``[m, ...]`` leaves."""
+    tot = None
+    for leaf in jax.tree.leaves(G):
+        x = leaf.astype(jnp.float32).reshape(leaf.shape[0], -1)
+        s = jnp.sum(x * x, axis=1)
+        tot = s if tot is None else tot + s
+    return tot
+
+
+def upload_mask(cfg: FaultCfg, rng, mask, G):
+    """Post-compute fate of each active client's update.
+
+    Returns ``(mask_upload, n_dropped, n_rejected)``: the survival draw
+    (``upload_survival``) marks mid-round dropouts, then sanitization
+    demotes non-finite / norm-exploded innovations.  ``mask_upload`` is
+    the EFFECTIVE aggregation mask (``<= mask`` elementwise); a client
+    dropped or rejected here behaves exactly as if it had never been
+    sampled — no contribution, no client-state update, no τ advance, no
+    participation-estimate observation."""
+    keep = mask
+    dropped = jnp.zeros((), jnp.float32)
+    rejected = jnp.zeros((), jnp.float32)
+    if cfg.mid_round:
+        survive = (jax.random.uniform(rng, mask.shape)
+                   < cfg.upload_survival).astype(jnp.float32)
+        dropped = jnp.sum(keep * (1.0 - survive))
+        keep = keep * survive
+    if cfg.sanitize:
+        n2 = update_norms_sq(G)
+        bad = ~jnp.isfinite(n2)
+        if cfg.norm_cap > 0.0:
+            bad = bad | (n2 > jnp.float32(cfg.norm_cap) ** 2)
+        badf = bad.astype(jnp.float32)
+        rejected = jnp.sum(keep * badf)
+        keep = keep * (1.0 - badf)
+    return keep, dropped, rejected
+
+
+def adversarial_probs_from_nu(nu, *, hot=0.9, cold=0.05):
+    """Availability adversarially correlated with the client label
+    distributions ν (the paper's Fig. 2 heterogeneity × unavailability
+    coupling): clients whose dominant label falls in the first half of the
+    classes participate at ``hot``, the rest at ``cold`` — so the biased
+    half of the data dominates aggregation unless the strategy corrects
+    for participation.  Returns a ``[m]`` base_p replacement."""
+    nu = jnp.asarray(nu, jnp.float32)
+    C = nu.shape[1]
+    dom = jnp.argmax(nu, axis=1)
+    return jnp.where(dom < C // 2, jnp.float32(hot), jnp.float32(cold))
+
+
+def clusters_from_nu(nu):
+    """``[m]`` int32 data-cluster labels — each client's dominant label
+    under its Dirichlet ν draw.  The targeting handle for cluster
+    blackouts (``FaultCfg.blackout_cluster``)."""
+    return jnp.argmax(jnp.asarray(nu, jnp.float32), axis=1).astype(jnp.int32)
+
+
+def diurnal_trace(rng, base_p, T, *, period=24, gamma=0.45):
+    """A recorded-style diurnal availability trace: ``[T, m]`` 0/1 mask
+    rows simulated from a sine-modulated process with a day-length
+    ``period`` — the stand-in for a real mobile-availability recording,
+    replayed bit-exactly via ``FaultCfg(trace=True)``."""
+    cfg = AvailabilityCfg(kind="sine", gamma=gamma, period=period)
+    return availability_trace(rng, cfg, base_p, T)

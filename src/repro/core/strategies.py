@@ -73,7 +73,8 @@ def _fedawe_init(template, m):
 
 
 def _fedawe_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
-                      extra, eta_g, use_kernel=False, x_end=None):
+                      extra, eta_g, use_kernel=False, x_end=None,
+                      mask_upload=None):
     """Adaptive innovation echoing + implicit gossiping.
 
     x_i^† = x_i − η_g (t − τ_i) G_i            (echo, active clients)
@@ -81,47 +82,58 @@ def _fedawe_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
     x_i^{t+1} = x^{t+1} for i∈A, else x_i^t     (postponed multicast)
     τ_i ← t for i∈A.
     Empty rounds keep the previous global (W = I).
+
+    ``mask_upload`` (default None = ``mask``) is the DELIVERED-update
+    mask under fault injection (core/faults.py): a client that computed
+    but failed to upload contributes nothing, keeps its stale model, and
+    does not advance τ — an all-dropped round degrades to the same W = I
+    guard as an empty one.
     """
+    mu = mask if mask_upload is None else mask_upload
     echo = (t - tau).astype(jnp.float32)  # [m] ; (t - τ_i(t))
     if use_kernel:
         from repro.kernels.echo_aggregate import ops as ea_ops
         y = x_end if x_end is not None else tu.tree_sub(clients_tr, G)
         # one pallas_call over the concatenated leaves, guard fused in
         new_global = ea_ops.echo_aggregate_tree(
-            clients_tr, y, mask, echo, eta_g, global_tr)
+            clients_tr, y, mask, echo, eta_g, global_tr,
+            upload=mask_upload)
     else:
         x_dagger = jax.tree.map(
             lambda x, g: (x.astype(jnp.float32)
-                          - eta_g * tu._bshape(echo * mask, g)
+                          - eta_g * tu._bshape(echo * mu, g)
                           * g.astype(jnp.float32)).astype(x.dtype),
             clients_tr, G)
-        new_global = tu.tree_masked_mean(x_dagger, mask)
-        any_active = jnp.sum(mask) > 0
+        new_global = tu.tree_masked_mean(x_dagger, mu)
+        any_active = jnp.sum(mu) > 0
         new_global = jax.tree.map(
             lambda n, o: jnp.where(any_active, n, o.astype(n.dtype)),
             new_global, global_tr)
-    new_clients = tu.tree_select_broadcast(mask, new_global, clients_tr)
-    new_tau = jnp.where(mask > 0, t, tau)
+    new_clients = tu.tree_select_broadcast(mu, new_global, clients_tr)
+    new_tau = jnp.where(mu > 0, t, tau)
     return new_global, new_clients, new_tau, extra
 
 
 def _fedawe_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
-                           tau, probs, extra, eta_g, use_kernel=False):
+                           tau, probs, extra, eta_g, use_kernel=False,
+                           mask_upload=None):
     """Flat-substrate FedAWE: the whole server update is one [m, N] sweep
     (a single pallas_call on the kernel path)."""
+    mu = mask if mask_upload is None else mask_upload
     echo = (t - tau).astype(jnp.float32)
     if use_kernel:
         from repro.kernels.echo_aggregate import ops as ea_ops
         new_global = ea_ops.echo_aggregate_flat(
-            clients_flat, x_end, global_flat, mask, echo, eta_g)
+            clients_flat, x_end, global_flat, mask, echo, eta_g,
+            upload=mask_upload)
     else:
         # sum_i w_i (x_i − η_g e_i G_i) as two matvecs — no [m, N] temporary
-        denom = jnp.maximum(jnp.sum(mask), 1.0)
-        acc = (flat_weighted_sum(mask, clients_flat)
-               - eta_g * flat_weighted_sum(mask * echo, G)) / denom
-        new_global = jnp.where(jnp.sum(mask) > 0, acc, global_flat)
-    new_clients = jnp.where(mask[:, None] > 0, new_global[None], clients_flat)
-    new_tau = jnp.where(mask > 0, t, tau)
+        denom = jnp.maximum(jnp.sum(mu), 1.0)
+        acc = (flat_weighted_sum(mu, clients_flat)
+               - eta_g * flat_weighted_sum(mu * echo, G)) / denom
+        new_global = jnp.where(jnp.sum(mu) > 0, acc, global_flat)
+    new_clients = jnp.where(mu[:, None] > 0, new_global[None], clients_flat)
+    new_tau = jnp.where(mu > 0, t, tau)
     return new_global, new_clients, new_tau, extra
 
 
@@ -150,24 +162,26 @@ def _mk_weighted_fedavg(weight_fn, name, uses_true_probs=False):
             else jnp.float32(mask.shape[0])
 
     def agg(*, global_tr, clients_tr, G, mask, t, tau, probs, extra, eta_g,
-            use_kernel=False, x_end=None):
-        w = weight_fn(mask, probs) * mask  # [m]
+            use_kernel=False, x_end=None, mask_upload=None):
+        mu = mask if mask_upload is None else mask_upload
+        w = weight_fn(mu, probs) * mu  # [m]
         upd = jax.tree.map(
             lambda g: jnp.sum(g.astype(jnp.float32) * tu._bshape(w, g), axis=0),
             G)
-        denom = _denom(mask)
+        denom = _denom(mu)
         new_global = jax.tree.map(
             lambda x, u: (x.astype(jnp.float32) - eta_g * u / denom).astype(x.dtype),
             global_tr, upd)
-        new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask,
+        new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mu,
                                                t, tau)
         return new_global, new_clients, new_tau, extra
 
     def agg_flat(*, global_flat, clients_flat, x_end, G, mask, t, tau, probs,
-                 extra, eta_g, use_kernel=False):
-        w = weight_fn(mask, probs) * mask
-        new_global = global_flat - eta_g * flat_weighted_sum(w, G) / _denom(mask)
-        return new_global, None, _stateless_tau(mask, t, tau), extra
+                 extra, eta_g, use_kernel=False, mask_upload=None):
+        mu = mask if mask_upload is None else mask_upload
+        w = weight_fn(mu, probs) * mu
+        new_global = global_flat - eta_g * flat_weighted_sum(w, G) / _denom(mu)
+        return new_global, None, _stateless_tau(mu, t, tau), extra
 
     return Strategy(name, False, init, agg, aggregate_flat=agg_flat,
                     uses_true_probs=uses_true_probs)
@@ -213,25 +227,28 @@ def _fedau_weights(mask, extra):
 
 
 def _fedau_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
-                     eta_g, use_kernel=False, x_end=None):
-    w, new_extra = _fedau_weights(mask, extra)
-    m = jnp.float32(mask.shape[0])
+                     eta_g, use_kernel=False, x_end=None, mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
+    w, new_extra = _fedau_weights(mu, extra)
+    m = jnp.float32(mu.shape[0])
     upd = jax.tree.map(
         lambda g: jnp.sum(g.astype(jnp.float32) * tu._bshape(w, g), axis=0) / m,
         G)
     new_global = jax.tree.map(
         lambda x, u: (x.astype(jnp.float32) - eta_g * u).astype(x.dtype),
         global_tr, upd)
-    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
+    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mu, t, tau)
     return new_global, new_clients, new_tau, new_extra
 
 
 def _fedau_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
-                          tau, probs, extra, eta_g, use_kernel=False):
-    w, new_extra = _fedau_weights(mask, extra)
-    m = jnp.float32(mask.shape[0])
+                          tau, probs, extra, eta_g, use_kernel=False,
+                          mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
+    w, new_extra = _fedau_weights(mu, extra)
+    m = jnp.float32(mu.shape[0])
     new_global = global_flat - eta_g * flat_weighted_sum(w, G) / m
-    return new_global, None, _stateless_tau(mask, t, tau), new_extra
+    return new_global, None, _stateless_tau(mu, t, tau), new_extra
 
 
 FEDAU = Strategy("fedau", False, _fedau_init, _fedau_aggregate,
@@ -253,25 +270,28 @@ def _f3ast_weights(mask, extra):
 
 
 def _f3ast_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
-                     eta_g, use_kernel=False, x_end=None):
-    w, new_extra = _f3ast_weights(mask, extra)
-    m = jnp.float32(mask.shape[0])
+                     eta_g, use_kernel=False, x_end=None, mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
+    w, new_extra = _f3ast_weights(mu, extra)
+    m = jnp.float32(mu.shape[0])
     upd = jax.tree.map(
         lambda g: jnp.sum(g.astype(jnp.float32) * tu._bshape(w, g), axis=0) / m,
         G)
     new_global = jax.tree.map(
         lambda x, u: (x.astype(jnp.float32) - eta_g * u).astype(x.dtype),
         global_tr, upd)
-    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
+    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mu, t, tau)
     return new_global, new_clients, new_tau, new_extra
 
 
 def _f3ast_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
-                          tau, probs, extra, eta_g, use_kernel=False):
-    w, new_extra = _f3ast_weights(mask, extra)
-    m = jnp.float32(mask.shape[0])
+                          tau, probs, extra, eta_g, use_kernel=False,
+                          mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
+    w, new_extra = _f3ast_weights(mu, extra)
+    m = jnp.float32(mu.shape[0])
     new_global = global_flat - eta_g * flat_weighted_sum(w, G) / m
-    return new_global, None, _stateless_tau(mask, t, tau), new_extra
+    return new_global, None, _stateless_tau(mu, t, tau), new_extra
 
 
 F3AST = Strategy("f3ast", False, _f3ast_init, _f3ast_aggregate,
@@ -287,24 +307,27 @@ def _mifa_init(template, m):
 
 
 def _mifa_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
-                    eta_g, use_kernel=False, x_end=None):
-    mem = tu.tree_select(mask, G, extra["mem"])
+                    eta_g, use_kernel=False, x_end=None, mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
+    mem = tu.tree_select(mu, G, extra["mem"])
     upd = tu.tree_mean(mem)
     new_global = jax.tree.map(
         lambda x, u: (x.astype(jnp.float32)
                       - eta_g * u.astype(jnp.float32)).astype(x.dtype),
         global_tr, upd)
-    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
+    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mu, t, tau)
     return new_global, new_clients, new_tau, dict(mem=mem)
 
 
 def _mifa_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
-                         tau, probs, extra, eta_g, use_kernel=False):
-    mem = jnp.where(mask[:, None] > 0, G, extra["mem"])  # [m, N] memory
-    m = jnp.float32(mask.shape[0])
+                         tau, probs, extra, eta_g, use_kernel=False,
+                         mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
+    mem = jnp.where(mu[:, None] > 0, G, extra["mem"])  # [m, N] memory
+    m = jnp.float32(mu.shape[0])
     new_global = global_flat - eta_g * flat_weighted_sum(
-        jnp.ones_like(mask), mem) / m
-    return new_global, None, _stateless_tau(mask, t, tau), dict(mem=mem)
+        jnp.ones_like(mu), mem) / m
+    return new_global, None, _stateless_tau(mu, t, tau), dict(mem=mem)
 
 
 MIFA = Strategy("mifa", False, _mifa_init, _mifa_aggregate,
@@ -320,32 +343,36 @@ def _fedvarp_init(template, m):
 
 
 def _fedvarp_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
-                       extra, eta_g, use_kernel=False, x_end=None):
+                       extra, eta_g, use_kernel=False, x_end=None,
+                       mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
     y = extra["y"]
-    diff_mean = tu.tree_masked_mean(tu.tree_sub(G, y), mask)
+    diff_mean = tu.tree_masked_mean(tu.tree_sub(G, y), mu)
     y_mean = tu.tree_mean(y)
-    any_active = (jnp.sum(mask) > 0).astype(jnp.float32)
+    any_active = (jnp.sum(mu) > 0).astype(jnp.float32)
     new_global = jax.tree.map(
         lambda x, d, ym: (x.astype(jnp.float32)
                           - eta_g * (any_active * d.astype(jnp.float32)
                                      + ym.astype(jnp.float32))).astype(x.dtype),
         global_tr, diff_mean, y_mean)
-    new_y = tu.tree_select(mask, G, y)
-    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mask, t, tau)
+    new_y = tu.tree_select(mu, G, y)
+    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mu, t, tau)
     return new_global, new_clients, new_tau, dict(y=new_y)
 
 
 def _fedvarp_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
-                            tau, probs, extra, eta_g, use_kernel=False):
+                            tau, probs, extra, eta_g, use_kernel=False,
+                            mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
     y = extra["y"]  # [m, N]
-    denom = jnp.maximum(jnp.sum(mask), 1.0)
-    diff_mean = flat_weighted_sum(mask, G - y) / denom
-    y_mean = flat_weighted_sum(jnp.ones_like(mask), y) / jnp.float32(
-        mask.shape[0])
-    any_active = (jnp.sum(mask) > 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mu), 1.0)
+    diff_mean = flat_weighted_sum(mu, G - y) / denom
+    y_mean = flat_weighted_sum(jnp.ones_like(mu), y) / jnp.float32(
+        mu.shape[0])
+    any_active = (jnp.sum(mu) > 0).astype(jnp.float32)
     new_global = global_flat - eta_g * (any_active * diff_mean + y_mean)
-    new_y = jnp.where(mask[:, None] > 0, G, y)
-    return new_global, None, _stateless_tau(mask, t, tau), dict(y=new_y)
+    new_y = jnp.where(mu[:, None] > 0, G, y)
+    return new_global, None, _stateless_tau(mu, t, tau), dict(y=new_y)
 
 
 FEDVARP = Strategy("fedvarp", False, _fedvarp_init, _fedvarp_aggregate,
@@ -364,11 +391,13 @@ def _fedawe_m_init(template, m, beta=0.9):
 
 
 def _fedawe_m_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
-                        extra, eta_g, use_kernel=False, x_end=None):
+                        extra, eta_g, use_kernel=False, x_end=None,
+                        mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
     gossip, _, new_tau, _ = _fedawe_aggregate(
         global_tr=global_tr, clients_tr=clients_tr, G=G, mask=mask, t=t,
         tau=tau, probs=probs, extra=(), eta_g=eta_g, use_kernel=use_kernel,
-        x_end=x_end)
+        x_end=x_end, mask_upload=mask_upload)
     beta = extra["beta"]
     delta = tu.tree_sub(gossip, global_tr)
     v = jax.tree.map(
@@ -376,25 +405,27 @@ def _fedawe_m_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
     new_global = jax.tree.map(
         lambda x, vv: (x.astype(jnp.float32) + vv).astype(x.dtype),
         global_tr, v)
-    any_active = jnp.sum(mask) > 0
+    any_active = jnp.sum(mu) > 0
     new_global = jax.tree.map(
         lambda n, o: jnp.where(any_active, n, o), new_global, global_tr)
     # (empty round: delta = 0, so v decays by beta through the line above)
-    new_clients = tu.tree_select_broadcast(mask, new_global, clients_tr)
+    new_clients = tu.tree_select_broadcast(mu, new_global, clients_tr)
     return new_global, new_clients, new_tau, dict(v=v, beta=beta)
 
 
 def _fedawe_m_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
-                             tau, probs, extra, eta_g, use_kernel=False):
+                             tau, probs, extra, eta_g, use_kernel=False,
+                             mask_upload=None):
+    mu = mask if mask_upload is None else mask_upload
     gossip, _, new_tau, _ = _fedawe_aggregate_flat(
         global_flat=global_flat, clients_flat=clients_flat, x_end=x_end, G=G,
         mask=mask, t=t, tau=tau, probs=probs, extra=(), eta_g=eta_g,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel, mask_upload=mask_upload)
     beta = extra["beta"]
     v = beta * extra["v"] + (gossip - global_flat)  # gossip is guarded
-    any_active = jnp.sum(mask) > 0
+    any_active = jnp.sum(mu) > 0
     new_global = jnp.where(any_active, global_flat + v, global_flat)
-    new_clients = jnp.where(mask[:, None] > 0, new_global[None], clients_flat)
+    new_clients = jnp.where(mu[:, None] > 0, new_global[None], clients_flat)
     return new_global, new_clients, new_tau, dict(v=v, beta=beta)
 
 

@@ -79,17 +79,43 @@ def echo_aggregate_pallas(x, y, mask, echo, eta_g, *, block_n=4096,
     return out[:N]
 
 
+def _fused_kernel_upload(mask_ref, upload_ref, echo_ref, denom_ref, x_ref,
+                         y_ref, g_ref, o_ref, *, eta_g):
+    """Fault-injection variant of ``_fused_kernel``: the effective weight is
+    ``mask_i * upload_i`` (core/faults.py mid-round dropout), and the W = I
+    guard keys on DELIVERING clients — an all-dropped round degrades to the
+    same fall-back-to-g path as an empty one."""
+    x = x_ref[...].astype(jnp.float32)          # [m, BN] client starts
+    y = y_ref[...].astype(jnp.float32)          # [m, BN] post-local-SGD
+    w = (mask_ref[...].astype(jnp.float32)
+         * upload_ref[...].astype(jnp.float32))  # [m] delivered updates only
+    e = echo_ref[...].astype(jnp.float32)       # [m]
+    xd = x - eta_g * e[:, None] * (x - y)
+    acc = jnp.sum(w[:, None] * xd, axis=0) / denom_ref[0]
+    any_active = jnp.sum(w) > 0.0
+    o_ref[...] = jnp.where(any_active, acc,
+                           g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
 def echo_aggregate_fused_pallas(x, y, g, mask, echo, eta_g, *, block_n=4096,
-                                interpret=True):
+                                interpret=True, upload=None):
     """Single-launch FedAWE aggregation over the flat substrate.
 
     x, y: [m, N] client start / end stacks; g: [N] previous global (the
     empty-round fallback); mask, echo: [m]. Returns [N] f32 — the whole
     server update (echo, mask, gossip mean, empty-round guard) is one
     ``pallas_call`` regardless of how many pytree leaves N concatenates.
+
+    ``upload`` ([m], optional) threads the mid-round dropout mask of
+    core/faults.py into the kernel: weights become mask*upload in-VMEM and
+    the guard counts delivering clients. ``upload=None`` dispatches the
+    original kernel unchanged (byte-identical fault-free path).
     """
     m, N = x.shape
-    denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)[None]
+    w_eff = mask.astype(jnp.float32)
+    if upload is not None:
+        w_eff = w_eff * upload.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w_eff), 1.0)[None]
 
     pad = (-N) % block_n
     if pad:
@@ -99,20 +125,29 @@ def echo_aggregate_fused_pallas(x, y, g, mask, echo, eta_g, *, block_n=4096,
     Np = N + pad
     grid = (Np // block_n,)
 
+    vec = pl.BlockSpec((m,), lambda j: (0,))
+    stack = pl.BlockSpec((m, block_n), lambda j: (0, j))
+    row = pl.BlockSpec((block_n,), lambda j: (j,))
+    if upload is None:
+        kern = functools.partial(_fused_kernel, eta_g=float(eta_g))
+        in_specs = [vec, vec, pl.BlockSpec((1,), lambda j: (0,)),
+                    stack, stack, row]
+        operands = (mask.astype(jnp.float32), echo.astype(jnp.float32),
+                    denom, x, y, g.astype(jnp.float32))
+    else:
+        kern = functools.partial(_fused_kernel_upload, eta_g=float(eta_g))
+        in_specs = [vec, vec, vec, pl.BlockSpec((1,), lambda j: (0,)),
+                    stack, stack, row]
+        operands = (mask.astype(jnp.float32), upload.astype(jnp.float32),
+                    echo.astype(jnp.float32), denom, x, y,
+                    g.astype(jnp.float32))
+
     out = pl.pallas_call(
-        functools.partial(_fused_kernel, eta_g=float(eta_g)),
+        kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((m,), lambda j: (0,)),            # mask
-            pl.BlockSpec((m,), lambda j: (0,)),            # echo
-            pl.BlockSpec((1,), lambda j: (0,)),            # denom
-            pl.BlockSpec((m, block_n), lambda j: (0, j)),  # x
-            pl.BlockSpec((m, block_n), lambda j: (0, j)),  # y
-            pl.BlockSpec((block_n,), lambda j: (j,)),      # g
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_n,), lambda j: (j,)),
         out_shape=jax.ShapeDtypeStruct((Np,), jnp.float32),
         interpret=interpret,
-    )(mask.astype(jnp.float32), echo.astype(jnp.float32), denom, x, y,
-      g.astype(jnp.float32))
+    )(*operands)
     return out[:N]

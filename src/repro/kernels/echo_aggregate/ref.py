@@ -5,25 +5,34 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def echo_aggregate_ref(x, y, mask, echo, eta_g):
+def echo_aggregate_ref(x, y, mask, echo, eta_g, *, upload=None):
     """x, y: [m, N] (client start / post-local-SGD params); mask, echo: [m].
 
     Returns [N]: mean over active clients of
         x_i - eta_g * echo_i * (x_i - y_i).
     Empty mask returns zeros (callers apply the W=I empty-round rule).
+    ``upload`` ([m], optional) is the mid-round survival mask of
+    core/faults.py: the effective weight becomes mask_i * upload_i, so a
+    client that computed but failed to deliver contributes nothing.
     """
     x32 = x.astype(jnp.float32)
     y32 = y.astype(jnp.float32)
     w = mask.astype(jnp.float32)
+    if upload is not None:
+        w = w * upload.astype(jnp.float32)
     e = echo.astype(jnp.float32)
     xd = x32 - eta_g * e[:, None] * (x32 - y32)
     denom = jnp.maximum(w.sum(), 1.0)
     return (w[:, None] * xd).sum(axis=0) / denom
 
 
-def echo_aggregate_fused_ref(x, y, g, mask, echo, eta_g):
+def echo_aggregate_fused_ref(x, y, g, mask, echo, eta_g, *, upload=None):
     """Oracle for the fused single-launch update: echo_aggregate_ref plus the
-    empty-round guard (no active client -> keep the previous global g)."""
-    acc = echo_aggregate_ref(x, y, mask, echo, eta_g)
-    any_active = jnp.sum(mask.astype(jnp.float32)) > 0
+    empty-round guard (no DELIVERING client -> keep the previous global g,
+    which under faults also covers the all-dropped round)."""
+    acc = echo_aggregate_ref(x, y, mask, echo, eta_g, upload=upload)
+    w = mask.astype(jnp.float32)
+    if upload is not None:
+        w = w * upload.astype(jnp.float32)
+    any_active = jnp.sum(w) > 0
     return jnp.where(any_active, acc, g.astype(jnp.float32))

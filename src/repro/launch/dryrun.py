@@ -191,6 +191,15 @@ def _chunk_mesh(variant):
     return "mesh" in variant.split("+")
 
 
+def _chunk_faults(variant):
+    """'+faults' lowers the chunked executor with fault injection live
+    (core/faults.py): mid-round dropout + sanitization split the masks,
+    a device-resident [T, m] replay trace rides the donated scan carry
+    (sharded client-wise by flat_pspecs), and the metrics dict grows the
+    n_dropped/n_rejected counters."""
+    return "faults" in variant.split("+")
+
+
 def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
     """The donated, sharded, scan-chunked round executor on the flat
     substrate: K FedAWE rounds per dispatch, the [m, N] client stack over
@@ -211,7 +220,16 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
 
     av = AvailabilityCfg(kind="sine", gamma=0.3, period=20)
     base_p = jnp.full((m,), 0.5, F32)
-    round_fn = make_round_fn_with_frozen(fl, loss_fn, av, base_p)
+    fault_cfg, fault_sds = None, None
+    if _chunk_faults(variant):
+        from repro.core.faults import FaultCfg
+        fault_cfg = FaultCfg(upload_survival=0.9, trace=True,
+                             sanitize=True)
+        # [T, m] replay trace riding the donated scan carry; rows are
+        # consumed mod T, so a 2K-round trace covers any dispatch count
+        fault_sds = {"trace": _sds((2 * K, m), F32)}
+    round_fn = make_round_fn_with_frozen(fl, loss_fn, av, base_p,
+                                         fault_cfg=fault_cfg)
     sampling = _chunk_sampling(variant)
     # the dry-run store gives every client exactly `cap` samples (below),
     # so the epoch permutation stack lowers at its production size
@@ -219,7 +237,8 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
                                                   min_count=4)
 
     state_sds = jax.eval_shape(
-        lambda tr: init_fl_state(jax.random.PRNGKey(0), fl, tr),
+        lambda tr: init_fl_state(jax.random.PRNGKey(0), fl, tr,
+                                 fault=fault_sds),
         trainable_sds)
 
     # device-resident store: per-sample arrays (drop the [m, s, b] lead of
@@ -249,6 +268,8 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
         counts=P(ca),
     )
     metrics_spec = dict(loss=P(None), n_active=P(None), mean_echo=P(None))
+    if fault_cfg is not None:
+        metrics_spec.update(n_dropped=P(None), n_rejected=P(None))
 
     S = _chunk_seeds(variant)
     if S:
@@ -371,6 +392,8 @@ def run_one(arch, shape_name, mesh_kind, *, test_mesh=False, verbose=True,
                     rec["sampling"] = _chunk_sampling(variant)
                     if _chunk_seeds(variant):
                         rec["seeds"] = _chunk_seeds(variant)
+                    if _chunk_faults(variant):
+                        rec["faults"] = True
                 else:
                     fn, args = build_train_step(cfg, shape, mesh, multi_pod,
                                                 variant=variant)
@@ -477,7 +500,11 @@ def main():
                          "dispatch, seed axis over the client mesh axes), "
                          "mesh (with seedsS: dedicated ('seed','pod','data') "
                          "mesh from make_seed_mesh — the inner client "
-                         "placement survives under the seed axis)")
+                         "placement survives under the seed axis), faults "
+                         "(fault injection live in the chunked executor: "
+                         "mid-round dropout + sanitization masks, [T, m] "
+                         "replay trace in the donated carry, "
+                         "n_dropped/n_rejected metrics)")
     args = ap.parse_args()
 
     results = []

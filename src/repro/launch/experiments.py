@@ -99,12 +99,23 @@ class Scenario:
     eta_l: float = 0.05
     eta_g: float = 1.0
     flat_state: bool = True         # flat [m, N] substrate by default
+    # fault-injection knobs (core/faults.py) — all off by default
+    upload_survival: float = 1.0    # < 1 enables mid-round dropout
+    sanitize: bool = False          # demote non-finite updates to dropped
+    norm_cap: float = 0.0           # with sanitize: reject ||G_i|| > cap
+    fault_trace: str = ""           # "" or "diurnal": [T, m] replay trace
+    blackout_start: int = 0
+    blackout_len: int = 0           # > 0: blackout B consecutive rounds
+    blackout_every: int = 0         # recurrence period (0 = one-shot)
+    blackout_cluster: int = 0       # targeted data cluster (dominant label)
+    nu_corr: bool = False           # base_p := adversarial_probs_from_nu
     note: str = ""
 
     def __post_init__(self):
         assert self.strategy in REGISTRY, self.strategy
         assert self.kind in KINDS, self.kind
         assert self.sampling in SAMPLING_MODES, self.sampling
+        assert self.fault_trace in ("", "diurnal"), self.fault_trace
 
     def availability(self) -> AvailabilityCfg:
         return AvailabilityCfg(
@@ -112,6 +123,23 @@ class Scenario:
             staircase_low=self.staircase_low, cutoff=self.cutoff,
             delta_floor=self.delta_floor, markov_up=self.markov_up,
             markov_down=self.markov_down)
+
+    def fault(self):
+        """The cell's ``FaultCfg``, or None when every fault knob is at
+        its fault-free default (so the engine compiles the byte-identical
+        no-fault round function)."""
+        from repro.core.faults import FaultCfg
+        if (self.upload_survival >= 1.0 and not self.sanitize
+                and not self.fault_trace and self.blackout_len == 0):
+            return None
+        return FaultCfg(
+            upload_survival=self.upload_survival,
+            trace=bool(self.fault_trace),
+            blackout_start=self.blackout_start,
+            blackout_len=self.blackout_len,
+            blackout_every=self.blackout_every,
+            blackout_cluster=self.blackout_cluster,
+            sanitize=self.sanitize, norm_cap=self.norm_cap)
 
 
 SCENARIOS: dict = {}
@@ -174,6 +202,30 @@ def _register_paper_grid():
         kind="interleaved_sine", delta_floor=0.05,
         note="delta_floor=0.05 keeps Assumption 1 in the dynamics"))
 
+    # fault-injection cells (core/faults.py): deployment-grade failure
+    # modes composed onto the same availability interface
+    register_scenario(Scenario(
+        name="fig2_midround_dropout", strategy="fedawe", nu_corr=True,
+        upload_survival=0.7, sanitize=True,
+        note="Fig.2 nu-correlated availability + 30% mid-round dropout "
+             "+ sanitization"))
+    register_scenario(Scenario(
+        name="blackout_cluster", strategy="fedawe", kind="sine",
+        blackout_start=4, blackout_len=4, blackout_every=12,
+        blackout_cluster=0,
+        note="recurring 4-round blackout of data cluster 0 "
+             "(dominant-label targeting)"))
+    register_scenario(Scenario(
+        name="trace_diurnal", strategy="fedawe", fault_trace="diurnal",
+        note="replay a recorded-style diurnal [T, m] availability trace "
+             "bit-exactly"))
+    # mid-round dropout column: every strategy against the same failure
+    for strat in sorted(REGISTRY):
+        register_scenario(Scenario(
+            name=f"{strat}/midround", strategy=strat, kind="sine",
+            upload_survival=0.8, sanitize=True,
+            note="20% mid-round upload dropout + sanitization"))
+
     GRIDS.update({
         # speedup-vs-availability comparison (Yan et al. 2020 framing)
         "speedup-sine": ["fedawe/sine", "fedawe_m/sine",
@@ -190,6 +242,11 @@ def _register_paper_grid():
         "paper-sec7": [f"{s}/{k}" for s in sorted(REGISTRY)
                        for k in ("stationary", "staircase", "sine",
                                  "interleaved_sine")],
+        # fault-injection stress cells: the named failure modes plus the
+        # every-strategy mid-round dropout column
+        "faults": (["fig2_midround_dropout", "blackout_cluster",
+                    "trace_diurnal"]
+                   + [f"{s}/midround" for s in sorted(REGISTRY)]),
     })
 
 
@@ -202,7 +259,8 @@ _register_paper_grid()
 
 def build_seed_batch(cfg: FLConfig, template, base_rng, data_key,
                      init_sampler_state, store, n_seeds: int, *,
-                     template_fn=None, model_rng=None, seed_ids=None):
+                     template_fn=None, model_rng=None, seed_ids=None,
+                     fault=None):
     """Stacked per-seed carry for ``make_seeds_chunk_fn``.
 
     Seed replicate ``j`` is initialized EXACTLY as an independent
@@ -230,6 +288,12 @@ def build_seed_batch(cfg: FLConfig, template, base_rng, data_key,
     therefore permutes the per-seed results identically — the
     independence property the hypothesis sweep checks.
 
+    ``fault`` (a ``faults.init_fault_state`` pytree, or None) is the
+    fault-injection carry — the SAME replay trace / cluster labels for
+    every replicate (seeds vary the stochastic draws, not the recorded
+    failure pattern), stacked over the seed axis like the rest of the
+    state.
+
     Returns ``(states, sampler_states, data_keys)`` with ``[S, ...]``
     leaves (``sampler_states`` is ``{}`` under uniform sampling).
     """
@@ -245,7 +309,8 @@ def build_seed_batch(cfg: FLConfig, template, base_rng, data_key,
         return template_fn(jax.random.fold_in(model_rng, j))
 
     states = stack_seeds([
-        init_fl_state(jax.random.fold_in(base_rng, j), cfg, tmpl(j))
+        init_fl_state(jax.random.fold_in(base_rng, j), cfg, tmpl(j),
+                      fault=fault)
         for j in ids])
     if seed_ids is None:
         data_keys = seed_data_keys(data_key, n_seeds)
@@ -410,7 +475,7 @@ def run_seed_rounds(states, chunk_fn, T, K, *, sampler_states, store,
 def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
                    batch, seeds, rounds, chunk_rounds, rng, data_key,
                    eval_fn=None, eval_every=0, log_every=0, mesh=None,
-                   template_fn=None):
+                   template_fn=None, fault=None):
     """THE multi-seed driver (used by both this module's ``run_scenario``
     and ``train.py --seeds``): device store + stateful sampler + stacked
     per-seed carry + S-batched executor, end to end.
@@ -431,7 +496,7 @@ def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
         min_count=min(len(ix) for ix in ds.client_indices))
     states, sampler_states, data_keys = build_seed_batch(
         fl, template, rng, data_key, init_fn, store, seeds,
-        template_fn=template_fn)
+        template_fn=template_fn, fault=fault)
     K = min(int(chunk_rounds) or 8, int(rounds))
     builder = build_seed_executor(fl, round_fn, sample_fn, seeds,
                                   mesh=mesh, states=states,
@@ -448,10 +513,19 @@ def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
 
 
 def _cell_task(sc: Scenario, *, m, s, batch, n_samples, preset, seed,
-               use_kernel):
+               use_kernel, rounds=0):
     """Materialize one cell's task + round function: ``(fl, round_fn,
-    ds, eval_fn, init_fn)``."""
+    ds, eval_fn, init_fn, fault_state)``.
+
+    The fault knobs resolve here: ``nu_corr`` swaps the data-derived
+    ``base_p`` for the adversarial ν-correlated one, a ``fault_trace``
+    simulates its ``[rounds, m]`` replay trace (keyed ``seed + 2`` so it
+    is independent of the model/data streams), and blackout cells derive
+    their cluster labels from the task's ν.  ``fault_state`` is None for
+    fault-free cells.
+    """
     # lazy import: train.py imports this module for --scenario/--seeds
+    from repro.core import faults
     from repro.launch import train as train_mod
 
     args = argparse.Namespace(seed=seed, n_samples=n_samples, m=m,
@@ -460,11 +534,27 @@ def _cell_task(sc: Scenario, *, m, s, batch, n_samples, preset, seed,
     build = (train_mod.build_image_task if preset == "image"
              else train_mod.build_lm_task)
     params, loss_fn, ds, base_p, eval_fn, init_fn = build(args, rng)
+    if sc.nu_corr:
+        base_p = faults.adversarial_probs_from_nu(ds.nu)
     fl = FLConfig(m=m, s=s, eta_l=sc.eta_l, eta_g=sc.eta_g,
                   strategy=sc.strategy, flat_state=sc.flat_state,
                   use_kernel=use_kernel)
-    rf = make_round_fn(fl, loss_fn, {}, sc.availability(), base_p)
-    return fl, rf, params, ds, eval_fn, init_fn
+    fc = sc.fault()
+    fault_state = None
+    if fc is not None and fc.needs_state:
+        trace = None
+        if fc.trace:
+            assert rounds > 0, \
+                f"trace cell {sc.name!r} needs the run length for its trace"
+            trace = faults.diurnal_trace(jax.random.PRNGKey(seed + 2),
+                                         base_p, rounds)
+        clusters = (faults.clusters_from_nu(ds.nu)
+                    if fc.blackout_len > 0 else None)
+        fault_state = faults.init_fault_state(fc, trace=trace,
+                                              clusters=clusters)
+    rf = make_round_fn(fl, loss_fn, {}, sc.availability(), base_p,
+                       fault_cfg=fc)
+    return fl, rf, params, ds, eval_fn, init_fn, fault_state
 
 
 def _cell_record(sc: Scenario, *, seeds, rounds, chunk_rounds, finals,
@@ -492,16 +582,17 @@ def run_scenario(sc: Scenario, *, seeds=4, rounds=24, chunk_rounds=8,
     record: per-seed final evals, their mean±std (``final``), mean±std
     metric curves (``curves``), and the raw per-seed ``histories``.
     """
-    fl, rf, params, ds, eval_fn, init_fn = _cell_task(
+    fl, rf, params, ds, eval_fn, init_fn, fault_state = _cell_task(
         sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
-        seed=seed, use_kernel=use_kernel)
+        seed=seed, use_kernel=use_kernel, rounds=rounds)
     K = min(int(chunk_rounds) or 8, int(rounds))
     states, histories, finals = run_multi_seed(
         fl, rf, params, ds, sampling=sc.sampling, batch=batch, seeds=seeds,
         rounds=rounds, chunk_rounds=K, rng=jax.random.PRNGKey(seed),
         data_key=jax.random.PRNGKey(seed + 1), eval_fn=eval_fn,
         eval_every=eval_every, log_every=log_every, mesh=mesh,
-        template_fn=init_fn if replicate == "full" else None)
+        template_fn=init_fn if replicate == "full" else None,
+        fault=fault_state)
     return _cell_record(sc, seeds=seeds, rounds=rounds, chunk_rounds=K,
                         finals=finals, histories=histories)
 
@@ -517,9 +608,9 @@ def build_cell(sc: Scenario, *, seeds, rounds, chunk_rounds, m, s, batch,
     fns, device store, and the stacked per-seed carry — without running
     it.  The returned dict is the unit ``pack_cells`` groups and
     ``run_packed_grid`` drives."""
-    fl, rf, params, ds, eval_fn, init_fn = _cell_task(
+    fl, rf, params, ds, eval_fn, init_fn, fault_state = _cell_task(
         sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
-        seed=seed, use_kernel=use_kernel)
+        seed=seed, use_kernel=use_kernel, rounds=rounds)
     store = ds.device_store()
     init_sampler, sample_fn = make_device_sampler(
         fl.m, fl.s, batch, mode=sc.sampling,
@@ -527,7 +618,8 @@ def build_cell(sc: Scenario, *, seeds, rounds, chunk_rounds, m, s, batch,
     states, sampler_states, data_keys = build_seed_batch(
         fl, params, jax.random.PRNGKey(seed), jax.random.PRNGKey(seed + 1),
         init_sampler, store, seeds,
-        template_fn=init_fn if replicate == "full" else None)
+        template_fn=init_fn if replicate == "full" else None,
+        fault=fault_state)
     K = min(int(chunk_rounds) or 8, int(rounds))
     return dict(sc=sc, fl=fl, round_fn=rf, sample_fn=sample_fn,
                 store=store, states=states, sampler_states=sampler_states,

@@ -45,6 +45,9 @@ def build_image_task(args, rng):
                                   alpha=args.alpha, min_per_client=args.batch)
     ds = FederatedDataset(dict(images=task.images, labels=task.labels), idx,
                           seed=args.seed)
+    # per-client label distributions ride along for the fault scenarios
+    # (nu-correlated availability, cluster blackouts — core/faults.py)
+    ds.nu = jnp.asarray(nu)
     base_p = base_probs_from_data(rng, jnp.asarray(nu))
 
     def init_fn(key):
@@ -77,6 +80,7 @@ def build_lm_task(args, rng):
                                   min_per_client=args.batch)
     ds = FederatedDataset(dict(tokens=tokens, labels=labels), idx,
                           seed=args.seed)
+    ds.nu = jnp.asarray(nu)
     base_p = base_probs_from_data(rng, jnp.asarray(nu))
 
     def init_fn(key):
@@ -169,12 +173,34 @@ def build_parser() -> argparse.ArgumentParser:
                          "the availability knobs from the registry; any "
                          "of those flags you pass explicitly still wins, "
                          "even when passed its default value")
+    ap.add_argument("--midround-drop", type=float, default=0.0,
+                    help="P(a computed update fails to upload) per client "
+                         "per round — mid-round dropout fault injection "
+                         "(core/faults.py); only delivered updates "
+                         "aggregate")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="demote clients with non-finite local updates to "
+                         "dropped for the round instead of poisoning the "
+                         "aggregate (adds n_dropped/n_rejected metrics)")
+    ap.add_argument("--norm-cap", type=float, default=0.0,
+                    help="with --sanitize: also reject updates with "
+                         "||G_i|| above this cap (0 = non-finite only)")
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="overwrite --ckpt every N rounds (chunk-aligned; "
                          "multi-seed runs checkpoint seed 0 at the end)")
+    ap.add_argument("--resume", default=None, metavar="PATH",
+                    help="RESUMABLE run artifact prefix "
+                         "(checkpointing.save_run_state writes PATH.npz + "
+                         "PATH.json holding the FLState AND the carried "
+                         "SamplerState): every --ckpt-every rounds the run "
+                         "overwrites the artifact, and when it already "
+                         "exists the run restores it and continues to "
+                         "--rounds instead of starting over; forces the "
+                         "device-sampler path (the sampler carry is part "
+                         "of the artifact)")
     return ap
 
 
@@ -213,34 +239,76 @@ def main(argv=None):
                                  kind=args.dynamics, gamma=args.gamma)
     else:
         av = AvailabilityCfg(kind=args.dynamics, gamma=args.gamma)
-    round_fn = make_round_fn(fl, loss_fn, {}, av, base_p)
+
+    # fault injection: the scenario cell's fault knobs, with the explicit
+    # CLI fault flags composed on top (CLI wins where passed)
+    from repro.core import faults
+    fault_cfg = scenario.fault() if scenario else None
+    if args.midround_drop or args.sanitize or args.norm_cap:
+        import dataclasses
+        fc0 = fault_cfg or faults.FaultCfg()
+        fault_cfg = dataclasses.replace(
+            fc0,
+            upload_survival=(1.0 - args.midround_drop if args.midround_drop
+                             else fc0.upload_survival),
+            sanitize=fc0.sanitize or args.sanitize or args.norm_cap > 0,
+            norm_cap=args.norm_cap or fc0.norm_cap)
+    fault_state = None
+    if fault_cfg is not None and fault_cfg.needs_state:
+        trace = (faults.diurnal_trace(jax.random.PRNGKey(args.seed + 2),
+                                      base_p, args.rounds)
+                 if fault_cfg.trace else None)
+        clusters = (faults.clusters_from_nu(ds.nu)
+                    if fault_cfg.blackout_len > 0 else None)
+        fault_state = faults.init_fault_state(fault_cfg, trace=trace,
+                                              clusters=clusters)
+    round_fn = make_round_fn(fl, loss_fn, {}, av, base_p,
+                             fault_cfg=fault_cfg)
 
     if args.seeds > 1:
         return _main_multi_seed(args, fl, round_fn, params, ds, eval_fn,
-                                rng, init_fn)
-    state = init_fl_state(rng, fl, params)
+                                rng, init_fn, fault_state)
+    state = init_fl_state(rng, fl, params, fault=fault_state)
 
     ckpt_fn = None
     if args.ckpt and args.ckpt_every:
         def ckpt_fn(st, t):
             save_fl_state(args.ckpt, st, round_t=t)
 
-    if args.chunk_rounds or args.sampling == "epoch":
+    if args.chunk_rounds or args.sampling == "epoch" or args.resume:
         # device sampler (always for the chunked executor; also for the
         # host loop under epoch sampling, whose carried cursor state lives
-        # on device): the dataset is resident and the SamplerState is
-        # threaded through whichever executor runs
+        # on device, and for --resume, whose artifact carries the sampler):
+        # the dataset is resident and the SamplerState is threaded through
+        # whichever executor runs
         store = ds.device_store()
-        init_fn, sample_fn = make_device_sampler(
+        init_sampler_fn, sample_fn = make_device_sampler(
             args.m, args.s, args.batch, mode=args.sampling,
             min_count=min(len(ix) for ix in ds.client_indices))
         data_key = jax.random.PRNGKey(args.seed + 1)
-        sampler_state = init_fn(store, data_key)
+        sampler_state = init_sampler_fn(store, data_key)
+        rounds_left = args.rounds
+        if args.resume:
+            from repro.checkpointing import restore_run_state, save_run_state
+            # save_pytree writes PATH.npz + PATH.json — --resume is the
+            # artifact PREFIX, so probe the manifest, not the bare path
+            if os.path.exists(args.resume + ".json"):
+                state, sampler_state = restore_run_state(
+                    args.resume, state, sampler_state)
+                done = int(state.t)
+                rounds_left = max(args.rounds - done, 0)
+                print(f"resumed {args.resume} at round {done}; "
+                      f"{rounds_left} to go")
+            if args.ckpt_every:
+                # 3-arg hook: engine._call_ckpt hands it the CARRIED
+                # sampler state, making the artifact resumable
+                def ckpt_fn(st, t, ss):
+                    save_run_state(args.resume, st, ss, round_t=t)
         state, hist = run_rounds(
-            state, round_fn, None, args.rounds,
+            state, round_fn, None, rounds_left,
             chunk_rounds=args.chunk_rounds, sample_fn=sample_fn,
             store=store, data_key=data_key, sampler_state=sampler_state,
-            log_every=max(1, args.rounds // 10),
+            log_every=max(1, rounds_left // 10),
             eval_fn=eval_fn, eval_every=args.eval_every,
             ckpt_fn=ckpt_fn, ckpt_every=args.ckpt_every)
     else:
@@ -264,7 +332,8 @@ def main(argv=None):
     return final
 
 
-def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng, init_fn):
+def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng, init_fn,
+                     fault_state=None):
     """``--seeds S > 1``: drive the vmapped multi-seed executor.
 
     Always chunked (``--chunk-rounds`` or K=8): one dispatch advances all
@@ -288,7 +357,8 @@ def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng, init_fn):
         chunk_rounds=args.chunk_rounds, rng=rng,
         data_key=jax.random.PRNGKey(args.seed + 1), eval_fn=eval_fn,
         eval_every=args.eval_every, log_every=max(1, args.rounds // 10),
-        template_fn=init_fn if args.replicate == "full" else None)
+        template_fn=init_fn if args.replicate == "full" else None,
+        fault=fault_state)
     final = analysis.seed_summary(finals)
     print("final (mean±std over seeds):", final)
     if args.out:

@@ -166,6 +166,17 @@ def flat_pspecs(mesh, state_sds, *, multi_pod=False):
             return P(ca)                 # per-client vector
         return P(*([None] * len(shape)))  # global [N] / scalars / rng
 
+    def fault_leaf(x):
+        # fault-injection carry (core/faults.py): the [T, m] replay trace
+        # shards its CLIENT (trailing) axis, [m] cluster labels follow tau
+        shape = tuple(int(d) for d in x.shape)
+        if shape == (m,):
+            return P(ca)
+        if len(shape) == 2 and shape[1] == m:
+            return P(None, ca)
+        return P(*([None] * len(shape)))
+
+    fault = getattr(state_sds, "fault", None)
     return type(state_sds)(
         global_tr=P(None),
         clients_tr=(None if state_sds.clients_tr is None
@@ -176,6 +187,7 @@ def flat_pspecs(mesh, state_sds, *, multi_pod=False):
         markov=P(ca),
         rng=P(None),
         spec=state_sds.spec,
+        fault=None if fault is None else jax.tree.map(fault_leaf, fault),
     )
 
 

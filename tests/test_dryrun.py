@@ -104,6 +104,25 @@ def test_mini_dryrun_flat_chunk_seeds_mesh_train(tmp_path):
 
 
 @pytest.mark.slow
+def test_mini_dryrun_flat_chunk_faults_train(tmp_path):
+    """flat_chunk + live fault injection (core/faults.py): the split
+    compute/upload masks, sanitization scrub, and the device-resident
+    [T, m] replay trace riding the donated scan carry all lower and
+    compile on the mini multi-pod mesh, and the executor still donates
+    and emits the gossip all-reduce."""
+    out = str(tmp_path / "dry.json")
+    r = _run_dryrun(["--arch", "tiny", "--shape", "train_4k",
+                     "--mesh", "multi", "--test-mesh",
+                     "--variant", "flat_chunk4+faults", "--out", out])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(out))[0]
+    assert rec["ok"] and rec["chunk_rounds"] == 4
+    assert rec["faults"] is True
+    assert rec["collectives"]["all-reduce"] > 0
+    assert rec["memory"]["alias_size_in_bytes"] > 0
+
+
+@pytest.mark.slow
 def test_mini_dryrun_decode_multi_pod(tmp_path):
     out = str(tmp_path / "dry.json")
     r = _run_dryrun(["--arch", "tiny", "--shape", "decode_32k",

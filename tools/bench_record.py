@@ -14,7 +14,7 @@ populated:
 measurement is compared row-by-row against the committed baseline (or
 ``--baseline PATH``) and the process exits non-zero when any row's
 us_per_call regressed by more than ``--threshold`` (default 25%) — so the
-rounds_per_sec/{host_loop,chunked,chunked_epoch,chunked_seeds[_mesh]}
+rounds_per_sec/{host_loop,chunked[_epoch|_faults],chunked_seeds[_mesh]}
 executor numbers and the kernel micro-benches are guarded.  Thresholds are
 ratio-based against the committed number and the bench itself is
 min-of-reps, because container wall-clock is 2-3x noisy — never gate on
@@ -89,6 +89,7 @@ REQUIRED_ROWS = (
     "rounds_per_sec/chunked_seeds",
     "rounds_per_sec/chunked_seeds_seq",
     "rounds_per_sec/chunked_seeds_mesh",
+    "rounds_per_sec/chunked_faults",
 )
 
 
