@@ -96,14 +96,19 @@ def _bench_round_executor(quick):
     shardings threaded through its jit (chunked_seeds_mesh), plus the
     chunked executor with fault injection live (chunked_faults: the
     mid-round dropout draw + sanitization norm scan of core/faults.py in
-    every round — its cost shows up directly against the chunked row).
+    every round — its cost shows up directly against the chunked row),
+    plus the chunked executor with semi-async rounds live
+    (chunked_staleness: core/staleness.py's busy gating, [tau_max, m, N]
+    pending ring buffer in the donated carry, and delivery re-weighting
+    in every round).
     us_per_call is per wall-clock ROUND; derived is rounds/sec — except
     the chunked_seeds[_mesh] rows, whose derived is the speedup of the
     one S-batched dispatch stream over the S sequential runs
     (chunked_seeds_seq time / row time; > 1 = batching the seed axis
     wins)."""
     from repro.core import (AvailabilityCfg, FaultCfg, FLConfig,
-                            init_fl_state, make_round_fn, run_rounds)
+                            StalenessCfg, init_fl_state, make_round_fn,
+                            run_rounds)
     from repro.data import FederatedDataset, make_device_sampler
 
     # many clients, tiny model: the regime the chunked executor targets —
@@ -135,13 +140,23 @@ def _bench_round_executor(quick):
     base_p = jnp.full((m,), 0.6, jnp.float32)
     data_key = jax.random.PRNGKey(7)
 
-    def make_exec(flat, chunked, sampling="uniform", fault_cfg=None):
+    def make_exec(flat, chunked, sampling="uniform", fault_cfg=None,
+                  staleness_cfg=None):
         from repro.core import make_chunk_fn
 
         cfg = FLConfig(m=m, s=s, eta_l=0.05, strategy="fedawe",
                        lr_schedule=False, grad_clip=0.0, flat_state=flat)
         rf = make_round_fn(cfg, loss_fn, {}, av, base_p,
-                           fault_cfg=fault_cfg)
+                           fault_cfg=fault_cfg,
+                           staleness_cfg=staleness_cfg)
+        def make_stale():
+            # fresh per run: the donated chunk dispatch consumes the
+            # buffer arrays, so they cannot be shared across reps
+            if staleness_cfg is None or not staleness_cfg.needs_state:
+                return None
+            from repro.core import FlatSpec, init_staleness_state
+            return init_staleness_state(
+                staleness_cfg, FlatSpec.from_tree(tr0).size, m)
         # every bench client holds exactly n // m samples; the static
         # min_count hint keeps the epoch mode's per-round reshuffle stack
         # at its true size instead of the 1-sample worst case
@@ -157,7 +172,8 @@ def _bench_round_executor(quick):
                     for k, v in ds.round_batches(t, s, b).items()}
 
         def once(rounds):
-            state = init_fl_state(jax.random.PRNGKey(0), cfg, tr0)
+            state = init_fl_state(jax.random.PRNGKey(0), cfg, tr0,
+                                  stale=make_stale())
             if chunked:
                 return run_rounds(state, rf, None, rounds, chunk_rounds=K,
                                   chunk_fn=chunk_fn, sample_fn=sample_fn,
@@ -249,6 +265,12 @@ def _bench_round_executor(quick):
         "chunked_faults": make_exec(
             True, chunked=True,
             fault_cfg=FaultCfg(upload_survival=0.9, sanitize=True)),
+        # semi-async rounds live: busy gating, the [tau_max, m, N] pending
+        # ring buffer in the donated carry, and delivery re-weighting in
+        # the chunked scan body — its cost shows against the chunked row
+        "chunked_staleness": make_exec(
+            True, chunked=True,
+            staleness_cfg=StalenessCfg(tau_max=2, kind="det", delay=1)),
     }
     for once in execs.values():
         once(K)                        # warmup: compile round/chunk

@@ -1,35 +1,57 @@
-"""Table 8: first round to reach fractions of the best test accuracy under
-the sine dynamics (staleness study of implicit gossiping). Reuses the cached
-histories from table2_comparison. derived = first round reaching 3/4 of the
-best accuracy (0 = never)."""
+"""Table 8: staleness study — rounds to reach 3/4 of the sweep-best test
+accuracy as the semi-async delay bound tau_max grows (core/staleness.py,
+det delay = tau_max: every straggler pays the worst-case bounded delay).
+
+Each sweep point is a real multi-seed run of the semi-async engine under
+the sine dynamics (run_scenario on an unregistered cell). us_per_call is
+wall-clock per round per seed; derived = first evaluated round whose
+mean test accuracy reaches 0.75 * the best final accuracy seen anywhere
+in the sweep (0 = never reached). tau_max=0 is the synchronous baseline
+row the delayed rows degrade from."""
 from __future__ import annotations
 
-import json
-import os
+import time
 
-from benchmarks.table2_comparison import ALGOS, CACHE
+TAUS = (0, 1, 2, 4)
 
 
 def run(quick=False):
-    if not os.path.exists(CACHE):
-        from benchmarks import table2_comparison
+    from repro.launch.experiments import Scenario, run_scenario
 
-        table2_comparison.run(quick=quick)
-    with open(CACHE) as f:
-        cache = json.load(f)
-    dyn = "sine"
-    best = max(v["test"] for k, v in cache.items()
-               if k.startswith(dyn + "/"))
+    rounds = 24 if quick else 96
+    seeds = 2 if quick else 4
+    n_samples = 800 if quick else 4000
+    eval_every = max(4, rounds // 8)
+    recs = {}
+    for tau in TAUS:
+        sc = Scenario(name=f"bench/stale_tau{tau}", strategy="fedawe",
+                      kind="sine", stale_max=tau, stale_kind="det",
+                      stale_delay=max(tau, 1),
+                      note="table8 staleness sweep point")
+        t0 = time.time()
+        rec = run_scenario(sc, seeds=seeds, rounds=rounds,
+                           chunk_rounds=min(8, rounds), m=16, s=3, batch=8,
+                           n_samples=n_samples, preset="image", seed=0,
+                           eval_every=eval_every)
+        recs[tau] = (rec, (time.time() - t0) / (rounds * seeds) * 1e6)
+
+    def curve(rec):
+        """Mean test-accuracy curve over seeds: [(t, acc), ...]."""
+        pts = {}
+        for hist in rec["histories"]:
+            for row in hist:
+                if "eval_acc" in row:
+                    pts.setdefault(row["t"], []).append(row["eval_acc"])
+        return sorted((t, sum(v) / len(v)) for t, v in pts.items())
+
+    best = max(rec["final"]["eval_acc"]["mean"] for rec, _ in recs.values())
+    target = 0.75 * best
     rows = []
-    for algo in ALGOS:
-        key = f"{dyn}/{algo}"
-        if key not in cache:
-            continue
-        target = 0.75 * best
+    for tau, (rec, us) in recs.items():
         first = 0
-        for t, acc in cache[key]["hist"]:
+        for t, acc in curve(rec):
             if acc >= target:
                 first = t
                 break
-        rows.append((f"table8/{dyn}/{algo}", 0.0, first))
+        rows.append((f"table8/stale_tau{tau}", round(us, 1), first))
     return rows

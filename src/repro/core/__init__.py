@@ -25,4 +25,9 @@ from repro.core.faults import (  # noqa: F401
     init_fault_state,
 )
 from repro.core.flatten import FlatSpec  # noqa: F401
+from repro.core.staleness import (  # noqa: F401
+    StalenessCfg,
+    init_staleness_state,
+    staircase_delay_trace,
+)
 from repro.core.strategies import REGISTRY, get_strategy  # noqa: F401

@@ -106,10 +106,13 @@ class FLState(NamedTuple):
     spec: Any = None            # FlatSpec (static treedef metadata) or None
     fault: Any = None           # fault-injection carry (core/faults.py):
                                 # [T, m] trace / [m] cluster labels, or None
+    stale: Any = None           # semi-async carry (core/staleness.py):
+                                # [tau_max, m, N] pending-update ring buffer
+                                # + [tau_max, m] ages (+ delay trace), or None
 
 
 def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
-                  clients_sharding=None, fault=None) -> FLState:
+                  clients_sharding=None, fault=None, stale=None) -> FLState:
     """``clients_sharding`` (a ``jax.sharding.Sharding``) places every
     ``[m, N]`` buffer — the client stack and model-shaped strategy memory —
     on its final sharding at birth (compiled broadcast straight into the
@@ -117,7 +120,10 @@ def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
     ``fault`` is the fault-injection carry from
     ``faults.init_fault_state`` (a ``[T, m]`` replay trace and/or ``[m]``
     cluster labels, or None) — read-only state that rides the donated
-    scan carry like the markov state does."""
+    scan carry like the markov state does.  ``stale`` is the semi-async
+    carry from ``staleness.init_staleness_state`` (the ``[tau_max, m, N]``
+    pending-update ring buffer + ``[tau_max, m]`` ages, or None) — a
+    READ-WRITE carry the round function advances every round."""
     strat = get_strategy(cfg.strategy)
     tau = jnp.full((cfg.m,), -1, jnp.int32)
     markov = jnp.ones((cfg.m,), jnp.float32)
@@ -153,7 +159,7 @@ def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
         else:
             extra = strat.init_extra(g, cfg.m)
         return FLState(g, clients, tau, jnp.zeros((), jnp.int32), extra,
-                       markov, rng, spec, fault)
+                       markov, rng, spec, fault, stale)
     clients = tu.tree_broadcast(trainable_template, cfg.m)
     extra = strat.init_extra(trainable_template, cfg.m)
     return FLState(
@@ -168,6 +174,7 @@ def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
         markov=markov,
         rng=rng,
         fault=fault,
+        stale=stale,
     )
 
 
@@ -221,7 +228,8 @@ def local_sgd(trainable, frozen, batches, rng, *, s, eta_l, loss_fn,
 
 
 def make_round_fn(cfg: FLConfig, loss_fn: Callable, frozen: Any,
-                  avail_cfg: AvailabilityCfg, base_p, fault_cfg=None):
+                  avail_cfg: AvailabilityCfg, base_p, fault_cfg=None,
+                  staleness_cfg=None):
     """Build the jittable round function (frozen params closed over —
     fine when frozen is empty/small; the pod tier uses
     make_round_fn_with_frozen so FSDP-sharded bases stay runtime args).
@@ -230,7 +238,8 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, frozen: Any,
     Returned fn: (state, batches[m, s, ...]) -> (state, metrics).
     """
     inner = make_round_fn_with_frozen(cfg, loss_fn, avail_cfg, base_p,
-                                      fault_cfg=fault_cfg)
+                                      fault_cfg=fault_cfg,
+                                      staleness_cfg=staleness_cfg)
 
     def round_fn(state: FLState, batches):
         return inner(state, frozen, batches)
@@ -240,7 +249,7 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, frozen: Any,
 
 def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
                               avail_cfg: AvailabilityCfg, base_p,
-                              fault_cfg=None):
+                              fault_cfg=None, staleness_cfg=None):
     """Variant taking frozen params as a runtime argument:
     (state, frozen, batches) -> (state, metrics).
 
@@ -252,23 +261,52 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
     τ, or advance participation estimates; the metrics dict grows
     ``n_dropped`` / ``n_rejected`` per round.  ``fault_cfg=None`` is
     byte-identical to the fault-free engine (same rng split count, same
-    metrics keys)."""
+    metrics keys).
+
+    ``staleness_cfg`` (a ``staleness.StalenessCfg``, flat substrate only)
+    makes rounds semi-asynchronous: a client available at round ``t``
+    computes on the model it holds but its update arrives at ``t + d``
+    (``d <= tau_max`` drawn from the configured delay dynamics) through
+    the ``FLState.stale`` pending-update ring buffer.  A client with an
+    in-flight update is busy — unavailable to compute — until it
+    delivers, which bounds every delivery to exactly its drawn delay.
+    Arrivals aggregate with discount ``gamma ** d`` and the fault layer
+    applies at DELIVERY time (a straggler's update can still drop
+    mid-round or fail sanitization when it lands); the metrics dict grows
+    ``n_stale`` / ``mean_staleness`` per round.  ``staleness_cfg=None``
+    — or ``tau_max = 0``, normalized to None here — is byte-identical to
+    the synchronous engine."""
     strat = get_strategy(cfg.strategy)
     if fault_cfg is not None:
         from repro.core import faults as _faults
+    if staleness_cfg is not None and staleness_cfg.tau_max == 0:
+        # tau_max = 0 IS the synchronous engine: normalize so the build is
+        # byte-identical (same rng split count, same metrics keys)
+        staleness_cfg = None
+    if staleness_cfg is not None:
+        assert cfg.flat_state, \
+            "staleness_cfg needs the flat [m, N] substrate (flat_state)"
+        from repro.core import staleness as _stale
 
     def round_fn(state: FLState, frozen, batches):
-        if fault_cfg is None:
-            rng, k_av, k_loc = jax.random.split(state.rng, 3)
-            k_up = None
-        else:
-            rng, k_av, k_loc, k_up = jax.random.split(state.rng, 4)
+        n_keys = 3 + (fault_cfg is not None) + (staleness_cfg is not None)
+        keys = jax.random.split(state.rng, n_keys)
+        rng, k_av, k_loc = keys[0], keys[1], keys[2]
+        k_up = keys[3] if fault_cfg is not None else None
+        k_delay = keys[-1] if staleness_cfg is not None else None
         mask, markov = sample_active(k_av, avail_cfg, base_p, state.t,
                                      state.markov)
         probs_t = probs_at(avail_cfg, base_p, state.t)
         if fault_cfg is not None:
             mask = _faults.compute_mask(fault_cfg, state.fault, mask,
                                         state.t)
+        if staleness_cfg is not None:
+            # arrivals due this round, then busy gating: an in-flight
+            # client (including one landing now) does not compute at t
+            arrived, arr_age, arr_buf = _stale.drain(state.stale, state.t)
+            mask = mask * (1.0 - _stale.busy_mask(state.stale))
+            delay = _stale.draw_delay(staleness_cfg, state.stale, k_delay,
+                                      state.t, cfg.m)
 
         eta_l = cfg.eta_l
         if cfg.lr_schedule:
@@ -289,22 +327,53 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
 
             x_end, losses = jax.vmap(local)(start, batches, loc_rngs)
             G = start - x_end
+            if staleness_cfg is not None:
+                # delivery candidates: synchronous computes (drawn d = 0)
+                # plus ring-buffer arrivals — disjoint sets, since an
+                # arriving client was busy and did not compute this round
+                now = mask * (delay == 0).astype(jnp.float32)
+                defer = mask * (delay > 0).astype(jnp.float32)
+                deliver = now + arrived
+                G_eff = jnp.where(arrived[:, None] > 0, arr_buf,
+                                  jnp.where(now[:, None] > 0, G, 0.0))
+                x_end_eff = jnp.where(arrived[:, None] > 0,
+                                      start - arr_buf, x_end)
+                age_eff = jnp.where(arrived > 0, arr_age, 0.0)
+            else:
+                deliver, G_eff, x_end_eff = mask, G, x_end
             mask_upload = None
             if fault_cfg is not None:
+                # under staleness the fault layer acts at DELIVERY time: a
+                # stale arrival can still drop mid-round or fail
+                # sanitization when it lands
                 mask_upload, n_dropped, n_rejected = _faults.upload_mask(
-                    fault_cfg, k_up, mask, G)
+                    fault_cfg, k_up, deliver, G_eff)
                 if fault_cfg.sanitize:
                     # scrub demoted rows: a 0-weighted NaN still poisons a
                     # w·G reduction (0 * NaN = NaN), so rejected clients'
                     # rows must hold finite values, not just zero weight
                     keep = mask_upload[:, None] > 0
-                    x_end = jnp.where(keep, x_end, start)
-                    G = jnp.where(keep, G, 0.0)
+                    x_end_eff = jnp.where(keep, x_end_eff, start)
+                    G_eff = jnp.where(keep, G_eff, 0.0)
+            if staleness_cfg is not None:
+                mu0 = deliver if mask_upload is None else mask_upload
+                w_disc = mu0 if staleness_cfg.gamma >= 1.0 else \
+                    mu0 * jnp.power(jnp.float32(staleness_cfg.gamma),
+                                    age_eff)
+                agg_mask, agg_kwargs = mu0, dict(mask_upload=w_disc,
+                                                 ages=age_eff)
+            else:
+                agg_mask, agg_kwargs = mask, dict(mask_upload=mask_upload)
             new_global, new_clients, new_tau, new_extra = strat.aggregate_flat(
-                global_flat=state.global_tr, clients_flat=start, x_end=x_end,
-                G=G, mask=mask, t=state.t, tau=state.tau, probs=probs_t,
-                extra=state.extra, eta_g=cfg.eta_g, use_kernel=cfg.use_kernel,
-                mask_upload=mask_upload)
+                global_flat=state.global_tr, clients_flat=start,
+                x_end=x_end_eff, G=G_eff, mask=agg_mask, t=state.t,
+                tau=state.tau, probs=probs_t, extra=state.extra,
+                eta_g=cfg.eta_g, use_kernel=cfg.use_kernel, **agg_kwargs)
+            if staleness_cfg is not None:
+                # raw (unsanitized, undiscounted) innovations enter the
+                # ring; faults and the gamma discount apply at delivery
+                new_stale = _stale.step_buffer(state.stale, state.t, defer,
+                                               delay, G)
         else:
             start = state.clients_tr if strat.stateful_clients else \
                 tu.tree_broadcast(state.global_tr, cfg.m)
@@ -334,7 +403,26 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
                 eta_g=cfg.eta_g, use_kernel=cfg.use_kernel, x_end=x_end,
                 mask_upload=mask_upload)
 
-        if fault_cfg is None:
+        if staleness_cfg is not None:
+            # loss/n_active describe who COMPUTED this round; the delivery
+            # side (mean_echo over delivered, n_stale arrivals due,
+            # mean_staleness of what aggregated) gets its own keys
+            den_mu = jnp.maximum(jnp.sum(mu0), 1.0)
+            safe = losses if fault_cfg is None else \
+                jnp.where(jnp.isfinite(losses), losses, 0.0)
+            metrics = dict(
+                loss=jnp.sum(safe * mask)
+                / jnp.maximum(jnp.sum(mask), 1.0),
+                n_active=jnp.sum(mask),
+                mean_echo=jnp.sum(
+                    (state.t - state.tau).astype(jnp.float32) * mu0)
+                / den_mu,
+                n_stale=jnp.sum(arrived),
+                mean_staleness=jnp.sum(age_eff * mu0) / den_mu,
+            )
+            if fault_cfg is not None:
+                metrics.update(n_dropped=n_dropped, n_rejected=n_rejected)
+        elif fault_cfg is None:
             metrics = dict(
                 loss=jnp.sum(losses * mask)
                 / jnp.maximum(jnp.sum(mask), 1.0),
@@ -361,6 +449,8 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
         new_state = state._replace(
             global_tr=new_global, clients_tr=new_clients, tau=new_tau,
             t=state.t + 1, extra=new_extra, markov=markov, rng=rng)
+        if staleness_cfg is not None:
+            new_state = new_state._replace(stale=new_stale)
         return new_state, metrics
 
     return round_fn

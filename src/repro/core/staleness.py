@@ -1,0 +1,204 @@
+"""Semi-asynchronous rounds: straggler/staleness as an executor dimension.
+
+The availability processes (``core/availability.py``) and the fault layer
+(``core/faults.py``) both keep the paper's synchronous round shape: a
+client either contributes *this* round or not at all.  Real deployments
+degrade more gently (FedAR, Jiang et al. 2024; Ribero et al. 2022): a
+straggler computes on the model it was handed at round ``t`` but its
+update only reaches the server at round ``t + d``.  This module splits
+availability into "available to COMPUTE at t" and "uploads at t + d" with
+configurable delay dynamics, all bounded by ``tau_max``:
+
+  * **bounded-delay ring buffer** — pending innovations live in a
+    device-resident ``{"buf": [tau_max, m, N], "ages": [tau_max, m]}``
+    carry (``FLState.stale``) indexed by DUE round modulo ``tau_max``:
+    round ``t`` drains slot ``t % tau_max``, a client computing now with
+    drawn delay ``d >= 1`` inserts at slot ``(t + d) % tau_max`` (after
+    the drain, so ``d = tau_max`` reuses the just-freed slot).  ``ages``
+    stores the original delay ``d`` (0 = empty slot), which is both the
+    occupancy mask and the staleness weight at delivery.  The dict rides
+    the donated scan carry exactly like ``FLState.fault``, so staleness
+    works bit-exactly through the host-loop, chunked, seeds and packed
+    executors.
+  * **busy gating** — a client with an in-flight update is not available
+    to compute again until it delivers.  This is the realistic device
+    semantics (the straggler is still crunching) and what makes the delay
+    bound a *guarantee*: each client holds at most one pending update,
+    and every computed update is delivered after exactly its drawn
+    ``d <= tau_max`` rounds (or demoted to dropped/rejected at delivery
+    by the fault layer — never silently lost).
+  * **delay dynamics** — ``kind="det"`` (every straggler takes ``delay``
+    rounds), ``"geom"`` (geometric with per-round arrival probability
+    ``p_next``, clipped to ``tau_max``), ``"trace"`` (a ``[T, m]``
+    recorded delay trace replayed by row ``t % T``, clipped to
+    ``tau_max``).
+  * **staleness-discounted delivery** — an arrival from round ``t − d``
+    aggregates with weight ``gamma ** d`` (``gamma = 1`` keeps plain
+    0/1 delivery weights); the per-delivery ages also reach the strategy
+    (``aggregate_flat(..., ages=...)``) so rectification baselines like
+    ``fedar`` can correct their memory by actual staleness.
+
+Everything here is pure and jit-safe; ``StalenessCfg`` is frozen/hashable
+and closed over by the round function exactly like ``FaultCfg``.  A
+``staleness_cfg`` of None — or ``tau_max = 0``, which the engine
+normalizes to None — keeps the engine byte-identical to the synchronous
+build (same rng split count, same metrics keys).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_KINDS = ("det", "geom", "trace")
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessCfg:
+    """Static semi-async config (hashable; closed over by the jitted round
+    function — changing any field retraces).
+
+    ``tau_max`` bounds every delay (ring-buffer depth; 0 disables the
+    substrate entirely).  ``kind`` picks the delay dynamics: ``"det"``
+    draws ``delay`` for every computing client, ``"geom"`` draws from a
+    geometric with per-round arrival probability ``p_next``, ``"trace"``
+    replays ``FLState.stale["dtrace"]`` row ``t % T``.  All draws clip to
+    ``[0, tau_max]``; ``d = 0`` delivers synchronously.  ``gamma`` is the
+    staleness discount base: a delivery aged ``d`` aggregates with weight
+    ``gamma ** d``."""
+    tau_max: int = 0
+    kind: str = "det"
+    delay: int = 1
+    p_next: float = 0.5
+    gamma: float = 1.0
+
+    def __post_init__(self):
+        assert self.tau_max >= 0, self.tau_max
+        assert self.kind in _KINDS, self.kind
+        assert 0 <= self.delay, self.delay
+        assert 0.0 < self.p_next <= 1.0, self.p_next
+        assert 0.0 < self.gamma <= 1.0, self.gamma
+
+    @property
+    def needs_state(self) -> bool:
+        """The ring buffer is required whenever the substrate is on."""
+        return self.tau_max > 0
+
+
+def init_staleness_state(cfg: StalenessCfg | None, n: int, m: int, *,
+                         dtrace=None):
+    """Build the ``FLState.stale`` pytree (or None when the substrate is
+    off).
+
+    ``n`` is the flat model size (``FlatSpec.size``) — staleness runs on
+    the flat substrate, where a pending innovation is one ``[N]`` row.
+    ``buf`` is ``[tau_max, m, N]`` pending innovations, ``ages`` is
+    ``[tau_max, m]`` with the original delay ``d`` of the occupant (0 =
+    empty).  ``dtrace`` (``[T, m]``, required for ``kind="trace"``) is a
+    recorded per-client delay trace; see ``staircase_delay_trace``.  The
+    dict rides the donated scan carry like ``FLState.fault``, and
+    ``sharding/rules.flat_pspecs`` shards its client dimension over the
+    client mesh axes."""
+    if cfg is None or not cfg.needs_state:
+        return None
+    st = {
+        "buf": jnp.zeros((cfg.tau_max, m, n), jnp.float32),
+        "ages": jnp.zeros((cfg.tau_max, m), jnp.float32),
+    }
+    if cfg.kind == "trace":
+        assert dtrace is not None, \
+            'kind="trace" needs a [T, m] per-client delay trace'
+        tr = jnp.asarray(dtrace, jnp.float32)
+        assert tr.ndim == 2, tr.shape
+        st["dtrace"] = tr
+    return st
+
+
+def draw_delay(cfg: StalenessCfg, stale_state, rng, t, m):
+    """Per-client upload delay for updates computed at round ``t``:
+    ``[m]`` int32 in ``[0, tau_max]``.  The rng is consumed for every
+    kind (the engine splits one ``k_delay`` key whenever the substrate is
+    on), keeping the other streams aligned across delay dynamics."""
+    if cfg.kind == "det":
+        d = jnp.full((m,), cfg.delay, jnp.int32)
+    elif cfg.kind == "geom":
+        # failures-before-first-success with P(arrive next round) = p_next:
+        # d = 1 + floor(log(1 - u) / log(1 - p_next)); p_next = 1 -> d = 1
+        u = jax.random.uniform(rng, (m,))
+        if cfg.p_next >= 1.0:
+            d = jnp.ones((m,), jnp.int32)
+        else:
+            q = jnp.log1p(-jnp.float32(cfg.p_next))
+            d = 1 + jnp.floor(jnp.log1p(-u) / q).astype(jnp.int32)
+    else:  # trace
+        tr = stale_state["dtrace"]
+        row = jnp.mod(jnp.asarray(t, jnp.int32), tr.shape[0])
+        d = jax.lax.dynamic_index_in_dim(tr, row,
+                                         keepdims=False).astype(jnp.int32)
+    return jnp.clip(d, 0, cfg.tau_max)
+
+
+def busy_mask(stale_state):
+    """``[m]`` f32: 1 where the client has an in-flight update (any
+    occupied ring slot) — unavailable to compute until it delivers."""
+    return (jnp.max(stale_state["ages"], axis=0) > 0).astype(jnp.float32)
+
+
+def drain(stale_state, t):
+    """Arrivals due at round ``t``: slot ``t % tau_max``.
+
+    Returns ``(arrived [m] f32, arr_age [m] f32, arr_buf [m, N])`` —
+    ``arr_age`` holds the original delay ``d`` of each arrival (0 where
+    none)."""
+    tau_max = stale_state["ages"].shape[0]
+    k0 = jnp.mod(jnp.asarray(t, jnp.int32), tau_max)
+    arr_age = jax.lax.dynamic_index_in_dim(stale_state["ages"], k0,
+                                           keepdims=False)
+    arr_buf = jax.lax.dynamic_index_in_dim(stale_state["buf"], k0,
+                                           keepdims=False)
+    arrived = (arr_age > 0).astype(jnp.float32)
+    return arrived, arr_age, arr_buf
+
+
+def step_buffer(stale_state, t, defer, d, G):
+    """One round of ring-buffer bookkeeping: clear the drained slot
+    ``t % tau_max``, then insert the deferred innovations (``defer`` [m]
+    0/1, drawn delay ``d`` [m] int32 >= 1 where deferred) at their DUE
+    slots ``(t + d) % tau_max``.
+
+    All updates are ``jnp.where`` selections, never multiplies: a
+    non-finite deferred row stays confined to its own slot and is only
+    ever *selected* at its delivery round (where the fault layer's
+    sanitization can still demote it) — it cannot poison neighbours."""
+    tau_max = stale_state["ages"].shape[0]
+    ages, buf = stale_state["ages"], stale_state["buf"]
+    slots = jnp.arange(tau_max, dtype=jnp.int32)[:, None]     # [tau_max, 1]
+    k0 = jnp.mod(jnp.asarray(t, jnp.int32), tau_max)
+    ages = jnp.where(slots == k0, 0.0, ages)
+    due = jnp.mod(jnp.asarray(t, jnp.int32) + d, tau_max)     # [m]
+    put = (slots == due[None, :]) & (defer[None, :] > 0)      # [tau_max, m]
+    ages = jnp.where(put, d[None, :].astype(jnp.float32), ages)
+    buf = jnp.where(put[..., None], G[None], buf)
+    new = dict(stale_state, ages=ages, buf=buf)
+    return new
+
+
+def pending_count(stale_state):
+    """Number of in-flight updates (occupied ring slots) — the
+    conservation-law complement: over a run, sum(n_active) ==
+    sum(deliveries) + pending_count(final state) when no fault layer
+    drops at delivery."""
+    return jnp.sum((stale_state["ages"] > 0).astype(jnp.float32))
+
+
+def staircase_delay_trace(rng, m, T, *, levels=(1, 2, 4), period=8):
+    """A recorded-style per-client delay trace: ``[T, m]`` int delays
+    cycling through ``levels`` every ``period`` rounds, with a per-client
+    phase offset — the stand-in for measured straggler profiles, replayed
+    bit-exactly via ``StalenessCfg(kind="trace")``."""
+    phase = jax.random.randint(rng, (m,), 0, period)
+    tt = jnp.arange(T, dtype=jnp.int32)[:, None] + phase[None, :]
+    idx = jnp.mod(tt // period, len(levels))
+    lv = jnp.asarray(levels, jnp.int32)
+    return lv[idx].astype(jnp.float32)

@@ -27,7 +27,17 @@ Every strategy carries two aggregation paths:
 All math follows the cited papers: FedAWE Alg. 1; FedAU (Wang & Ji 2024,
 interval-estimate reweighting with cutoff K); F3AST (Ribero et al., EMA rate
 estimates); MIFA (Gu et al. 2021); FedVARP (Jhunjhunwala et al. 2022);
-known-p importance weighting (Perazzone et al. 2022).
+known-p importance weighting (Perazzone et al. 2022); FedAR (Jiang et al.
+2024, arXiv:2407.19103 — local-update approximation with staleness
+rectification, the semi-async baseline).
+
+Under the semi-async substrate (core/staleness.py) the engine passes two
+extra signals: ``mask_upload`` becomes the staleness-DISCOUNTED delivery
+weights (``gamma ** d`` per arrival) and ``ages`` carries each delivered
+update's age in rounds (0 for synchronous deliveries, None when the
+substrate is off).  The nine synchronous strategies consume the weights
+through their ordinary ``mu`` path and ignore ``ages``; ``fedar`` uses
+``ages`` to rectify its per-client update cache at delivery.
 """
 from __future__ import annotations
 
@@ -74,7 +84,7 @@ def _fedawe_init(template, m):
 
 def _fedawe_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
                       extra, eta_g, use_kernel=False, x_end=None,
-                      mask_upload=None):
+                      mask_upload=None, ages=None):
     """Adaptive innovation echoing + implicit gossiping.
 
     x_i^† = x_i − η_g (t − τ_i) G_i            (echo, active clients)
@@ -116,7 +126,7 @@ def _fedawe_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
 
 def _fedawe_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
                            tau, probs, extra, eta_g, use_kernel=False,
-                           mask_upload=None):
+                           mask_upload=None, ages=None):
     """Flat-substrate FedAWE: the whole server update is one [m, N] sweep
     (a single pallas_call on the kernel path)."""
     mu = mask if mask_upload is None else mask_upload
@@ -162,7 +172,7 @@ def _mk_weighted_fedavg(weight_fn, name, uses_true_probs=False):
             else jnp.float32(mask.shape[0])
 
     def agg(*, global_tr, clients_tr, G, mask, t, tau, probs, extra, eta_g,
-            use_kernel=False, x_end=None, mask_upload=None):
+            use_kernel=False, x_end=None, mask_upload=None, ages=None):
         mu = mask if mask_upload is None else mask_upload
         w = weight_fn(mu, probs) * mu  # [m]
         upd = jax.tree.map(
@@ -177,7 +187,7 @@ def _mk_weighted_fedavg(weight_fn, name, uses_true_probs=False):
         return new_global, new_clients, new_tau, extra
 
     def agg_flat(*, global_flat, clients_flat, x_end, G, mask, t, tau, probs,
-                 extra, eta_g, use_kernel=False, mask_upload=None):
+                 extra, eta_g, use_kernel=False, mask_upload=None, ages=None):
         mu = mask if mask_upload is None else mask_upload
         w = weight_fn(mu, probs) * mu
         new_global = global_flat - eta_g * flat_weighted_sum(w, G) / _denom(mu)
@@ -227,7 +237,7 @@ def _fedau_weights(mask, extra):
 
 
 def _fedau_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
-                     eta_g, use_kernel=False, x_end=None, mask_upload=None):
+                     eta_g, use_kernel=False, x_end=None, mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     w, new_extra = _fedau_weights(mu, extra)
     m = jnp.float32(mu.shape[0])
@@ -243,7 +253,7 @@ def _fedau_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
 
 def _fedau_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
                           tau, probs, extra, eta_g, use_kernel=False,
-                          mask_upload=None):
+                          mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     w, new_extra = _fedau_weights(mu, extra)
     m = jnp.float32(mu.shape[0])
@@ -270,7 +280,7 @@ def _f3ast_weights(mask, extra):
 
 
 def _f3ast_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
-                     eta_g, use_kernel=False, x_end=None, mask_upload=None):
+                     eta_g, use_kernel=False, x_end=None, mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     w, new_extra = _f3ast_weights(mu, extra)
     m = jnp.float32(mu.shape[0])
@@ -286,7 +296,7 @@ def _f3ast_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
 
 def _f3ast_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
                           tau, probs, extra, eta_g, use_kernel=False,
-                          mask_upload=None):
+                          mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     w, new_extra = _f3ast_weights(mu, extra)
     m = jnp.float32(mu.shape[0])
@@ -307,7 +317,7 @@ def _mifa_init(template, m):
 
 
 def _mifa_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
-                    eta_g, use_kernel=False, x_end=None, mask_upload=None):
+                    eta_g, use_kernel=False, x_end=None, mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     mem = tu.tree_select(mu, G, extra["mem"])
     upd = tu.tree_mean(mem)
@@ -321,7 +331,7 @@ def _mifa_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
 
 def _mifa_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
                          tau, probs, extra, eta_g, use_kernel=False,
-                         mask_upload=None):
+                         mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     mem = jnp.where(mu[:, None] > 0, G, extra["mem"])  # [m, N] memory
     m = jnp.float32(mu.shape[0])
@@ -344,7 +354,7 @@ def _fedvarp_init(template, m):
 
 def _fedvarp_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
                        extra, eta_g, use_kernel=False, x_end=None,
-                       mask_upload=None):
+                       mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     y = extra["y"]
     diff_mean = tu.tree_masked_mean(tu.tree_sub(G, y), mu)
@@ -362,7 +372,7 @@ def _fedvarp_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
 
 def _fedvarp_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
                             tau, probs, extra, eta_g, use_kernel=False,
-                            mask_upload=None):
+                            mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     y = extra["y"]  # [m, N]
     denom = jnp.maximum(jnp.sum(mu), 1.0)
@@ -392,7 +402,7 @@ def _fedawe_m_init(template, m, beta=0.9):
 
 def _fedawe_m_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
                         extra, eta_g, use_kernel=False, x_end=None,
-                        mask_upload=None):
+                        mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     gossip, _, new_tau, _ = _fedawe_aggregate(
         global_tr=global_tr, clients_tr=clients_tr, G=G, mask=mask, t=t,
@@ -415,7 +425,7 @@ def _fedawe_m_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs,
 
 def _fedawe_m_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
                              tau, probs, extra, eta_g, use_kernel=False,
-                             mask_upload=None):
+                             mask_upload=None, ages=None):
     mu = mask if mask_upload is None else mask_upload
     gossip, _, new_tau, _ = _fedawe_aggregate_flat(
         global_flat=global_flat, clients_flat=clients_flat, x_end=x_end, G=G,
@@ -433,9 +443,71 @@ FEDAWE_M = Strategy("fedawe_m", True, _fedawe_m_init, _fedawe_m_aggregate,
                     aggregate_flat=_fedawe_m_aggregate_flat)
 
 
+# ---------------------------------------------------------------------------
+# FedAR — local-update approximation with rectification (Jiang et al. 2024,
+# arXiv:2407.19103): the server caches every client's latest delivered
+# innovation and aggregates the FULL cache mean each round, so in-flight /
+# unavailable clients are approximated by their cached update (like MIFA).
+# The semi-async twist is RECTIFICATION at delivery: an update that arrives
+# d rounds late is blended into the cache with factor 1 / (1 + d) instead
+# of replacing it — the staler the delivery, the more the server trusts its
+# own cache.  With ``ages=None`` (synchronous engine) the blend degenerates
+# to full replacement and FedAR is MIFA-equivalent, which is exactly the
+# paper's reading of local-update approximation without delay.
+# ---------------------------------------------------------------------------
+
+def _fedar_init(template, m):
+    return dict(mem=tu.tree_zeros_like(tu.tree_broadcast(template, m)))
+
+
+def _fedar_rect(ages):
+    return 1.0 / (1.0 + ages.astype(jnp.float32))
+
+
+def _fedar_aggregate(*, global_tr, clients_tr, G, mask, t, tau, probs, extra,
+                     eta_g, use_kernel=False, x_end=None, mask_upload=None,
+                     ages=None):
+    mu = mask if mask_upload is None else mask_upload
+    sel = mu > 0
+    r = jnp.ones_like(mask) if ages is None else _fedar_rect(ages)
+    mem = jax.tree.map(
+        lambda mm, g: jnp.where(
+            tu._bshape(sel, mm),
+            (mm.astype(jnp.float32) + tu._bshape(r, mm)
+             * (g.astype(jnp.float32)
+                - mm.astype(jnp.float32))).astype(mm.dtype),
+            mm),
+        extra["mem"], G)
+    upd = tu.tree_mean(mem)
+    new_global = jax.tree.map(
+        lambda x, u: (x.astype(jnp.float32)
+                      - eta_g * u.astype(jnp.float32)).astype(x.dtype),
+        global_tr, upd)
+    new_clients, new_tau = _stateless_wrap(new_global, clients_tr, mu, t, tau)
+    return new_global, new_clients, new_tau, dict(mem=mem)
+
+
+def _fedar_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
+                          tau, probs, extra, eta_g, use_kernel=False,
+                          mask_upload=None, ages=None):
+    mu = mask if mask_upload is None else mask_upload
+    sel = mu[:, None] > 0
+    r = jnp.ones_like(mask) if ages is None else _fedar_rect(ages)
+    mem = jnp.where(sel, extra["mem"] + r[:, None] * (G - extra["mem"]),
+                    extra["mem"])  # [m, N] rectified cache
+    m = jnp.float32(mask.shape[0])
+    new_global = global_flat - eta_g * flat_weighted_sum(
+        jnp.ones_like(mask), mem) / m
+    return new_global, None, _stateless_tau(mu, t, tau), dict(mem=mem)
+
+
+FEDAR = Strategy("fedar", False, _fedar_init, _fedar_aggregate,
+                 aggregate_flat=_fedar_aggregate_flat, memory_aided=True)
+
+
 REGISTRY = {s.name: s for s in
             (FEDAWE, FEDAWE_M, FEDAVG_ACTIVE, FEDAVG_ALL, FEDAVG_KNOWN_P,
-             FEDAU, F3AST, MIFA, FEDVARP)}
+             FEDAU, F3AST, MIFA, FEDVARP, FEDAR)}
 
 
 def get_strategy(name: str) -> Strategy:

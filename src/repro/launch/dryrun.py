@@ -200,6 +200,15 @@ def _chunk_faults(variant):
     return "faults" in variant.split("+")
 
 
+def _chunk_staleness(variant):
+    """'+staleness' lowers the chunked executor with semi-async rounds
+    live (core/staleness.py): bounded-delay straggler uploads park in a
+    device-resident [tau_max, m, N] pending ring buffer riding the
+    donated scan carry (sharded client-wise by flat_pspecs), and the
+    metrics dict grows the n_stale/mean_staleness counters."""
+    return "staleness" in variant.split("+")
+
+
 def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
     """The donated, sharded, scan-chunked round executor on the flat
     substrate: K FedAWE rounds per dispatch, the [m, N] client stack over
@@ -228,8 +237,19 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
         # [T, m] replay trace riding the donated scan carry; rows are
         # consumed mod T, so a 2K-round trace covers any dispatch count
         fault_sds = {"trace": _sds((2 * K, m), F32)}
+    staleness_cfg, stale_sds = None, None
+    if _chunk_staleness(variant):
+        from repro.core.flatten import FlatSpec
+        from repro.core.staleness import StalenessCfg
+        staleness_cfg = StalenessCfg(tau_max=2, kind="det", delay=1)
+        # [tau_max, m, N] pending ring buffer + [tau_max, m] slot ages
+        # riding the donated scan carry, sharded client-wise
+        n_flat = FlatSpec.from_tree(trainable_sds).size
+        stale_sds = {"buf": _sds((staleness_cfg.tau_max, m, n_flat), F32),
+                     "ages": _sds((staleness_cfg.tau_max, m), F32)}
     round_fn = make_round_fn_with_frozen(fl, loss_fn, av, base_p,
-                                         fault_cfg=fault_cfg)
+                                         fault_cfg=fault_cfg,
+                                         staleness_cfg=staleness_cfg)
     sampling = _chunk_sampling(variant)
     # the dry-run store gives every client exactly `cap` samples (below),
     # so the epoch permutation stack lowers at its production size
@@ -238,7 +258,7 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
 
     state_sds = jax.eval_shape(
         lambda tr: init_fl_state(jax.random.PRNGKey(0), fl, tr,
-                                 fault=fault_sds),
+                                 fault=fault_sds, stale=stale_sds),
         trainable_sds)
 
     # device-resident store: per-sample arrays (drop the [m, s, b] lead of
@@ -270,6 +290,8 @@ def build_chunk_train_step(cfg, shape, mesh, multi_pod, variant):
     metrics_spec = dict(loss=P(None), n_active=P(None), mean_echo=P(None))
     if fault_cfg is not None:
         metrics_spec.update(n_dropped=P(None), n_rejected=P(None))
+    if staleness_cfg is not None:
+        metrics_spec.update(n_stale=P(None), mean_staleness=P(None))
 
     S = _chunk_seeds(variant)
     if S:
@@ -394,6 +416,8 @@ def run_one(arch, shape_name, mesh_kind, *, test_mesh=False, verbose=True,
                         rec["seeds"] = _chunk_seeds(variant)
                     if _chunk_faults(variant):
                         rec["faults"] = True
+                    if _chunk_staleness(variant):
+                        rec["staleness"] = True
                 else:
                     fn, args = build_train_step(cfg, shape, mesh, multi_pod,
                                                 variant=variant)
@@ -504,7 +528,11 @@ def main():
                          "(fault injection live in the chunked executor: "
                          "mid-round dropout + sanitization masks, [T, m] "
                          "replay trace in the donated carry, "
-                         "n_dropped/n_rejected metrics)")
+                         "n_dropped/n_rejected metrics), staleness "
+                         "(semi-async rounds live in the chunked executor: "
+                         "bounded-delay straggler uploads through a "
+                         "[tau_max, m, N] pending ring buffer in the "
+                         "donated carry, n_stale/mean_staleness metrics)")
     args = ap.parse_args()
 
     results = []

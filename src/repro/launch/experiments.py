@@ -109,6 +109,12 @@ class Scenario:
     blackout_every: int = 0         # recurrence period (0 = one-shot)
     blackout_cluster: int = 0       # targeted data cluster (dominant label)
     nu_corr: bool = False           # base_p := adversarial_probs_from_nu
+    # semi-async knobs (core/staleness.py) — all off by default
+    stale_max: int = 0              # tau_max delay bound (0 = synchronous)
+    stale_kind: str = "det"         # delay dynamics: det | geom | trace
+    stale_delay: int = 1            # det: every straggler takes this long
+    stale_p: float = 0.5            # geom: per-round arrival probability
+    stale_gamma: float = 1.0        # delivery discount base (gamma ** d)
     note: str = ""
 
     def __post_init__(self):
@@ -116,6 +122,7 @@ class Scenario:
         assert self.kind in KINDS, self.kind
         assert self.sampling in SAMPLING_MODES, self.sampling
         assert self.fault_trace in ("", "diurnal"), self.fault_trace
+        assert self.stale_kind in ("det", "geom", "trace"), self.stale_kind
 
     def availability(self) -> AvailabilityCfg:
         return AvailabilityCfg(
@@ -140,6 +147,18 @@ class Scenario:
             blackout_every=self.blackout_every,
             blackout_cluster=self.blackout_cluster,
             sanitize=self.sanitize, norm_cap=self.norm_cap)
+
+    def staleness(self):
+        """The cell's ``StalenessCfg``, or None when ``stale_max == 0``
+        (so the engine compiles the byte-identical synchronous round
+        function)."""
+        from repro.core.staleness import StalenessCfg
+        if self.stale_max == 0:
+            return None
+        return StalenessCfg(
+            tau_max=self.stale_max, kind=self.stale_kind,
+            delay=self.stale_delay, p_next=self.stale_p,
+            gamma=self.stale_gamma)
 
 
 SCENARIOS: dict = {}
@@ -226,6 +245,33 @@ def _register_paper_grid():
             upload_survival=0.8, sanitize=True,
             note="20% mid-round upload dropout + sanitization"))
 
+    # semi-async cells (core/staleness.py): stragglers keep computing on
+    # stale parameters; uploads land d rounds late, bounded by tau_max
+    for strat in sorted(REGISTRY):
+        register_scenario(Scenario(
+            name=f"{strat}/stale_d2", strategy=strat, kind="sine",
+            stale_max=2, stale_kind="det", stale_delay=2,
+            note="deterministic 2-round straggler delay, sine dynamics"))
+    register_scenario(Scenario(
+        name="fedawe/stale_geom", strategy="fedawe", kind="sine",
+        stale_max=4, stale_kind="geom", stale_p=0.5,
+        note="geometric upload delays, tau_max=4 bound"))
+    register_scenario(Scenario(
+        name="fedawe/stale_trace", strategy="fedawe", kind="sine",
+        stale_max=4, stale_kind="trace",
+        note="replayed staircase per-client delay trace, tau_max=4"))
+    register_scenario(Scenario(
+        name="fedawe/stale_d2+midround", strategy="fedawe", kind="sine",
+        stale_max=2, stale_kind="det", stale_delay=2,
+        upload_survival=0.8, sanitize=True,
+        note="semi-async delays composed with 20% mid-round dropout "
+             "+ sanitization at delivery"))
+    register_scenario(Scenario(
+        name="fedar/semi_async", strategy="fedar", kind="sine",
+        stale_max=4, stale_kind="geom", stale_p=0.5, stale_gamma=0.7,
+        note="FedAR rectification baseline (Jiang et al. 2024): "
+             "geometric delays, gamma**d delivery discount"))
+
     GRIDS.update({
         # speedup-vs-availability comparison (Yan et al. 2020 framing)
         "speedup-sine": ["fedawe/sine", "fedawe_m/sine",
@@ -247,6 +293,11 @@ def _register_paper_grid():
         "faults": (["fig2_midround_dropout", "blackout_cluster",
                     "trace_diurnal"]
                    + [f"{s}/midround" for s in sorted(REGISTRY)]),
+        # semi-async stress cells: every strategy under deterministic
+        # delays, plus the delay-distribution / composition / FedAR cells
+        "staleness": ([f"{s}/stale_d2" for s in sorted(REGISTRY)]
+                      + ["fedawe/stale_geom", "fedawe/stale_trace",
+                         "fedawe/stale_d2+midround", "fedar/semi_async"]),
     })
 
 
@@ -260,7 +311,7 @@ _register_paper_grid()
 def build_seed_batch(cfg: FLConfig, template, base_rng, data_key,
                      init_sampler_state, store, n_seeds: int, *,
                      template_fn=None, model_rng=None, seed_ids=None,
-                     fault=None):
+                     fault=None, stale=None):
     """Stacked per-seed carry for ``make_seeds_chunk_fn``.
 
     Seed replicate ``j`` is initialized EXACTLY as an independent
@@ -292,7 +343,10 @@ def build_seed_batch(cfg: FLConfig, template, base_rng, data_key,
     fault-injection carry — the SAME replay trace / cluster labels for
     every replicate (seeds vary the stochastic draws, not the recorded
     failure pattern), stacked over the seed axis like the rest of the
-    state.
+    state.  ``stale`` (a ``staleness.init_staleness_state`` pytree, or
+    None) is the semi-async pending-update ring buffer, threaded the
+    same way: every replicate starts from the same (empty) buffer and
+    the per-seed delay draws diverge through the state rng.
 
     Returns ``(states, sampler_states, data_keys)`` with ``[S, ...]``
     leaves (``sampler_states`` is ``{}`` under uniform sampling).
@@ -310,7 +364,7 @@ def build_seed_batch(cfg: FLConfig, template, base_rng, data_key,
 
     states = stack_seeds([
         init_fl_state(jax.random.fold_in(base_rng, j), cfg, tmpl(j),
-                      fault=fault)
+                      fault=fault, stale=stale)
         for j in ids])
     if seed_ids is None:
         data_keys = seed_data_keys(data_key, n_seeds)
@@ -475,7 +529,7 @@ def run_seed_rounds(states, chunk_fn, T, K, *, sampler_states, store,
 def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
                    batch, seeds, rounds, chunk_rounds, rng, data_key,
                    eval_fn=None, eval_every=0, log_every=0, mesh=None,
-                   template_fn=None, fault=None):
+                   template_fn=None, fault=None, stale=None):
     """THE multi-seed driver (used by both this module's ``run_scenario``
     and ``train.py --seeds``): device store + stateful sampler + stacked
     per-seed carry + S-batched executor, end to end.
@@ -496,7 +550,7 @@ def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
         min_count=min(len(ix) for ix in ds.client_indices))
     states, sampler_states, data_keys = build_seed_batch(
         fl, template, rng, data_key, init_fn, store, seeds,
-        template_fn=template_fn, fault=fault)
+        template_fn=template_fn, fault=fault, stale=stale)
     K = min(int(chunk_rounds) or 8, int(rounds))
     builder = build_seed_executor(fl, round_fn, sample_fn, seeds,
                                   mesh=mesh, states=states,
@@ -515,17 +569,21 @@ def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
 def _cell_task(sc: Scenario, *, m, s, batch, n_samples, preset, seed,
                use_kernel, rounds=0):
     """Materialize one cell's task + round function: ``(fl, round_fn,
-    ds, eval_fn, init_fn, fault_state)``.
+    ds, eval_fn, init_fn, fault_state, stale_state)``.
 
     The fault knobs resolve here: ``nu_corr`` swaps the data-derived
     ``base_p`` for the adversarial ν-correlated one, a ``fault_trace``
     simulates its ``[rounds, m]`` replay trace (keyed ``seed + 2`` so it
     is independent of the model/data streams), and blackout cells derive
     their cluster labels from the task's ν.  ``fault_state`` is None for
-    fault-free cells.
+    fault-free cells.  Semi-async knobs resolve here too: ``stale_max>0``
+    builds the ``[tau_max, m, N]`` pending-update ring buffer (and, for
+    ``stale_kind='trace'``, a staircase delay trace keyed ``seed + 3``);
+    ``stale_state`` is None for synchronous cells.
     """
     # lazy import: train.py imports this module for --scenario/--seeds
-    from repro.core import faults
+    from repro.core import faults, staleness
+    from repro.core.flatten import FlatSpec
     from repro.launch import train as train_mod
 
     args = argparse.Namespace(seed=seed, n_samples=n_samples, m=m,
@@ -552,9 +610,20 @@ def _cell_task(sc: Scenario, *, m, s, batch, n_samples, preset, seed,
                     if fc.blackout_len > 0 else None)
         fault_state = faults.init_fault_state(fc, trace=trace,
                                               clusters=clusters)
+    stcfg = sc.staleness()
+    stale_state = None
+    if stcfg is not None and stcfg.needs_state:
+        dtrace = None
+        if stcfg.kind == "trace":
+            assert rounds > 0, \
+                f"trace cell {sc.name!r} needs the run length for its trace"
+            dtrace = staleness.staircase_delay_trace(
+                jax.random.PRNGKey(seed + 3), m, rounds)
+        stale_state = staleness.init_staleness_state(
+            stcfg, FlatSpec.from_tree(params).size, m, dtrace=dtrace)
     rf = make_round_fn(fl, loss_fn, {}, sc.availability(), base_p,
-                       fault_cfg=fc)
-    return fl, rf, params, ds, eval_fn, init_fn, fault_state
+                       fault_cfg=fc, staleness_cfg=stcfg)
+    return fl, rf, params, ds, eval_fn, init_fn, fault_state, stale_state
 
 
 def _cell_record(sc: Scenario, *, seeds, rounds, chunk_rounds, finals,
@@ -582,9 +651,10 @@ def run_scenario(sc: Scenario, *, seeds=4, rounds=24, chunk_rounds=8,
     record: per-seed final evals, their mean±std (``final``), mean±std
     metric curves (``curves``), and the raw per-seed ``histories``.
     """
-    fl, rf, params, ds, eval_fn, init_fn, fault_state = _cell_task(
-        sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
-        seed=seed, use_kernel=use_kernel, rounds=rounds)
+    fl, rf, params, ds, eval_fn, init_fn, fault_state, stale_state = \
+        _cell_task(
+            sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
+            seed=seed, use_kernel=use_kernel, rounds=rounds)
     K = min(int(chunk_rounds) or 8, int(rounds))
     states, histories, finals = run_multi_seed(
         fl, rf, params, ds, sampling=sc.sampling, batch=batch, seeds=seeds,
@@ -592,7 +662,7 @@ def run_scenario(sc: Scenario, *, seeds=4, rounds=24, chunk_rounds=8,
         data_key=jax.random.PRNGKey(seed + 1), eval_fn=eval_fn,
         eval_every=eval_every, log_every=log_every, mesh=mesh,
         template_fn=init_fn if replicate == "full" else None,
-        fault=fault_state)
+        fault=fault_state, stale=stale_state)
     return _cell_record(sc, seeds=seeds, rounds=rounds, chunk_rounds=K,
                         finals=finals, histories=histories)
 
@@ -608,9 +678,10 @@ def build_cell(sc: Scenario, *, seeds, rounds, chunk_rounds, m, s, batch,
     fns, device store, and the stacked per-seed carry — without running
     it.  The returned dict is the unit ``pack_cells`` groups and
     ``run_packed_grid`` drives."""
-    fl, rf, params, ds, eval_fn, init_fn, fault_state = _cell_task(
-        sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
-        seed=seed, use_kernel=use_kernel, rounds=rounds)
+    fl, rf, params, ds, eval_fn, init_fn, fault_state, stale_state = \
+        _cell_task(
+            sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
+            seed=seed, use_kernel=use_kernel, rounds=rounds)
     store = ds.device_store()
     init_sampler, sample_fn = make_device_sampler(
         fl.m, fl.s, batch, mode=sc.sampling,
@@ -619,7 +690,7 @@ def build_cell(sc: Scenario, *, seeds, rounds, chunk_rounds, m, s, batch,
         fl, params, jax.random.PRNGKey(seed), jax.random.PRNGKey(seed + 1),
         init_sampler, store, seeds,
         template_fn=init_fn if replicate == "full" else None,
-        fault=fault_state)
+        fault=fault_state, stale=stale_state)
     K = min(int(chunk_rounds) or 8, int(rounds))
     return dict(sc=sc, fl=fl, round_fn=rf, sample_fn=sample_fn,
                 store=store, states=states, sampler_states=sampler_states,

@@ -185,6 +185,26 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--norm-cap", type=float, default=0.0,
                     help="with --sanitize: also reject updates with "
                          "||G_i|| above this cap (0 = non-finite only)")
+    ap.add_argument("--stale-max", type=int, default=None,
+                    help="semi-async rounds (core/staleness.py): bound "
+                         "straggler upload delay by tau_max rounds; a "
+                         "delayed update parks in the pending ring buffer "
+                         "and aggregates on arrival (0 = synchronous, the "
+                         "default; implies --flat-state)")
+    ap.add_argument("--stale-kind", default=None,
+                    choices=["det", "geom", "trace"],
+                    help="delay dynamics (default: det): det = every "
+                         "straggler takes --stale-delay rounds, geom = "
+                         "geometric arrival with --stale-p, trace = "
+                         "replayed staircase per-client delay schedule")
+    ap.add_argument("--stale-delay", type=int, default=None,
+                    help="det delay in rounds (default: 1)")
+    ap.add_argument("--stale-p", type=float, default=None,
+                    help="geom per-round arrival probability (default: 0.5)")
+    ap.add_argument("--stale-gamma", type=float, default=None,
+                    help="staleness delivery discount base: an update "
+                         "arriving d rounds late aggregates with weight "
+                         "gamma**d (default: 1.0 = undiscounted)")
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt", default=None)
@@ -225,6 +245,27 @@ def main(argv=None):
             else:
                 setattr(args, attr, fallback)
 
+    # semi-async knobs: the scenario cell's staleness config, with the
+    # explicit CLI stale flags composed on top (CLI wins where passed)
+    from repro.core import staleness as stalemod
+    stale_cfg = scenario.staleness() if scenario else None
+    if any(v is not None for v in (args.stale_max, args.stale_kind,
+                                   args.stale_delay, args.stale_p,
+                                   args.stale_gamma)):
+        import dataclasses
+        s0 = stale_cfg or stalemod.StalenessCfg()
+        stale_cfg = dataclasses.replace(
+            s0,
+            tau_max=s0.tau_max if args.stale_max is None else args.stale_max,
+            kind=s0.kind if args.stale_kind is None else args.stale_kind,
+            delay=s0.delay if args.stale_delay is None else args.stale_delay,
+            p_next=s0.p_next if args.stale_p is None else args.stale_p,
+            gamma=s0.gamma if args.stale_gamma is None else args.stale_gamma)
+    if stale_cfg is not None and stale_cfg.tau_max == 0:
+        stale_cfg = None
+    # the pending-update ring buffer rides the flat [m, N] substrate
+    args.flat_state = args.flat_state or stale_cfg is not None
+
     rng = jax.random.PRNGKey(args.seed)
     build = build_image_task if args.preset == "image" else build_lm_task
     params, loss_fn, ds, base_p, eval_fn, init_fn = build(args, rng)
@@ -262,13 +303,24 @@ def main(argv=None):
                     if fault_cfg.blackout_len > 0 else None)
         fault_state = faults.init_fault_state(fault_cfg, trace=trace,
                                               clusters=clusters)
+    stale_state = None
+    if stale_cfg is not None and stale_cfg.needs_state:
+        from repro.core import FlatSpec
+        dtrace = None
+        if stale_cfg.kind == "trace":
+            dtrace = stalemod.staircase_delay_trace(
+                jax.random.PRNGKey(args.seed + 3), args.m, args.rounds)
+        stale_state = stalemod.init_staleness_state(
+            stale_cfg, FlatSpec.from_tree(params).size, args.m,
+            dtrace=dtrace)
     round_fn = make_round_fn(fl, loss_fn, {}, av, base_p,
-                             fault_cfg=fault_cfg)
+                             fault_cfg=fault_cfg, staleness_cfg=stale_cfg)
 
     if args.seeds > 1:
         return _main_multi_seed(args, fl, round_fn, params, ds, eval_fn,
-                                rng, init_fn, fault_state)
-    state = init_fl_state(rng, fl, params, fault=fault_state)
+                                rng, init_fn, fault_state, stale_state)
+    state = init_fl_state(rng, fl, params, fault=fault_state,
+                          stale=stale_state)
 
     ckpt_fn = None
     if args.ckpt and args.ckpt_every:
@@ -333,7 +385,7 @@ def main(argv=None):
 
 
 def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng, init_fn,
-                     fault_state=None):
+                     fault_state=None, stale_state=None):
     """``--seeds S > 1``: drive the vmapped multi-seed executor.
 
     Always chunked (``--chunk-rounds`` or K=8): one dispatch advances all
@@ -358,7 +410,7 @@ def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng, init_fn,
         data_key=jax.random.PRNGKey(args.seed + 1), eval_fn=eval_fn,
         eval_every=args.eval_every, log_every=max(1, args.rounds // 10),
         template_fn=init_fn if args.replicate == "full" else None,
-        fault=fault_state)
+        fault=fault_state, stale=stale_state)
     final = analysis.seed_summary(finals)
     print("final (mean±std over seeds):", final)
     if args.out:

@@ -176,7 +176,21 @@ def flat_pspecs(mesh, state_sds, *, multi_pod=False):
             return P(None, ca)
         return P(*([None] * len(shape)))
 
+    def stale_leaf(x):
+        # semi-async carry (core/staleness.py): the [tau_max, m, N] pending
+        # ring buffer and the [tau_max, m] ages / [T, m] delay trace shard
+        # their CLIENT (middle/trailing) axis, like the client stack does
+        shape = tuple(int(d) for d in x.shape)
+        if len(shape) == 3 and shape[1] == m:
+            return P(None, ca, None)
+        if len(shape) == 2 and shape[1] == m:
+            return P(None, ca)
+        if shape == (m,):
+            return P(ca)
+        return P(*([None] * len(shape)))
+
     fault = getattr(state_sds, "fault", None)
+    stale = getattr(state_sds, "stale", None)
     return type(state_sds)(
         global_tr=P(None),
         clients_tr=(None if state_sds.clients_tr is None
@@ -188,6 +202,7 @@ def flat_pspecs(mesh, state_sds, *, multi_pod=False):
         rng=P(None),
         spec=state_sds.spec,
         fault=None if fault is None else jax.tree.map(fault_leaf, fault),
+        stale=None if stale is None else jax.tree.map(stale_leaf, stale),
     )
 
 

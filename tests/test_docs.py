@@ -145,6 +145,17 @@ def test_readme_shows_seed_axis_flags():
         assert needle in text, f"README lost {needle}"
 
 
+def test_readme_shows_semi_async_quickstart():
+    """The semi-async substrate stays documented: the README must keep
+    the staleness train flags, the +staleness dry-run variant, the
+    staleness grid, and the FedAR baseline cell."""
+    text = open(README).read()
+    for needle in ("--stale-max", "--stale-kind", "--stale-gamma",
+                   "flat_chunk4+staleness", "--grid staleness",
+                   "fedar/semi_async", "chunked_staleness"):
+        assert needle in text, f"README lost {needle}"
+
+
 @pytest.mark.slow
 def test_readme_dryrun_command_runs(tmp_path):
     """Smoke-run the README's mini dry-run command (rewritten to a tmp

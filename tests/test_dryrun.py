@@ -123,6 +123,26 @@ def test_mini_dryrun_flat_chunk_faults_train(tmp_path):
 
 
 @pytest.mark.slow
+def test_mini_dryrun_flat_chunk_staleness_train(tmp_path):
+    """flat_chunk + live semi-async rounds (core/staleness.py): the
+    [tau_max, m, N] pending-update ring buffer rides the donated scan
+    carry (sharded client-wise by flat_pspecs), busy gating and the
+    arrival/deferral selects lower and compile on the mini multi-pod
+    mesh, and the executor still donates and emits the gossip
+    all-reduce."""
+    out = str(tmp_path / "dry.json")
+    r = _run_dryrun(["--arch", "tiny", "--shape", "train_4k",
+                     "--mesh", "multi", "--test-mesh",
+                     "--variant", "flat_chunk4+staleness", "--out", out])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(out))[0]
+    assert rec["ok"] and rec["chunk_rounds"] == 4
+    assert rec["staleness"] is True
+    assert rec["collectives"]["all-reduce"] > 0
+    assert rec["memory"]["alias_size_in_bytes"] > 0
+
+
+@pytest.mark.slow
 def test_mini_dryrun_decode_multi_pod(tmp_path):
     out = str(tmp_path / "dry.json")
     r = _run_dryrun(["--arch", "tiny", "--shape", "decode_32k",

@@ -90,6 +90,7 @@ REQUIRED_ROWS = (
     "rounds_per_sec/chunked_seeds_seq",
     "rounds_per_sec/chunked_seeds_mesh",
     "rounds_per_sec/chunked_faults",
+    "rounds_per_sec/chunked_staleness",
 )
 
 
