@@ -105,7 +105,10 @@ def _bench_round_executor(quick):
     the chunked_seeds[_mesh] rows, whose derived is the speedup of the
     one S-batched dispatch stream over the S sequential runs
     (chunked_seeds_seq time / row time; > 1 = batching the seed axis
-    wins)."""
+    wins).  Each executor additionally emits a ``compile_count/<name>``
+    row whose us_per_call is its jit signature-cache size after all reps
+    (the retrace gate — see tools/bench_record.py) and whose derived is
+    the warmup trace+compile wall time in us."""
     from repro.core import (AvailabilityCfg, FaultCfg, FLConfig,
                             StalenessCfg, init_fl_state, make_round_fn,
                             run_rounds)
@@ -116,7 +119,10 @@ def _bench_round_executor(quick):
     # the round cost, not the math
     m, s, b, d, h, K = 128, 2, 4, 32, 16, 16
     T = 32 if quick else 64
-    reps = 3
+    # min-of-5: the seeds-batched vs sequential margin is ~5-10% on a
+    # 1-device CPU (the win is dispatch amortization, not FLOPs), which
+    # min-of-3 resolves only on a quiet machine
+    reps = 5
     rng = np.random.default_rng(0)
     n = 1024
     arrays = dict(x=rng.normal(size=(n, d)).astype(np.float32),
@@ -182,6 +188,9 @@ def _bench_round_executor(quick):
                                                              data_key))
             return run_rounds(state, rf_jit, batch_fn, rounds, jit=False)
 
+        # the jitted executable behind this exec — the compile_count rows
+        # read its signature-cache size after the timed reps
+        once.compiled = chunk_fn if chunked else rf_jit
         return once
 
     n_seeds = 4
@@ -225,6 +234,7 @@ def _bench_round_executor(quick):
                     states, chunk_fn, rounds, K, sampler_states=sss,
                     store=store, data_keys=dks, n_seeds=S)
                 return states, hists[0]
+            once.compiled = chunk_fn
             return once
 
         def once_seq(rounds):
@@ -240,6 +250,7 @@ def _bench_round_executor(quick):
                 hists.append(h_)
             return st, hists[0]
 
+        once_seq.compiled = single_fn
         return make_once_batched(batched_fn), once_seq, \
             make_once_batched(mesh_fn)
 
@@ -272,8 +283,11 @@ def _bench_round_executor(quick):
             True, chunked=True,
             staleness_cfg=StalenessCfg(tau_max=2, kind="det", delay=1)),
     }
-    for once in execs.values():
+    warm_us = {}
+    for name, once in execs.items():
+        t0 = time.time()
         once(K)                        # warmup: compile round/chunk
+        warm_us[name] = (time.time() - t0) * 1e6
     best = {name: None for name in execs}
     # min-of-reps filters machine load; reps INTERLEAVE across executors
     # so a load spike hits every row, not one — the recorded numbers are
@@ -299,6 +313,23 @@ def _bench_round_executor(quick):
         else:
             rows.append((f"rounds_per_sec/{name}", round(t / T * 1e6, 1),
                          round(T / t, 1)))
+    # compile-count gate: after warmup + reps*T rounds every executor's
+    # jit cache must hold its CONVERGED signature count — 1 for every
+    # single-placement executor; 2 for chunked_seeds_mesh, whose first
+    # call sees unsharded seed batches and whose steady state carries the
+    # mesh-sharded donation round-trip.  More entries than that means a
+    # call path retraces per chunk/round, the regression the
+    # one-dispatch-per-chunk design exists to prevent.  us_per_call IS
+    # the signature count (exact and noise-free: the record gate's 25%
+    # ratio threshold turns any 1 -> 2 drift into a hard failure);
+    # derived is the warmup (trace+compile) wall time in us, recorded for
+    # trend-watching but never gated.
+    for name, once in execs.items():
+        fn = getattr(once, "compiled", None)
+        if fn is None or not hasattr(fn, "_cache_size"):
+            continue
+        rows.append((f"compile_count/{name}", float(fn._cache_size()),
+                     round(warm_us[name], 1)))
     return rows
 
 

@@ -63,7 +63,7 @@ def echo_aggregate_pallas(x, y, mask, echo, eta_g, *, block_n=4096,
     grid = (Np // block_n,)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, eta_g=float(eta_g)),
+        functools.partial(_kernel, eta_g=float(eta_g)),  # flcheck: ignore[R1] -- eta_g is static FLConfig config baked in at trace time, not a traced value
         grid=grid,
         in_specs=[
             pl.BlockSpec((m,), lambda j: (0,)),          # mask
@@ -129,13 +129,13 @@ def echo_aggregate_fused_pallas(x, y, g, mask, echo, eta_g, *, block_n=4096,
     stack = pl.BlockSpec((m, block_n), lambda j: (0, j))
     row = pl.BlockSpec((block_n,), lambda j: (j,))
     if upload is None:
-        kern = functools.partial(_fused_kernel, eta_g=float(eta_g))
+        kern = functools.partial(_fused_kernel, eta_g=float(eta_g))  # flcheck: ignore[R1] -- eta_g is static FLConfig config baked in at trace time, not a traced value
         in_specs = [vec, vec, pl.BlockSpec((1,), lambda j: (0,)),
                     stack, stack, row]
         operands = (mask.astype(jnp.float32), echo.astype(jnp.float32),
                     denom, x, y, g.astype(jnp.float32))
     else:
-        kern = functools.partial(_fused_kernel_upload, eta_g=float(eta_g))
+        kern = functools.partial(_fused_kernel_upload, eta_g=float(eta_g))  # flcheck: ignore[R1] -- eta_g is static FLConfig config baked in at trace time, not a traced value
         in_specs = [vec, vec, vec, pl.BlockSpec((1,), lambda j: (0,)),
                     stack, stack, row]
         operands = (mask.astype(jnp.float32), upload.astype(jnp.float32),

@@ -501,6 +501,7 @@ def run_seed_rounds(states, chunk_fn, T, K, *, sampler_states, store,
             "make T a multiple of K")
     histories = [[] for _ in range(n_seeds)]
     tail_fn, done = None, 0
+    warmed = set()
     while done < T:
         k = min(K, T - done)
         if k == K:
@@ -508,8 +509,18 @@ def run_seed_rounds(states, chunk_fn, T, K, *, sampler_states, store,
         else:
             tail_fn = tail_fn or make_tail_fn(k)
             f = tail_fn
-        states, sampler_states, metrics = f(states, sampler_states, store,
-                                            data_keys)
+        if id(f) in warmed:
+            # warm S-batched dispatch is transfer-free (same rail as
+            # engine._run_rounds_chunked): seed-stacked carries, store
+            # and keys are device resident, so any implicit host upload
+            # here is a regression and fails loudly
+            with jax.transfer_guard("disallow"):
+                states, sampler_states, metrics = f(
+                    states, sampler_states, store, data_keys)
+        else:
+            states, sampler_states, metrics = f(states, sampler_states,
+                                                store, data_keys)
+            warmed.add(id(f))
         metrics = jax.device_get(metrics)      # ONE host sync per dispatch
         _append_seed_records(histories, metrics, k, done, n_seeds)
         done += k

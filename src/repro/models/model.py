@@ -207,7 +207,7 @@ def merge_trainable(trainable, frozen, cfg: ModelConfig):
 def count_params(cfg: ModelConfig, trainable_only: bool = False) -> int:
     import math
 
-    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))  # flcheck: ignore[R2] -- shape-only: eval_shape never materializes the key
     if trainable_only:
         shapes, _ = split_trainable(shapes, cfg)
     return sum(math.prod(x.shape) if x.shape else 1

@@ -17,3 +17,46 @@ else:
         "ci", max_examples=25, deadline=None,
         suppress_health_check=[HealthCheck.too_slow])
     settings.load_profile("ci")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "strict_rails: run under strict dtype promotion + tracer-leak "
+        "checking; the transfer_guard('disallow') half of the rail lives "
+        "in the dispatch loops themselves (engine._run_rounds_chunked, "
+        "experiments.run_seed_rounds), which these tests drive")
+    config.addinivalue_line(
+        "markers", "slow: long-running smoke test (full CLI subprocesses)")
+
+
+@pytest.fixture(autouse=True)
+def strict_rails(request):
+    """Executor tests opt in via ``pytestmark = pytest.mark.strict_rails``.
+
+    The runtime complement to ``python -m tools.flcheck src/`` (static R1
+    cannot see callables threaded through parameters).  Division of
+    labour, measured on this jax (0.4.37) CPU backend:
+
+    * ``jax.transfer_guard("disallow")`` rejects intentional one-time
+      uploads too — ``PRNGKey(0)``, ``jnp.zeros`` from a Python scalar
+      and even cold jit dispatch (baked constants commit to device on
+      first execution) all raise under it, so a whole-test guard would
+      just ban test setup.  The guard therefore lives around the WARM
+      steady-state dispatch inside the chunked loops
+      (``engine._run_rounds_chunked`` / ``experiments.run_seed_rounds``)
+      — the path whose transfer-freedom is the actual invariant — and
+      every test here drives those loops.
+    * strict dtype promotion + leak checking are safe test-wide and ride
+      here: silent weak-type upcasts and escaped tracers are the bug
+      classes parity tests would otherwise paper over with allclose
+      tolerances.
+    """
+    if request.node.get_closest_marker("strict_rails") is None:
+        yield
+        return
+    with jax.numpy_dtype_promotion("strict"), jax.checking_leaks():
+        yield

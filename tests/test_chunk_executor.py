@@ -27,6 +27,10 @@ from repro.core import (REGISTRY, AvailabilityCfg, FLConfig, init_fl_state,
                         make_chunk_fn, make_round_fn, run_rounds)
 from repro.data import FederatedDataset, device_store, make_device_sampler
 
+# runtime rails (conftest.strict_rails): no implicit host<->device
+# transfers, strict dtype promotion, tracer-leak checking
+pytestmark = pytest.mark.strict_rails
+
 M, S, B, DIM = 6, 3, 4, 4
 
 

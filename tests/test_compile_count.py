@@ -1,0 +1,170 @@
+"""Compile-count regression gate: ONE compiled signature per executor.
+
+The chunked design's O(1)-dispatch claim dies silently if a change makes
+an executor retrace per call — a Python scalar riding the carry, a
+static argument rebuilt each chunk, a shape that flips between
+dispatches.  jit functions expose their compiled-signature cache via
+``_cache_size()``; these tests pin it to exactly 1 after multi-chunk
+runs of every executor tier (chunked / seeds / packed grid), and
+``benchmarks/kernels_bench.py`` records the same number as
+``compile_count/*`` rows so ``tools/bench_record.py --check`` gates it
+against the committed BENCH_kernels.json baseline.
+
+If a jax upgrade removes ``_cache_size``, THIS file is the alarm: the
+bench rows degrade behind a hasattr guard, so the hard failure here is
+what forces re-porting the gate to the new introspection API.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                        make_chunk_fn, make_grid_chunk_fn, make_round_fn,
+                        make_seeds_chunk_fn, run_rounds)
+from repro.data import device_store, make_device_sampler
+from repro.launch.experiments import build_seed_batch, run_seed_rounds
+
+# runtime rails (conftest.strict_rails): strict dtype promotion +
+# tracer-leak checking; the dispatch loops add transfer_guard themselves
+pytestmark = pytest.mark.strict_rails
+
+M, S, B, DIM, SEEDS = 6, 3, 4, 4, 2
+
+
+def _problem(sampling="uniform"):
+    rng = np.random.default_rng(0)
+    n = 48
+    arrays = dict(x=rng.normal(size=(n, DIM)).astype(np.float32),
+                  y=rng.normal(size=(n, DIM)).astype(np.float32))
+    idx = [np.arange(i, n, M) for i in range(M)]
+    init_fn, sample_fn = make_device_sampler(M, S, B, mode=sampling)
+    return device_store(arrays, idx), init_fn, sample_fn
+
+
+def _loss_fn(tr, frozen, batch, rng):
+    return 0.5 * jnp.mean((batch["x"] @ tr["w"] - batch["y"]) ** 2)
+
+
+def _tr0():
+    return {"w": jnp.ones((DIM, DIM)) * 0.1}
+
+
+def _cfg_rf(sampling="uniform"):
+    store, init_fn, sample_fn = _problem(sampling)
+    cfg = FLConfig(m=M, s=S, eta_l=0.03, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0, flat_state=True)
+    rf = make_round_fn(cfg, _loss_fn, {}, AvailabilityCfg(kind="sine"),
+                       jnp.full((M,), 0.6))
+    return cfg, rf, store, init_fn, sample_fn
+
+
+def test_cache_size_counts_signatures():
+    """The introspection hook the gate is built on: ``_cache_size()``
+    counts one entry per distinct input signature."""
+    f = jax.jit(lambda x: x * 2.0)
+    assert f._cache_size() == 0
+    f(jnp.ones((3,)))
+    f(jnp.ones((3,)))          # same signature -> no new entry
+    assert f._cache_size() == 1
+    f(jnp.ones((5,)))          # new shape -> second entry
+    assert f._cache_size() == 2
+
+
+def test_chunked_executor_compiles_once():
+    """ceil(T/K) dispatches of the K-round chunk reuse ONE executable —
+    the donated carry round-trips with stable shapes/dtypes."""
+    K, T = 4, 12
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf()
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    dk = jax.random.PRNGKey(42)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
+    state, hist = run_rounds(state, rf, None, T, chunk_rounds=K,
+                             chunk_fn=chunk_fn, sample_fn=sample_fn,
+                             store=store, data_key=dk,
+                             sampler_state=init_fn(store, dk))
+    assert len(hist) == T
+    assert chunk_fn._cache_size() == 1, (
+        "chunk executor retraced: the K-round scan must compile exactly "
+        "once for a fixed (state, sampler, store) signature")
+
+
+def test_chunked_epoch_executor_compiles_once():
+    """The carried epoch-permutation SamplerState stays signature-stable
+    across chunks (the reshuffle happens inside the scan)."""
+    K, T = 4, 12
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf("epoch")
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    dk = jax.random.PRNGKey(42)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
+    state, hist = run_rounds(state, rf, None, T, chunk_rounds=K,
+                             chunk_fn=chunk_fn, sample_fn=sample_fn,
+                             store=store, data_key=dk,
+                             sampler_state=init_fn(store, dk))
+    assert len(hist) == T
+    assert chunk_fn._cache_size() == 1
+
+
+def test_seeds_executor_compiles_once():
+    """The S-batched executor amortizes ONE compile across every seed
+    replicate AND every chunk."""
+    K, T = 4, 12
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf()
+    seeds_fn = make_seeds_chunk_fn(cfg, rf, sample_fn, K, SEEDS)
+    states, sss, dks = build_seed_batch(
+        cfg, _tr0(), jax.random.PRNGKey(0), jax.random.PRNGKey(42),
+        init_fn, store, SEEDS)
+    states, hists = run_seed_rounds(states, seeds_fn, T, K,
+                                    sampler_states=sss, store=store,
+                                    data_keys=dks, n_seeds=SEEDS)
+    assert all(len(h) == T for h in hists)
+    assert seeds_fn._cache_size() == 1, (
+        "seed-batched executor retraced across chunks")
+
+
+def test_grid_executor_compiles_once():
+    """The packed grid executor (C cells unrolled in one jit) holds one
+    signature across repeated dispatches."""
+    K = 2
+    cells, carries = [], []
+    for sampling in ("uniform", "epoch"):
+        cfg, rf, store, init_fn, sample_fn = _cfg_rf(sampling)
+        cells.append((rf, sample_fn))
+        carries.append((cfg, init_fn, store))
+    packed = make_grid_chunk_fn(cells, K, SEEDS)
+    for _ in range(2):   # donated carries -> rebuild fresh ones per call
+        st_t, ss_t, dk_t = [], [], []
+        for cfg, init_fn, store in carries:
+            states, sss, dks = build_seed_batch(
+                cfg, _tr0(), jax.random.PRNGKey(0), jax.random.PRNGKey(42),
+                init_fn, store, SEEDS)
+            st_t.append(states)
+            ss_t.append(sss)
+            dk_t.append(dks)
+        store_t = tuple(c[2] for c in carries)
+        packed(tuple(st_t), tuple(ss_t), store_t, tuple(dk_t))
+    assert packed._cache_size() == 1, (
+        "packed grid executor retraced between dispatches")
+
+
+def test_tail_executor_is_a_second_executable_not_a_retrace():
+    """A T % K tail compiles its own (shorter-scan) executable; the main
+    chunk executable still holds exactly one signature."""
+    K, T = 4, 10
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf()
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    tails = []
+
+    def make_tail_fn(k):
+        tails.append(make_chunk_fn(cfg, rf, sample_fn, k))
+        return tails[-1]
+
+    dk = jax.random.PRNGKey(42)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
+    state, hist = run_rounds(state, rf, None, T, chunk_rounds=K,
+                             chunk_fn=chunk_fn, sample_fn=sample_fn,
+                             make_tail_fn=make_tail_fn, store=store,
+                             data_key=dk, sampler_state=init_fn(store, dk))
+    assert len(hist) == T
+    assert chunk_fn._cache_size() == 1
+    assert len(tails) == 1 and tails[0]._cache_size() == 1

@@ -156,6 +156,32 @@ def test_readme_shows_semi_async_quickstart():
         assert needle in text, f"README lost {needle}"
 
 
+def test_readme_flcheck_quickstart_runs_clean():
+    """The README's static-invariants quickstart (`python -m tools.flcheck
+    src/`) is a real fenced command AND exits 0 against the committed
+    tree — a violation that lands in src/ fails the docs suite too."""
+    cmds = [c for c in _shell_commands() if "tools.flcheck" in c]
+    assert cmds, "README lost its flcheck quickstart command"
+    r = _run(cmds[0], timeout=300)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "clean" in r.stdout
+
+
+def test_docs_cover_static_invariants():
+    """The invariant docs stay in place: ARCHITECTURE.md's rule table and
+    the README's pragma contract."""
+    text = open(README).read()
+    for needle in ("python -m tools.flcheck src/", "flcheck: ignore[",
+                   "Static invariants"):
+        assert needle in text, f"README lost {needle}"
+    arch = open(os.path.join(REPO, "docs", "ARCHITECTURE.md")).read()
+    for needle in ("Invariants & static checks", "no-host-sync-in-jit",
+                   "key-hygiene", "donation-discipline", "registry-contract",
+                   "nan-confinement", "compile_count", "strict_rails",
+                   'transfer_guard("disallow")'):
+        assert needle in arch, f"ARCHITECTURE.md lost {needle}"
+
+
 @pytest.mark.slow
 def test_readme_dryrun_command_runs(tmp_path):
     """Smoke-run the README's mini dry-run command (rewritten to a tmp

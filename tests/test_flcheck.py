@@ -1,0 +1,535 @@
+"""tools/flcheck — the repo's static invariant checker, checked.
+
+Per-rule good/bad fixtures (in-memory sources through the same
+``check_project`` pass CI runs), the pragma contract (suppression works,
+a justification is REQUIRED, unknown rule ids are themselves findings),
+and the CLI exit-code contract (nonzero on violations, zero on clean).
+"""
+import ast
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from tools.flcheck import RULES, check_project, parse_pragmas  # noqa: E402
+from tools.flcheck.common import Project, SourceFile  # noqa: E402
+
+
+def _project(files):
+    return Project([SourceFile(p, textwrap.dedent(s),
+                               ast.parse(textwrap.dedent(s)))
+                    for p, s in files.items()])
+
+
+def _findings(files, rule=None):
+    out = check_project(_project(files))
+    return [v for v in out if rule is None or v.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# R1 — no host sync reachable from the executor scan bodies
+# ---------------------------------------------------------------------------
+
+def test_r1_flags_sync_reachable_from_chunk_factory():
+    files = {"src/a.py": """
+        def _helper_metric(x):
+            return float(x * 2)
+
+        def make_chunk_fn(cfg):
+            def body(carry, _):
+                return carry, _helper_metric(carry)
+            return body
+        """}
+    vs = _findings(files, "R1")
+    assert len(vs) == 1 and vs[0].line == 3 and "float" in vs[0].message
+
+
+def test_r1_resolves_private_helper_suffix_across_files():
+    # strat.aggregate_flat inside the factory reaches _foo_aggregate_flat
+    # in ANOTHER module (the repo's private-helper naming convention)
+    files = {
+        "src/engine.py": """
+            def make_seeds_chunk_fn(strat):
+                def body(c, _):
+                    return strat.aggregate_flat(c), None
+                return body
+            """,
+        "src/strategies.py": """
+            import jax
+
+            def _foo_aggregate_flat(c):
+                return jax.device_get(c)
+            """,
+    }
+    vs = _findings(files, "R1")
+    assert len(vs) == 1 and vs[0].path == "src/strategies.py"
+    assert "device_get" in vs[0].message
+
+
+def test_r1_ignores_host_side_code():
+    # the same syncs OUTSIDE the executor call graph are the host loop's
+    # job (one device_get per chunk) — not violations
+    files = {"src/a.py": """
+        import jax
+
+        def make_chunk_fn(cfg):
+            def body(carry, _):
+                return carry, carry
+            return body
+
+        def run_rounds(chunk, state):
+            state, metrics = chunk(state, None)
+            return state, [float(v) for v in jax.device_get(metrics)]
+        """}
+    assert _findings(files, "R1") == []
+
+
+def test_r1_constant_float_is_fine():
+    files = {"src/a.py": """
+        def make_chunk_fn(cfg):
+            eta = float(1e-3)
+            def body(c, _):
+                return c * eta, None
+            return body
+        """}
+    assert _findings(files, "R1") == []
+
+
+# ---------------------------------------------------------------------------
+# R2 — key hygiene
+# ---------------------------------------------------------------------------
+
+def test_r2_flags_key_reuse():
+    files = {"src/a.py": """
+        import jax
+
+        def draw(key):
+            a = jax.random.normal(key, (2,))
+            b = jax.random.normal(key, (2,))
+            return a + b
+        """}
+    vs = _findings(files, "R2")
+    assert len(vs) == 1 and vs[0].line == 6 and "reused" in vs[0].message
+
+
+def test_r2_split_between_draws_is_clean():
+    files = {"src/a.py": """
+        import jax
+
+        def draw(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (2,))
+            b = jax.random.normal(k2, (2,))
+            return a + b
+        """}
+    assert _findings(files, "R2") == []
+
+
+def test_r2_terminated_branch_env_does_not_leak():
+    # the markov early-return pattern (availability.sample_active): a
+    # draw inside a branch that RETURNS must not poison the fall-through
+    files = {"src/a.py": """
+        import jax
+
+        def draw(key, markov):
+            if markov:
+                return jax.random.uniform(key, (2,))
+            return jax.random.normal(key, (2,))
+        """}
+    assert _findings(files, "R2") == []
+
+
+def test_r2_loop_reuse_without_rebind_is_flagged():
+    files = {"src/a.py": """
+        import jax
+
+        def draw(key, n):
+            out = []
+            for _ in range(n):
+                out.append(jax.random.normal(key, (2,)))
+            return out
+        """}
+    vs = _findings(files, "R2")
+    assert len(vs) == 1 and "reused" in vs[0].message
+
+
+def test_r2_nonconstant_subscript_index_is_not_tracked():
+    # ks[i] with a moving index is a DIFFERENT key each use (models/cnn.py
+    # layer-init idiom) — the textual pseudo-name must not alias them
+    files = {"src/a.py": """
+        import jax
+
+        def init(key, layers):
+            ks = jax.random.split(key, len(layers) + 1)
+            i = 0
+            w = jax.random.normal(ks[i], (2, 2))
+            i += 1
+            b = jax.random.normal(ks[i], (2,))
+            return w, b
+        """}
+    assert _findings(files, "R2") == []
+
+
+def test_r2_constant_subscript_reuse_is_flagged():
+    files = {"src/a.py": """
+        import jax
+
+        def init(key):
+            ks = jax.random.split(key, 4)
+            w = jax.random.normal(ks[0], (2, 2))
+            b = jax.random.normal(ks[0], (2,))
+            return w, b
+        """}
+    vs = _findings(files, "R2")
+    assert len(vs) == 1 and "ks[0]" in vs[0].message
+
+
+def test_r2_hardcoded_seed_in_library_code():
+    files = {"src/repro/core/lib.py": """
+        import jax
+
+        def init():
+            return jax.random.PRNGKey(0)
+        """}
+    vs = _findings(files, "R2")
+    assert len(vs) == 1 and "hard-coded" in vs[0].message
+
+
+def test_r2_hardcoded_seed_allowed_in_tests_and_launch():
+    src = """
+        import jax
+
+        def init():
+            return jax.random.PRNGKey(0)
+        """
+    assert _findings({"tests/test_x.py": src}, "R2") == []
+    assert _findings({"src/repro/launch/dryrun.py": src}, "R2") == []
+
+
+# ---------------------------------------------------------------------------
+# R3 — donation discipline
+# ---------------------------------------------------------------------------
+
+def test_r3_flags_read_after_donation():
+    files = {"src/a.py": """
+        from repro.core import make_chunk_fn
+
+        def run(cfg, rf, sf, state, ss, store, key):
+            chunk = make_chunk_fn(cfg, rf, sf, 4)
+            out = chunk(state, ss, store, key)
+            return state.global_tr
+        """}
+    vs = _findings(files, "R3")
+    assert len(vs) == 1 and vs[0].line == 7
+    assert "`state` read after being donated" in vs[0].message
+
+
+def test_r3_same_statement_rebind_is_the_idiom():
+    files = {"src/a.py": """
+        from repro.core import make_chunk_fn
+
+        def run(cfg, rf, sf, state, ss, store, key):
+            chunk = make_chunk_fn(cfg, rf, sf, 4)
+            state, ss, metrics = chunk(state, ss, store, key)
+            return state.global_tr, metrics
+        """}
+    assert _findings(files, "R3") == []
+
+
+def test_r3_jax_jit_literal_donate_argnums():
+    files = {"src/a.py": """
+        import jax
+
+        def run(f, x, y):
+            g = jax.jit(f, donate_argnums=(0,))
+            out = g(x, y)
+            return x + out
+        """}
+    vs = _findings(files, "R3")
+    assert len(vs) == 1 and "`x` read after" in vs[0].message
+
+
+def test_r3_donate_false_opts_out():
+    files = {"src/a.py": """
+        from repro.core import make_chunk_fn
+
+        def run(cfg, rf, sf, state, ss, store, key):
+            chunk = make_chunk_fn(cfg, rf, sf, 4, donate=False)
+            out = chunk(state, ss, store, key)
+            return state.global_tr
+        """}
+    assert _findings(files, "R3") == []
+
+
+def test_r3_rebind_revives_the_name():
+    files = {"src/a.py": """
+        from repro.core import make_chunk_fn
+
+        def run(cfg, rf, sf, state, ss, store, key, fresh):
+            chunk = make_chunk_fn(cfg, rf, sf, 4)
+            out = chunk(state, ss, store, key)
+            state = fresh
+            return state.global_tr
+        """}
+    assert _findings(files, "R3") == []
+
+
+# ---------------------------------------------------------------------------
+# R4 — registry contract
+# ---------------------------------------------------------------------------
+
+_R4_OK = """
+    def _a_agg(*, mask, mask_upload=None, ages=None):
+        return mask
+
+    def _a_aggregate_flat(*, mask, mask_upload=None, ages=None):
+        return mask
+
+    A = Strategy("a", False, None, _a_agg, _a_aggregate_flat)
+    REGISTRY = {s.name: s for s in (A,)}
+    """
+
+
+def test_r4_clean_registry():
+    assert _findings({"src/strategies.py": _R4_OK}, "R4") == []
+
+
+def test_r4_missing_kwarg_is_flagged():
+    files = {"src/strategies.py": """
+        def _a_agg(*, mask, mask_upload=None, ages=None):
+            return mask
+
+        def _a_aggregate_flat(*, mask, mask_upload=None):
+            return mask
+
+        A = Strategy("a", False, None, _a_agg, _a_aggregate_flat)
+        REGISTRY = {s.name: s for s in (A,)}
+        """}
+    vs = _findings(files, "R4")
+    assert len(vs) == 1 and "ages=" in vs[0].message
+
+
+def test_r4_missing_aggregate_flat_is_flagged():
+    files = {"src/strategies.py": """
+        def _a_agg(*, mask, mask_upload=None, ages=None):
+            return mask
+
+        A = Strategy("a", False, None, _a_agg, None)
+        REGISTRY = {s.name: s for s in (A,)}
+        """}
+    vs = _findings(files, "R4")
+    assert len(vs) == 1 and "no aggregate_flat" in vs[0].message
+
+
+def test_r4_resolves_one_level_factory_and_kwargs_satisfy():
+    files = {"src/strategies.py": """
+        def _mk(name):
+            def _agg(*, mask, **kwargs):
+                return mask
+            return Strategy(name, False, None, _agg, _agg)
+
+        A = _mk("a")
+        REGISTRY = {s.name: s for s in (A,)}
+        """}
+    assert _findings(files, "R4") == []
+
+
+def test_r4_round_metrics_shared_keys():
+    files = {"src/engine.py": """
+        def make_round_fn(cfg):
+            def round_fn(state, batch):
+                metrics = dict(loss=1.0, n_active=2)
+                return state, metrics
+            return round_fn
+        """}
+    vs = _findings(files, "R4")
+    assert len(vs) == 1 and "mean_echo" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# R5 — NaN confinement in jnp.where branches
+# ---------------------------------------------------------------------------
+
+def test_r5_flags_unguarded_division_in_branch():
+    files = {"src/a.py": """
+        import jax.numpy as jnp
+
+        def f(mask, x, n):
+            return jnp.where(mask, x / n, 0.0)
+        """}
+    vs = _findings(files, "R5")
+    assert len(vs) == 1 and "division by unguarded `n`" in vs[0].message
+
+
+def test_r5_guarded_denominator_is_clean():
+    files = {"src/a.py": """
+        import jax.numpy as jnp
+
+        def f(mask, x, n):
+            return jnp.where(mask, x / jnp.maximum(n, 1e-8), 0.0)
+        """}
+    assert _findings(files, "R5") == []
+
+
+def test_r5_flags_unguarded_log_and_eps_idiom_passes():
+    files = {"src/a.py": """
+        import jax.numpy as jnp
+
+        def f(mask, x):
+            bad = jnp.where(mask, jnp.log(x), 0.0)
+            good = jnp.where(mask, jnp.log(x + 1e-12), 0.0)
+            return bad + good
+        """}
+    vs = _findings(files, "R5")
+    assert len(vs) == 1 and vs[0].line == 5 and "log" in vs[0].message
+
+
+def test_r5_division_outside_where_is_not_its_business():
+    files = {"src/a.py": """
+        import jax.numpy as jnp
+
+        def f(x, n):
+            return x / n
+        """}
+    assert _findings(files, "R5") == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+
+def test_pragma_with_justification_suppresses():
+    files = {"src/a.py": """
+        import jax.numpy as jnp
+
+        def f(mask, x, n):
+            return jnp.where(mask, x / n, 0.0)  # flcheck: ignore[R5] -- n is a strictly positive count by construction
+        """}
+    assert _findings(files) == []
+
+
+def test_pragma_without_justification_is_itself_a_finding():
+    files = {"src/a.py": """
+        import jax.numpy as jnp
+
+        def f(mask, x, n):
+            return jnp.where(mask, x / n, 0.0)  # flcheck: ignore[R5]
+        """}
+    vs = _findings(files)
+    rules = sorted(v.rule for v in vs)
+    # the bare pragma does NOT suppress, and is reported itself
+    assert rules == ["PRAGMA", "R5"]
+    assert any("justification" in v.message for v in vs)
+
+
+def test_pragma_unknown_rule_id_is_reported():
+    files = {"src/a.py": """
+        x = 1  # flcheck: ignore[R9] -- no such rule
+        """}
+    vs = _findings(files)
+    assert len(vs) == 1 and vs[0].rule == "PRAGMA"
+    assert "unknown rule" in vs[0].message and "R9" in vs[0].message
+
+
+def test_pragma_only_suppresses_named_rule_on_its_line():
+    files = {"src/a.py": """
+        import jax.numpy as jnp
+
+        def f(mask, x, n):
+            a = jnp.where(mask, x / n, 0.0)  # flcheck: ignore[R1] -- wrong rule named
+            b = jnp.where(mask, x / n, 0.0)
+            return a + b
+        """}
+    vs = _findings(files, "R5")
+    assert len(vs) == 2  # neither where is suppressed
+
+
+def test_parse_pragmas_multi_rule():
+    suppress, bad = parse_pragmas(
+        "y = g()  # flcheck: ignore[R1, R3] -- trusted setup\n", "p.py")
+    assert bad == [] and suppress == {1: {"R1", "R3"}}
+
+
+# ---------------------------------------------------------------------------
+# CLI driver contract
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, src):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(src))
+    return str(p)
+
+
+def test_cli_exits_nonzero_on_violation_and_prints_location(tmp_path, capsys):
+    from tools.flcheck.__main__ import main
+    bad = _write(tmp_path, "bad.py", """
+        import jax.numpy as jnp
+
+        def f(mask, x, n):
+            return jnp.where(mask, x / n, 0.0)
+        """)
+    assert main([bad]) == 1
+    out = capsys.readouterr().out
+    assert f"{bad}:5 R5" in out and "violation" in out
+
+
+def test_cli_exits_zero_on_clean_tree(tmp_path, capsys):
+    from tools.flcheck.__main__ import main
+    _write(tmp_path, "good.py", """
+        import jax.numpy as jnp
+
+        def f(mask, x, n):
+            return jnp.where(mask, x / jnp.maximum(n, 1e-8), 0.0)
+        """)
+    assert main([str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "clean" in out
+
+
+def test_cli_rule_filter(tmp_path):
+    from tools.flcheck.__main__ import main
+    _write(tmp_path, "bad.py", """
+        import jax.numpy as jnp
+
+        def f(mask, x, n):
+            return jnp.where(mask, x / n, 0.0)
+        """)
+    assert main([str(tmp_path), "--rule", "R5"]) == 1
+    assert main([str(tmp_path), "--rule", "R1"]) == 0
+
+
+def test_module_invocation_matches_ci_command(tmp_path):
+    """`python -m tools.flcheck <paths>` — the exact CI / README command —
+    exits 1 on violations from a cold process."""
+    bad = _write(tmp_path, "bad.py", """
+        import jax
+
+        def draw(key):
+            a = jax.random.normal(key, (2,))
+            b = jax.random.normal(key, (2,))
+            return a + b
+        """)
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.flcheck", bad],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "R2" in proc.stdout and "reused" in proc.stdout
+
+
+def test_src_tree_is_clean_under_flcheck():
+    """The committed src/ tree holds every invariant (pragmas included) —
+    the satellite guarantee this PR ships."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.flcheck", "src/"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_rule_registry_is_complete():
+    assert sorted(RULES) == ["R1", "R2", "R3", "R4", "R5"]
+    for rid, mod in RULES.items():
+        assert mod.RULE == rid and callable(mod.check)

@@ -22,6 +22,10 @@ from repro.launch.experiments import (build_seed_batch, build_seed_executor,
                                       run_seed_rounds)
 from repro.launch.mesh import make_seed_mesh, seed_mesh_shape
 
+# runtime rails (conftest.strict_rails): no implicit host<->device
+# transfers, strict dtype promotion, tracer-leak checking
+pytestmark = pytest.mark.strict_rails
+
 M, S_, B, DIM = 6, 3, 4, 4
 SEEDS = 4
 

@@ -18,7 +18,11 @@ rounds_per_sec/{host_loop,chunked[_epoch|_faults],chunked_seeds[_mesh]}
 executor numbers and the kernel micro-benches are guarded.  Thresholds are
 ratio-based against the committed number and the bench itself is
 min-of-reps, because container wall-clock is 2-3x noisy — never gate on
-absolute times:
+absolute times.  The ``compile_count/*`` rows ride the same gate with
+exact semantics: their us_per_call is the executor's jit signature-cache
+size after the full bench (expected 1.0 — one compile per shape
+signature), so a change that makes any executor retrace per chunk fails
+the ratio check outright, noise-free:
 
     python tools/bench_record.py --check
 
@@ -91,6 +95,14 @@ REQUIRED_ROWS = (
     "rounds_per_sec/chunked_seeds_mesh",
     "rounds_per_sec/chunked_faults",
     "rounds_per_sec/chunked_staleness",
+    # compile-count gate: us_per_call IS the jit signature-cache size of
+    # the executor after warmup + all timed reps (expected 1.0 — one
+    # compile per shape signature), so the ratio check turns any 1 -> 2
+    # retrace regression into a hard failure with zero timing noise;
+    # derived is the warmup (trace+compile) time in us, never gated
+    "compile_count/host_loop",
+    "compile_count/chunked",
+    "compile_count/chunked_seeds",
 )
 
 

@@ -1,0 +1,124 @@
+"""flcheck — repo-specific static invariants for the executor substrate.
+
+The paper's O(1)-overhead pitch only survives in this reproduction
+because of a handful of hand-maintained invariants (one device_get per
+chunk, donated-carry discipline, fold_in key hygiene, NaN-confined
+where-writes, the 10-strategy registry contract).  ``flcheck`` turns the
+prose versions of those rules (CHANGES.md, docs/ARCHITECTURE.md) into an
+AST pass over ``src/``:
+
+  R1  no-host-sync-in-jit     device_get / .item() / float() / np.asarray
+                              reachable from the chunk executors' scan
+                              bodies
+  R2  key-hygiene             every jax.random draw consumes a fresh
+                              split/fold_in product; no PRNGKey(const)
+                              in library code
+  R3  donation-discipline     a name passed through a donate_argnums
+                              position is dead after the call
+  R4  registry-contract       every REGISTRY strategy has aggregate_flat
+                              accepting ages= / mask_upload=, and the
+                              round metrics keep the shared keys
+  R5  nan-confinement         no unguarded /, log, sqrt inside a
+                              jnp.where branch (both branches evaluate)
+
+Violations print as ``path:line rule-id message`` and the driver
+(``python -m tools.flcheck src/``) exits non-zero when any survive.
+
+A violation that is *intentionally* safe can be pragma'd on its line::
+
+    x = risky_thing()  # flcheck: ignore[R2] -- shape-only, key never used
+
+The justification after ``--`` is REQUIRED: a bare ``ignore[...]``
+pragma is itself reported (rule ``PRAGMA``), so every suppression
+documents why the invariant does not apply.
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+from tools.flcheck import (r1_host_sync, r2_key_hygiene, r3_donation,
+                           r4_registry, r5_nan_confinement)
+from tools.flcheck.common import Project, Violation
+
+RULES = {
+    r1_host_sync.RULE: r1_host_sync,
+    r2_key_hygiene.RULE: r2_key_hygiene,
+    r3_donation.RULE: r3_donation,
+    r4_registry.RULE: r4_registry,
+    r5_nan_confinement.RULE: r5_nan_confinement,
+}
+
+_PRAGMA = re.compile(
+    r"#\s*flcheck:\s*ignore\[([A-Za-z0-9_,\s]+)\]"
+    r"(?:\s*--\s*(?P<why>\S.*))?")
+
+
+def parse_pragmas(source: str, path: str):
+    """(line -> set of suppressed rule ids, pragma violations).
+
+    A pragma with no ``-- justification`` does not suppress anything and
+    is reported itself — suppressions must be self-documenting."""
+    suppress, bad = {}, []
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA.search(line)
+        if not m:
+            continue
+        rules = {r.strip().upper() for r in m.group(1).split(",")
+                 if r.strip()}
+        if not m.group("why"):
+            bad.append(Violation(
+                path, i, "PRAGMA",
+                "flcheck pragma without a justification — write "
+                "`# flcheck: ignore[RULE] -- why this is safe`"))
+            continue
+        unknown = rules - set(RULES)
+        if unknown:
+            bad.append(Violation(
+                path, i, "PRAGMA",
+                f"flcheck pragma names unknown rule(s) "
+                f"{', '.join(sorted(unknown))} (known: "
+                f"{', '.join(sorted(RULES))})"))
+        suppress.setdefault(i, set()).update(rules)
+    return suppress, bad
+
+
+def check_project(project: Project, rules=None):
+    """All surviving violations for the parsed project, sorted."""
+    selected = RULES if rules is None else {
+        r: RULES[r.upper()] for r in rules}
+    raw = []
+    for mod in selected.values():
+        raw.extend(mod.check(project))
+    pragma_by_file, out = {}, []
+    for sf in project.files:
+        suppress, bad = parse_pragmas(sf.source, sf.path)
+        pragma_by_file[sf.path] = suppress
+        out.extend(bad)
+    seen = set()
+    for v in raw:
+        key = (v.path, v.line, v.rule, v.message)
+        if key in seen:
+            continue
+        seen.add(key)
+        if v.rule in pragma_by_file.get(v.path, {}).get(v.line, ()):
+            continue
+        out.append(v)
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule, v.message))
+
+
+def run(paths, rules=None, out=None) -> int:
+    """Check ``paths``; print findings; return the violation count."""
+    out = sys.stdout if out is None else out  # resolve at CALL time so a
+    # redirected/captured stdout (pytest capsys, CI tee) is honoured
+    project = Project.from_paths(paths)
+    violations = check_project(project, rules=rules)
+    for v in violations:
+        print(v, file=out)
+    if violations:
+        print(f"flcheck: {len(violations)} violation(s) across "
+              f"{len({v.path for v in violations})} file(s)", file=out)
+    else:
+        print(f"flcheck: {len(project.files)} file(s) clean "
+              f"({', '.join(sorted(RULES))})", file=out)
+    return len(violations)

@@ -1,0 +1,29 @@
+"""CLI driver: ``python -m tools.flcheck src/`` — exit 1 on violations.
+
+Run from the repo root (the checker resolves itself through the
+``tools`` package).  ``--rule`` narrows to a subset while iterating on a
+fix; CI always runs the full set.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.flcheck import RULES, run
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.flcheck",
+        description="repo-specific AST invariant checker (R1-R5)")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to check (typically src/)")
+    ap.add_argument("--rule", action="append", default=None,
+                    metavar="ID", choices=sorted(RULES),
+                    help="restrict to one rule id (repeatable)")
+    args = ap.parse_args(argv)
+    return 1 if run(args.paths, rules=args.rule) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,138 @@
+"""Shared AST plumbing for the flcheck rules.
+
+Everything here is stdlib-``ast`` only (no imports of the checked code):
+dotted-name resolution for call sites, a parsed-project container, and
+the ``Violation`` record every rule emits.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One ``path:line rule-id message`` finding."""
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str          # as given on the command line (relative kept)
+    source: str
+    tree: ast.Module
+
+
+class Project:
+    """All parsed files of one flcheck run (rules see the whole set, so
+    cross-module reachability — R1 — and cross-file contracts — R4 —
+    stay one pass)."""
+
+    def __init__(self, files: list[SourceFile]):
+        self.files = files
+
+    @classmethod
+    def from_paths(cls, paths) -> "Project":
+        out, seen = [], set()
+        for p in paths:
+            if os.path.isdir(p):
+                for root, dirs, names in os.walk(p):
+                    dirs[:] = sorted(d for d in dirs
+                                     if d not in ("__pycache__", ".git"))
+                    for name in sorted(names):
+                        if name.endswith(".py"):
+                            out.append(os.path.join(root, name))
+            elif p.endswith(".py"):
+                out.append(p)
+        files = []
+        for p in out:
+            rp = os.path.normpath(p)
+            if rp in seen:
+                continue
+            seen.add(rp)
+            with open(rp, encoding="utf-8") as f:
+                src = f.read()
+            files.append(SourceFile(rp, src, ast.parse(src, filename=rp)))
+        return cls(files)
+
+
+def dotted(node) -> str | None:
+    """``jax.random.split`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> str | None:
+    return dotted(call.func)
+
+
+def terminal(name: str | None) -> str | None:
+    return None if name is None else name.rsplit(".", 1)[-1]
+
+
+def last_two(name: str | None) -> tuple[str, ...]:
+    return () if name is None else tuple(name.split(".")[-2:])
+
+
+def is_constant(node) -> bool:
+    """Literal constants, including unary +/- and numeric casts of
+    constants (``jnp.float32(2)``)."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp) and \
+            isinstance(node.op, (ast.UAdd, ast.USub)):
+        return is_constant(node.operand)
+    if isinstance(node, ast.Call) and not node.keywords and \
+            len(node.args) == 1 and terminal(call_name(node)) in (
+                "float32", "float16", "bfloat16", "int32", "int64",
+                "float64", "float", "int"):
+        return is_constant(node.args[0])
+    return False
+
+
+def subtree_calls(node):
+    """Every ast.Call in the subtree, in source order."""
+    return [n for n in ast.walk(node) if isinstance(n, ast.Call)]
+
+
+def assigned_names(target) -> list[str]:
+    """Flat Name targets of an assignment target (tuples recursed)."""
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out = []
+        for elt in target.elts:
+            out.extend(assigned_names(elt))
+        return out
+    if isinstance(target, ast.Starred):
+        return assigned_names(target.value)
+    return []
+
+
+def func_defs(tree) -> list[ast.FunctionDef]:
+    """Every (async) function def in the module, any nesting depth."""
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def statements_of(fn):
+    """The body statements of a def, skipping a leading docstring."""
+    body = fn.body
+    if body and isinstance(body[0], ast.Expr) and \
+            isinstance(body[0].value, ast.Constant) and \
+            isinstance(body[0].value.value, str):
+        return body[1:]
+    return body

@@ -1,0 +1,107 @@
+"""R1 — no host sync in jit-reachable executor code.
+
+The chunked / seeds / packed executors' whole perf contract is ONE
+dispatch and ONE ``jax.device_get`` per chunk (CHANGES.md, PR 2).  Any
+host synchronisation on a traced value inside the scan bodies —
+``jax.device_get``, ``.item()``, ``.block_until_ready()``, ``float()``,
+``np.asarray`` — either breaks tracing outright or silently serialises
+the dispatch pipeline.
+
+Reachability is static and name-based: the seed set is everything
+lexically inside ``make_chunk_fn`` / ``make_seeds_chunk_fn`` /
+``make_grid_chunk_fn`` (the scan bodies and their jit wrappers), and an
+edge links a call site ``f(...)`` or ``obj.f(...)`` to every function in
+the project named ``f`` or ``*_f`` (the repo's private-helper naming
+convention, e.g. ``strat.aggregate_flat`` -> ``_fedawe_aggregate_flat``).
+This over-approximates — a flagged call may sit on a cold path — which is
+what the pragma escape hatch is for; the dual under-approximation
+(callables threaded through parameters the names never resolve) is why
+the runtime transfer-guard rails exist alongside this pass.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.flcheck.common import (Project, Violation, call_name, is_constant,
+                                  subtree_calls, terminal)
+
+RULE = "R1"
+
+ENTRY_POINTS = ("make_chunk_fn", "make_seeds_chunk_fn", "make_grid_chunk_fn")
+
+#: method / attribute calls that force a device->host sync
+_SYNC_ATTRS = {"device_get", "item", "block_until_ready", "tolist"}
+#: numpy entry points that materialise a traced array on the host
+_NP_ROOTS = {"np", "numpy", "onp"}
+_NP_FUNCS = {"asarray", "array", "copy"}
+
+
+def _index_defs(project):
+    """name -> [(SourceFile, def node)] over the whole project."""
+    by_name = {}
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                by_name.setdefault(node.name, []).append((sf, node))
+    return by_name
+
+
+def _resolve(name, by_name):
+    """Defs a call to ``name`` may reach: exact matches plus the
+    ``_<qualifier>_<name>`` private-helper convention."""
+    hits = list(by_name.get(name, ()))
+    suffix = "_" + name
+    for defname, defs in by_name.items():
+        if defname != name and defname.endswith(suffix):
+            hits.extend(defs)
+    return hits
+
+
+def _scan_violations(sf, fn, out):
+    for call in subtree_calls(fn):
+        cn = call_name(call)
+        term = terminal(cn)
+        if isinstance(call.func, ast.Attribute) and \
+                call.func.attr in _SYNC_ATTRS:
+            out.append(Violation(
+                sf.path, call.lineno, RULE,
+                f"host sync `.{call.func.attr}(...)` reachable from the "
+                f"jitted scan body of {ENTRY_POINTS[0]}-family executors"))
+        elif isinstance(call.func, ast.Name) and call.func.id == "float" \
+                and call.args and not all(is_constant(a) for a in call.args):
+            out.append(Violation(
+                sf.path, call.lineno, RULE,
+                "`float(...)` on a non-constant inside jit-reachable code "
+                "forces a device->host sync"))
+        elif cn is not None and "." in cn:
+            root = cn.split(".", 1)[0]
+            if root in _NP_ROOTS and term in _NP_FUNCS:
+                out.append(Violation(
+                    sf.path, call.lineno, RULE,
+                    f"`{cn}(...)` materialises a traced value on the host "
+                    "inside jit-reachable code (use jnp, or hoist out of "
+                    "the scan body)"))
+
+
+def check(project: Project):
+    by_name = _index_defs(project)
+    # seeds: the executor factories themselves (their subtrees hold the
+    # scan bodies, the per-round closures, and the jit wrapping)
+    work = []
+    for entry in ENTRY_POINTS:
+        work.extend(by_name.get(entry, ()))
+    reached, out = [], []
+    seen = set()
+    while work:
+        sf, fn = work.pop()
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        reached.append((sf, fn))
+        for call in subtree_calls(fn):
+            term = terminal(call_name(call))
+            if term:
+                work.extend(_resolve(term, by_name))
+    for sf, fn in reached:
+        _scan_violations(sf, fn, out)
+    return out

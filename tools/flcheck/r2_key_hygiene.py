@@ -1,0 +1,225 @@
+"""R2 — PRNG key hygiene.
+
+Every ``jax.random.*`` draw must consume a key freshly produced by
+``split`` / ``fold_in``: reusing a key correlates streams that every
+parity test in this repo assumes independent (the chunked / seeds /
+packed executors are bit-compared against host loops keyed by the same
+``fold_in`` discipline), and a hard-coded ``PRNGKey(<const>)`` outside
+tests/ and launch/ bakes one stream into library code.
+
+The analysis is per function scope, flow-sensitive over a simple
+branch-aware walk: a name becomes *fresh* when (re)bound (parameters
+start fresh — freshness across calls is the caller's contract), is
+*consumed* when passed as the key argument of a draw, and consuming a
+non-fresh name is a violation.  ``if``/``else`` branches are analysed
+independently and merged (fresh only if fresh on every path); loop
+bodies are walked twice so a draw that consumes the same key on every
+iteration without rebinding it is caught.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.flcheck.common import (Project, Violation, assigned_names,
+                                  call_name, is_constant, last_two)
+
+RULE = "R2"
+
+#: jax.random producers — consuming a key through these is what MAKES it
+#: fresh, never a draw
+_PRODUCERS = {"split", "fold_in", "PRNGKey", "key", "clone", "key_data",
+              "wrap_key_data"}
+#: path fragments where literal PRNGKey(const) seeds are legitimate
+#: (entry points and test scaffolding own their seeds)
+_SEED_OK = ("tests", "test_", "launch", "benchmarks", "conftest")
+
+
+def _is_jax_random(call: ast.Call) -> str | None:
+    """The ``jax.random`` function name this call invokes, or None."""
+    lt = last_two(call_name(call))
+    if len(lt) == 2 and lt[0] == "random":
+        return lt[1]
+    return None
+
+
+def _key_expr(call: ast.Call):
+    """The key argument of a jax.random call (first positional, or the
+    ``key=`` keyword)."""
+    if call.args:
+        return call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return None
+
+
+def _path_allows_const_seed(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return any(frag in norm for frag in _SEED_OK)
+
+
+class _Scope:
+    """Branch-aware freshness walk of one function body."""
+
+    def __init__(self, sf, fn, out):
+        self.sf, self.fn, self.out = sf, fn, out
+        self.seen = set()          # dedupe across the double loop pass
+        args = fn.args
+        params = [a.arg for a in (args.posonlyargs + args.args
+                                  + args.kwonlyargs)]
+        if args.vararg:
+            params.append(args.vararg.arg)
+        if args.kwarg:
+            params.append(args.kwarg.arg)
+        self.env = {p: True for p in params}
+
+    def _violate(self, node, msg):
+        key = (node.lineno, msg)
+        if key not in self.seen:
+            self.seen.add(key)
+            self.out.append(Violation(self.sf.path, node.lineno, RULE, msg))
+
+    def _consume(self, expr, draw_name, call):
+        """Mark the draw's key expression consumed; flag reuse."""
+        if isinstance(expr, ast.Call):
+            fn = _is_jax_random(expr)
+            if fn in ("split", "fold_in"):
+                return  # freshly produced inline
+            if fn == "PRNGKey" or fn == "key":
+                return  # literal seed — handled by the PRNGKey check
+            return      # unknown producer call: assume fresh
+        name = None
+        if isinstance(expr, ast.Name):
+            name = expr.id
+        elif isinstance(expr, ast.Subscript) and \
+                not is_constant(expr.slice):
+            # `ks[i]` with a loop/counter index: the textual pseudo-name
+            # is the same while the key differs each iteration — only
+            # constant-index subscripts are trackable
+            return
+        elif isinstance(expr, (ast.Attribute, ast.Subscript)):
+            try:
+                name = ast.unparse(expr)
+            except Exception:  # pragma: no cover - unparse is total on 3.9+
+                return
+        if name is None:
+            return
+        if not self.env.get(name, True):
+            self._violate(
+                call, f"key `{name}` reused by jax.random.{draw_name} — "
+                      "every draw needs a fresh split/fold_in product")
+        self.env[name] = False
+
+    def _visit_expr(self, node):
+        """Walk an expression subtree in eval order, skipping nested
+        function bodies (their own scope)."""
+        for child in ast.walk(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)) and child is not node:
+                continue
+            if not isinstance(child, ast.Call):
+                continue
+            fn = _is_jax_random(child)
+            if fn is None:
+                continue
+            if fn in ("PRNGKey", "key"):
+                arg = child.args[0] if child.args else None
+                if arg is not None and is_constant(arg) and \
+                        not _path_allows_const_seed(self.sf.path):
+                    self._violate(
+                        child,
+                        f"hard-coded jax.random.{fn}({ast.unparse(arg)}) in "
+                        "library code — thread a key in (fold_in) instead")
+            elif fn not in _PRODUCERS:
+                key = _key_expr(child)
+                if key is not None:
+                    self._consume(key, fn, child)
+
+    def _exprs_of(self, stmt):
+        """Non-statement child expressions of one simple statement."""
+        for field in ast.iter_child_nodes(stmt):
+            if not isinstance(field, ast.stmt):
+                yield field
+
+    def run_block(self, stmts):
+        """Walk one statement list; returns True when the block terminates
+        (return/raise/break/continue) — a terminated branch's env must not
+        leak into the post-``if`` merge."""
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested defs are their own scope — walked separately by
+                # check(); the def statement just binds a (non-key) name
+                self.env[stmt.name] = True
+                continue
+            if isinstance(stmt, ast.If):
+                self._visit_expr(stmt.test)
+                base = dict(self.env)
+                done_t = self.run_block(stmt.body)
+                env_t = self.env
+                self.env = dict(base)
+                done_f = self.run_block(stmt.orelse)
+                env_f = self.env
+                if done_t and done_f:
+                    self.env = base
+                elif done_t:
+                    self.env = env_f
+                elif done_f:
+                    self.env = env_t
+                else:
+                    self.env = {k: env_t.get(k, True) and env_f.get(k, True)
+                                for k in set(env_t) | set(env_f)}
+                continue
+            if isinstance(stmt, (ast.For, ast.While)):
+                if isinstance(stmt, ast.For):
+                    self._visit_expr(stmt.iter)
+                    for n in assigned_names(stmt.target):
+                        self.env[n] = True
+                else:
+                    self._visit_expr(stmt.test)
+                # two passes: the second catches keys consumed every
+                # iteration but only bound before the loop
+                self.run_block(stmt.body)
+                self.run_block(stmt.body)
+                self.run_block(stmt.orelse)
+                continue
+            if isinstance(stmt, (ast.With, ast.Try)):
+                for item in getattr(stmt, "items", ()):
+                    self._visit_expr(item.context_expr)
+                self.run_block(stmt.body)
+                for h in getattr(stmt, "handlers", ()):
+                    self.run_block(h.body)
+                self.run_block(getattr(stmt, "orelse", []))
+                self.run_block(getattr(stmt, "finalbody", []))
+                continue
+            # simple statement: evaluate RHS expressions, then rebind
+            for expr in self._exprs_of(stmt):
+                self._visit_expr(expr)
+            targets = []
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    targets.extend(assigned_names(tgt))
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                targets.extend(assigned_names(stmt.target))
+            for name in targets:
+                self.env[name] = True
+            if isinstance(stmt, (ast.Return, ast.Raise, ast.Break,
+                                 ast.Continue)):
+                return True
+        return False
+
+
+def check(project: Project):
+    out = []
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _Scope(sf, node, out).run_block(node.body)
+        # module level: only the literal-seed check applies
+        mod_scope = _Scope(sf, ast.parse("def _m(): pass").body[0], out)
+        mod_scope.sf = sf
+        for stmt in sf.tree.body:
+            if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                for expr in mod_scope._exprs_of(stmt):
+                    mod_scope._visit_expr(expr)
+    return out

@@ -1,0 +1,176 @@
+"""R3 — donation discipline.
+
+The chunked executors donate their carry (``donate_argnums`` on the
+``FLState`` / ``SamplerState`` arguments), which *invalidates* the passed
+buffers: reading a donated variable after the call touches freed device
+memory (jax raises on a good day, returns garbage on a sharded one).
+The repo-wide idiom is ``state, ... = chunk(state, ...)`` — rebind in the
+same statement, never read the stale name again.
+
+The rule tracks, per function scope and in source order:
+
+  * bindings of donating callables — ``f = jax.jit(g, donate_argnums=
+    (0,))`` with a literal argnums, and the three executor factories
+    ``make_chunk_fn`` / ``make_seeds_chunk_fn`` / ``make_grid_chunk_fn``
+    whose donated positions are part of their API contract ((0, 1), or
+    (0, 2) with ``with_frozen=True``; ``donate=False`` opts out);
+  * calls through such a callable — every Name passed in a donated
+    position dies after the statement unless the statement rebinds it;
+  * any later read of a dead name — a violation, until a rebind revives
+    it.
+
+Reads inside nested defs/lambdas are skipped (they happen at *call*
+time, which a linear pass cannot place), and callables threaded through
+function parameters are invisible here — the donation-alias tier-1 tests
+remain the runtime backstop for those.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.flcheck.common import (Project, Violation, assigned_names,
+                                  call_name, terminal)
+
+RULE = "R3"
+
+_FACTORIES = {"make_chunk_fn": (0, 1), "make_seeds_chunk_fn": (0, 1),
+              "make_grid_chunk_fn": (0, 1)}
+
+
+def _literal_argnums(node):
+    """A literal donate_argnums value -> tuple of ints, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, int)):
+                return None
+            out.append(elt.value)
+        return tuple(out)
+    return None
+
+
+def _donated_positions(call: ast.Call):
+    """Donated argument positions if ``call`` builds a donating callable
+    (jax.jit with literal donate_argnums, or an executor factory)."""
+    term = terminal(call_name(call))
+    if term == "jit":
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                return _literal_argnums(kw.value)
+        return None
+    if term in _FACTORIES:
+        donated = _FACTORIES[term]
+        for kw in call.keywords:
+            if kw.arg == "donate" and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is False:
+                return None
+            if kw.arg == "with_frozen" and \
+                    isinstance(kw.value, ast.Constant) and \
+                    kw.value.value is True and term != "make_grid_chunk_fn":
+                donated = (0, 2)
+        return donated
+    return None
+
+
+def _own_statements(fn):
+    """Statements of ``fn``'s own body, recursing into compound
+    statements but NOT into nested function/lambda scopes."""
+    out = []
+
+    def walk_block(stmts):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            out.append(stmt)
+            for field in ("body", "orelse", "finalbody"):
+                walk_block(getattr(stmt, field, []))
+            for h in getattr(stmt, "handlers", []):
+                walk_block(h.body)
+
+    walk_block(fn.body)
+    return out
+
+
+def _expr_parts(stmt):
+    """Direct expression children of one statement (not sub-statements)."""
+    return [n for n in ast.iter_child_nodes(stmt)
+            if not isinstance(n, ast.stmt)]
+
+
+def _walk_expr(node):
+    """Expression subtree walk that stays out of nested def/lambda."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+class _Scope:
+    def __init__(self, sf, fn, out):
+        self.sf, self.out = sf, out
+        self.donators = {}   # name -> donated positions
+        self.dead = {}       # name -> (end line of donating stmt, callee)
+        self.fn = fn
+
+    def run(self):
+        for stmt in _own_statements(self.fn):
+            binds = []
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    binds.extend(assigned_names(tgt))
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                binds.extend(assigned_names(stmt.target))
+            elif isinstance(stmt, ast.For):
+                binds.extend(assigned_names(stmt.target))
+
+            end = getattr(stmt, "end_lineno", stmt.lineno)
+            for expr in _expr_parts(stmt):
+                for node in _walk_expr(expr):
+                    if isinstance(node, ast.Name) and \
+                            isinstance(node.ctx, ast.Load) and \
+                            node.id in self.dead:
+                        dline, fname = self.dead[node.id]
+                        if node.lineno > dline:
+                            self.out.append(Violation(
+                                self.sf.path, node.lineno, RULE,
+                                f"`{node.id}` read after being donated to "
+                                f"`{fname}` at line {dline} — donated "
+                                "buffers are invalidated; rebind the "
+                                "result instead"))
+                            del self.dead[node.id]
+                    elif isinstance(node, ast.Call):
+                        pos = _donated_positions(node)
+                        if pos is not None:
+                            # a donating callable built and bound here
+                            for name in binds:
+                                self.donators[name] = pos
+                            continue
+                        if isinstance(node.func, ast.Name):
+                            dpos = self.donators.get(node.func.id)
+                            if dpos is not None:
+                                for i, arg in enumerate(node.args):
+                                    if i in dpos and \
+                                            isinstance(arg, ast.Name):
+                                        self.dead[arg.id] = (
+                                            end, node.func.id)
+            # end-of-statement: rebinds revive (covers the same-statement
+            # `state, ... = chunk(state, ...)` idiom)
+            for name in binds:
+                self.dead.pop(name, None)
+
+
+def check(project: Project):
+    out = []
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _Scope(sf, node, out).run()
+    return out

@@ -1,0 +1,190 @@
+"""R4 — the strategy-registry contract.
+
+Every strategy in ``core/strategies.REGISTRY`` is driven by the one
+shared engine round function, so the registry is only extensible if each
+entry honours the full interface the engine threads through it:
+
+  * an ``aggregate_flat`` path must exist (the flat [m, N] substrate is
+    the production path — a tree-only strategy silently breaks
+    ``FLConfig.flat_state`` runs);
+  * both ``aggregate`` and ``aggregate_flat`` must accept the
+    ``mask_upload=`` (fault layer, PR 6) and ``ages=`` (semi-async
+    layer, PR 7) keywords — the engine passes them unconditionally, so a
+    strategy missing one detonates only under that substrate's grid
+    cells;
+  * the engine's per-round ``metrics`` dicts must all carry the shared
+    keys (``loss``, ``n_active``, ``mean_echo``) — the analysis /
+    results-table layer indexes every history by them.
+
+The rule resolves each ``REGISTRY`` member to its ``Strategy(...)``
+constructor call — directly, or through one level of factory function
+(the ``_mk_weighted_fedavg`` pattern: the factory's ``return
+Strategy(...)``) — and checks the referenced aggregate functions'
+signatures; ``**kwargs`` satisfies any keyword.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.flcheck.common import (Project, Violation, call_name, terminal)
+
+RULE = "R4"
+
+REQUIRED_KWARGS = ("mask_upload", "ages")
+SHARED_METRIC_KEYS = ("loss", "n_active", "mean_echo")
+
+#: Strategy(...) positional layout (core/strategies.Strategy dataclass)
+_POS_FIELDS = ("name", "stateful_clients", "init_extra", "aggregate",
+               "aggregate_flat")
+
+
+def _module_defs(tree):
+    return {n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _strategy_call(node):
+    """The Strategy(...) Call inside ``node`` (an expression), or None."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call) and \
+                terminal(call_name(n)) == "Strategy":
+            return n
+    return None
+
+
+def _field(call: ast.Call, name: str):
+    """Value passed for dataclass field ``name`` (positional or kw)."""
+    idx = _POS_FIELDS.index(name)
+    if idx < len(call.args):
+        return call.args[idx]
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _accepts_kwargs(fn, names):
+    """Which of ``names`` the def cannot accept (empty = contract met)."""
+    if fn.args.kwarg is not None:
+        return []
+    declared = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                + fn.args.kwonlyargs)}
+    return [n for n in names if n not in declared]
+
+
+def _registry_members(tree):
+    """Names in ``REGISTRY = {s.name: s for s in (A, B, ...)}``."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "REGISTRY"
+                for t in node.targets):
+            names = [n.id for n in ast.walk(node.value)
+                     if isinstance(n, ast.Name)
+                     and isinstance(n.ctx, ast.Load)]
+            # drop the comprehension variable (appears as both store+load)
+            stores = {n.id for n in ast.walk(node.value)
+                      if isinstance(n, ast.Name)
+                      and isinstance(n.ctx, ast.Store)}
+            return node, [n for n in names if n not in stores]
+    return None, []
+
+
+def _check_aggregate_ref(sf, defs, strat_call, member, field, out):
+    val = _field(strat_call, field)
+    if val is None or (isinstance(val, ast.Constant) and val.value is None):
+        out.append(Violation(
+            sf.path, strat_call.lineno, RULE,
+            f"REGISTRY strategy `{member}` has no {field} — the flat "
+            "[m, N] substrate (FLConfig.flat_state) cannot drive it"))
+        return
+    if isinstance(val, ast.Name) and val.id in defs:
+        fn = defs[val.id]
+        missing = _accepts_kwargs(fn, REQUIRED_KWARGS)
+        if missing:
+            out.append(Violation(
+                sf.path, fn.lineno, RULE,
+                f"`{fn.name}` ({member}.{field}) does not accept "
+                f"{', '.join(f'{k}=' for k in missing)} — the engine "
+                "passes them unconditionally (faults / semi-async "
+                "substrates)"))
+    # non-Name references (lambdas, attributes) cannot be checked
+    # statically; the strategy parity tests cover them at runtime
+
+
+def _check_registry(project, out):
+    for sf in project.files:
+        reg_node, members = _registry_members(sf.tree)
+        if reg_node is None:
+            continue
+        defs = _module_defs(sf.tree)
+        assigns = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        assigns[t.id] = node.value
+        for member in members:
+            rhs = assigns.get(member)
+            if rhs is None:
+                out.append(Violation(
+                    sf.path, reg_node.lineno, RULE,
+                    f"REGISTRY member `{member}` has no visible "
+                    "assignment in this module"))
+                continue
+            strat_call = _strategy_call(rhs)
+            if strat_call is None and isinstance(rhs, ast.Call) and \
+                    isinstance(rhs.func, ast.Name) and \
+                    rhs.func.id in defs:
+                # one level of factory: X = _mk_foo(...); find its
+                # `return Strategy(...)`
+                for n in ast.walk(defs[rhs.func.id]):
+                    if isinstance(n, ast.Return) and n.value is not None:
+                        strat_call = _strategy_call(n.value)
+                        if strat_call is not None:
+                            break
+            if strat_call is None:
+                out.append(Violation(
+                    sf.path, rhs.lineno, RULE,
+                    f"cannot resolve REGISTRY member `{member}` to a "
+                    "Strategy(...) constructor (direct or one-level "
+                    "factory)"))
+                continue
+            for field in ("aggregate", "aggregate_flat"):
+                _check_aggregate_ref(sf, defs, strat_call, member, field,
+                                     out)
+
+
+def _check_metric_keys(project, out):
+    """Every ``metrics = dict(...)`` built inside a round function must
+    emit the shared keys the analysis layer indexes by."""
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef))
+                    and node.name == "round_fn"):
+                continue
+            for sub in ast.walk(node):
+                if not (isinstance(sub, ast.Assign)
+                        and any(isinstance(t, ast.Name)
+                                and t.id == "metrics"
+                                for t in sub.targets)):
+                    continue
+                call = sub.value
+                if not (isinstance(call, ast.Call)
+                        and terminal(call_name(call)) == "dict"):
+                    continue
+                keys = {kw.arg for kw in call.keywords if kw.arg}
+                missing = [k for k in SHARED_METRIC_KEYS if k not in keys]
+                if missing:
+                    out.append(Violation(
+                        sf.path, call.lineno, RULE,
+                        "round metrics dict missing shared key(s) "
+                        f"{', '.join(missing)} — analysis/results tables "
+                        "index every history by them"))
+
+
+def check(project: Project):
+    out = []
+    _check_registry(project, out)
+    _check_metric_keys(project, out)
+    return out

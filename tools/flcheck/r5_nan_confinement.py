@@ -1,0 +1,98 @@
+"""R5 — NaN confinement in ``jnp.where`` branches.
+
+``jnp.where(cond, a, b)`` evaluates BOTH branches: a division, ``log``
+or ``sqrt`` of an unguarded operand in the not-selected branch still
+produces the NaN/Inf, and under ``grad`` the cotangent of the dead
+branch re-enters through the multiply-by-zero — the classic where-grad
+trap.  The staleness ring buffer (PR 7) and the fault sanitizer (PR 6)
+both had to engineer around exactly this (selection-only writes, rows
+scrubbed to finite values before any ``w*G`` reduction), so new code
+gets machine-checked.
+
+Guarded means the dangerous operand visibly bounds itself away from the
+singular point: it contains a ``maximum`` / ``clip`` / ``clamp`` /
+``abs`` call, adds/subtracts a numeric constant (the ``x*x + eps``
+idiom), or is itself a constant.  Nested ``jnp.where`` calls are their
+own occurrence and are skipped while scanning an outer branch.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.flcheck.common import (Project, Violation, call_name,
+                                  is_constant, last_two, terminal)
+
+RULE = "R5"
+
+_DANGEROUS_CALLS = {"log", "log2", "log10", "sqrt", "rsqrt", "arccos",
+                    "arcsin"}
+_GUARDS = {"maximum", "clip", "clamp", "abs", "where", "nan_to_num",
+           "isfinite", "minimum"}
+
+
+def _is_where(call: ast.Call) -> bool:
+    lt = last_two(call_name(call))
+    return len(lt) >= 1 and lt[-1] == "where" and \
+        lt[0] in ("jnp", "numpy", "np", "where")
+
+
+def _guarded(node) -> bool:
+    """Operand visibly bounded away from the singular point."""
+    if is_constant(node):
+        return True
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and \
+                terminal(call_name(sub)) in _GUARDS:
+            return True
+        if isinstance(sub, ast.BinOp) and \
+                isinstance(sub.op, (ast.Add, ast.Sub)) and \
+                (is_constant(sub.left) or is_constant(sub.right)):
+            return True
+    return False
+
+
+def _walk_branch(node):
+    """Branch subtree walk skipping nested jnp.where occurrences (each
+    where is reported as its own finding by the top-level scan)."""
+    out, stack = [], [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.Call) and _is_where(n):
+            continue
+        out.append(n)
+        stack.extend(ast.iter_child_nodes(n))
+    return out
+
+
+def _scan_branch(sf, branch, which, out):
+    for node in _walk_branch(branch):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
+            if not _guarded(node.right):
+                out.append(Violation(
+                    sf.path, node.lineno, RULE,
+                    f"division by unguarded `{ast.unparse(node.right)}` "
+                    f"in the {which} branch of jnp.where — both branches "
+                    "evaluate; guard the denominator (jnp.maximum/clip) "
+                    "or select AFTER the division input is safe"))
+        elif isinstance(node, ast.Call):
+            fname = terminal(call_name(node))
+            if fname in _DANGEROUS_CALLS and node.args and \
+                    not _guarded(node.args[0]):
+                out.append(Violation(
+                    sf.path, node.lineno, RULE,
+                    f"`{fname}` of unguarded "
+                    f"`{ast.unparse(node.args[0])}` in the {which} branch "
+                    "of jnp.where — both branches evaluate (and the "
+                    "where-grad re-enters the dead branch); clamp the "
+                    "operand first"))
+
+
+def check(project: Project):
+    out = []
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call) and _is_where(node) and \
+                    len(node.args) == 3:
+                _scan_branch(sf, node.args[1], "selected", out)
+                _scan_branch(sf, node.args[2], "unselected", out)
+    return out
