@@ -333,6 +333,97 @@ def _bench_round_executor(quick):
     return rows
 
 
+def _bench_sparse_cohort(quick):
+    """O(cohort) rounds at m = 1e5: the sparse cohort executor
+    (FLConfig.sparse_cohort, core/cohort.py) on the tiny MLP with a
+    bf16-resident [m, N] client stack.  The round gathers the c_max
+    active rows into a [c_max, N] f32 working set, runs local updates
+    and the cohort aggregate there, and scatters the demoted rows back —
+    the only O(m) work left per round is the availability draw, the
+    cohort argsort-select, and O(m) bookkeeping vectors, so the dense
+    executor's O(m*N) per-round touch never happens (at m = 1e5 the
+    dense chunked path is not even benchable on this container).
+    rounds_per_sec/sparse_cohort: us_per_call is per wall-clock round
+    (min-of-reps), derived is rounds/sec.  resident_bytes/sparse_cohort:
+    us_per_call is the resident client-stack bytes actually held
+    device-side (bf16), derived is the dense-f32 bytes over that — the
+    residency saving (2.0 for bf16)."""
+    from repro.core import (AvailabilityCfg, FLConfig, init_fl_state,
+                            make_chunk_fn, make_round_fn, run_rounds)
+    from repro.data import (contiguous_client_index, device_store,
+                            make_device_sampler)
+
+    m, s, b, d, h = 100_000, 2, 2, 32, 16
+    c_max, K = 256, 8
+    T = 16 if quick else 32
+    reps = 3
+    n_per = s * b
+    n = m * n_per
+    rng = np.random.default_rng(3)
+    arrays = dict(x=rng.normal(size=(n, d)).astype(np.float32),
+                  y=rng.integers(0, 10, n).astype(np.int32))
+    # contiguous equal-count index: O(m) to build, no host-side [m, cap]
+    # scatter of ragged client lists at this scale
+    store = device_store(arrays, padded=contiguous_client_index(m, n_per))
+    tr0 = dict(w1=jnp.asarray(rng.normal(size=(d, h)).astype(np.float32))
+               * 0.1,
+               b1=jnp.zeros((h,), jnp.float32),
+               w2=jnp.asarray(rng.normal(size=(h, 10)).astype(np.float32))
+               * 0.1)
+
+    def loss_fn(tr, frozen, batch, key):
+        z = jnp.maximum(batch["x"] @ tr["w1"] + tr["b1"], 0.0) @ tr["w2"]
+        lo = z - jax.scipy.special.logsumexp(z, axis=-1, keepdims=True)
+        return -jnp.mean(jnp.take_along_axis(lo, batch["y"][:, None],
+                                             axis=-1))
+
+    cfg = FLConfig(m=m, s=s, eta_l=0.05, strategy="fedawe",
+                   lr_schedule=False, grad_clip=0.0, flat_state=True,
+                   sparse_cohort=c_max, resident_dtype="bfloat16")
+    av = AvailabilityCfg(kind="sine", gamma=0.3)
+    # sparse participation regime: ~m*p = 200 expected actives per round,
+    # under the c_max = 256 cap (overflow deferral stays a rare event)
+    base_p = jnp.full((m,), 0.002, jnp.float32)
+    rf = make_round_fn(cfg, loss_fn, {}, av, base_p)
+    init_sampler, sample_fn = make_device_sampler(
+        m, s, b, mode="uniform", min_count=n_per, emit="cols")
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    data_key = jax.random.PRNGKey(11)
+
+    def once(rounds):
+        # fresh state per run: the chunk dispatch donates the carry
+        state = init_fl_state(jax.random.PRNGKey(0), cfg, tr0)
+        return run_rounds(state, rf, None, rounds, chunk_rounds=K,
+                          chunk_fn=chunk_fn, sample_fn=sample_fn,
+                          store=store, data_key=data_key,
+                          sampler_state=init_sampler(store, data_key))
+
+    probe = init_fl_state(jax.random.PRNGKey(0), cfg, tr0)
+    resident_bytes = probe.clients_tr.size * probe.clients_tr.dtype.itemsize
+    dense_f32_bytes = probe.clients_tr.size * 4
+    del probe
+    warm_t0 = time.time()
+    once(K)                            # warmup: compile the K-round scan
+    warm_us = (time.time() - warm_t0) * 1e6
+    best = None
+    for _ in range(reps):
+        t0 = time.time()
+        _, hist = once(T)
+        dt = time.time() - t0
+        assert len(hist) == T
+        best = dt if best is None else min(best, dt)
+    rows = [
+        ("rounds_per_sec/sparse_cohort", round(best / T * 1e6, 1),
+         round(T / best, 1)),
+        ("resident_bytes/sparse_cohort", float(resident_bytes),
+         round(dense_f32_bytes / resident_bytes, 2)),
+    ]
+    if hasattr(chunk_fn, "_cache_size"):
+        rows.append(("compile_count/sparse_cohort",
+                     float(chunk_fn._cache_size()), round(warm_us, 1)))
+    return rows
+
+
 def run(quick=False):
     rows = []
     m, N = 16, (1 << 20 if quick else 1 << 22)
@@ -357,6 +448,7 @@ def run(quick=False):
 
     rows.extend(_bench_tree_vs_flat(quick))
     rows.extend(_bench_round_executor(quick))
+    rows.extend(_bench_sparse_cohort(quick))
 
     # flash-style (chunked, O(L*S) streamed) vs full-materialization attention
     B, H, L, D = 1, 4, (512 if quick else 1024), 64

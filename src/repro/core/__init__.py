@@ -1,6 +1,11 @@
 """The paper's primary contribution: FedAWE and its federated-round system
 (availability processes, strategies, the round engine, mixing analysis)."""
 from repro.core.availability import AvailabilityCfg, base_probs  # noqa: F401
+from repro.core.cohort import (  # noqa: F401
+    cohort_gather,
+    cohort_scatter,
+    cohort_select,
+)
 from repro.core.engine import (  # noqa: F401
     FLConfig,
     FLState,
@@ -24,7 +29,11 @@ from repro.core.faults import (  # noqa: F401
     diurnal_trace,
     init_fault_state,
 )
-from repro.core.flatten import FlatSpec  # noqa: F401
+from repro.core.flatten import (  # noqa: F401
+    RESIDENT_DTYPES,
+    FlatSpec,
+    resident_dtype,
+)
 from repro.core.staleness import (  # noqa: F401
     StalenessCfg,
     init_staleness_state,

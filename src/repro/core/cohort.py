@@ -1,0 +1,96 @@
+"""Sparse cohort substrate: O(cohort) rounds over an O(m) resident stack.
+
+The dense flat engine touches all ``[m, N]`` client rows every round even
+though only the available cohort computes — exactly the population-scaling
+overhead the paper's O(1)-extra-memory pitch is about.  This module is the
+index machinery of the cohort-centric round path (``FLConfig.sparse_cohort``):
+
+  * ``cohort_select`` — availability mask -> the round's cohort indices
+    under a STATIC cap ``c_max`` (jit-stable shapes), deterministic
+    lowest-client-index-first, with overflow surfaced as ``n_deferred``
+    (a deferred client simply does not compute this round — it is never
+    silently dropped after computing);
+  * ``cohort_gather`` — resident rows -> an f32 ``[c, N]`` working set
+    (the gather-promote of the low-precision residency story);
+  * ``cohort_scatter`` — working-set rows -> the resident stack
+    (accumulate-demote), a where-selection merge so untouched slots write
+    back their resident bytes unchanged and, on a non-f32 resident stack,
+    non-finite values are confined to the old row instead of poisoning
+    the carry persistently.
+
+The resident stack may live in a reduced dtype (``FLConfig.resident_dtype``,
+see ``flatten.resident_dtype``): gather promotes to f32, all round math runs
+in f32, scatter demotes.  Promote-then-demote is the identity for bf16, so
+rows the round does not write stay bit-stable across any number of rounds.
+
+Donation discipline: ``cohort_scatter`` CONSUMES its resident-stack
+argument — under the donated scan carry the ``.at[idx].set`` aliases the
+buffer in place, so reading the stale name afterwards is exactly the
+read-after-donate bug flcheck R3 exists for.  The checker treats any
+``cohort_scatter(stack, ...)`` call as donating ``stack``; rebind the
+result (``stack = cohort_scatter(stack, ...)`` or a fresh name) and never
+touch the old name again.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cohort_select(mask, c_max: int):
+    """Availability mask ``[m]`` -> ``(idx [c_max] int32, n_deferred)``.
+
+    ``idx`` holds the first (lowest client index) ``c_max`` active clients,
+    then — when fewer than ``c_max`` are active — the lowest-index inactive
+    clients as padding (their mask gathers to 0, so padded slots carry zero
+    weight everywhere downstream).  The slots are always ``c_max`` DISTINCT
+    client rows, so ``.at[idx].set`` scatters are collision-free.
+
+    ``n_deferred`` counts active clients beyond the cap: they are excluded
+    from this round's cohort deterministically (highest client indices
+    first) and simply do not compute — deferral happens BEFORE local work,
+    so no computed update is ever dropped, and the count is surfaced as a
+    per-round metric rather than hidden.
+    """
+    m = mask.shape[0]
+    arange = jnp.arange(m, dtype=jnp.int32)
+    # actives sort by client index, inactives by index + m: stable,
+    # deterministic, and unique keys -> a permutation prefix
+    order = jnp.where(mask > 0, arange, arange + jnp.int32(m))
+    idx = jnp.argsort(order)[:c_max].astype(jnp.int32)
+    n_active = jnp.sum((mask > 0).astype(jnp.float32))
+    n_deferred = jnp.maximum(n_active - jnp.float32(c_max), 0.0)
+    return idx, n_deferred
+
+
+def cohort_gather(resident, idx):
+    """Gather-promote: resident rows at ``idx`` -> f32 working rows.
+
+    ``resident`` is ``[m, N]`` (or ``[m]``) in the resident dtype; the
+    returned ``[c, N]`` (or ``[c]``) working set is always f32 — every
+    strategy reduction and local-SGD entry runs at accumulation precision
+    regardless of how the stack is stored."""
+    return jnp.take(resident, idx, axis=0).astype(jnp.float32)
+
+
+def cohort_scatter(resident, idx, rows, write):
+    """Accumulate-demote: write f32 working rows back into the resident
+    stack at ``idx``.  CONSUMES ``resident`` (see module docstring) —
+    rebind the result.
+
+    ``write`` (``[c]``, nonzero = write) is the selection: written slots
+    receive ``rows`` demoted to the resident dtype; unwritten slots write
+    back the resident bytes they already held (promote-demote identity),
+    so untouched rows round-trip bit-exactly.  On a non-f32 resident
+    stack the demote is NaN-confined: a non-finite working value keeps
+    the old resident row instead of parking a NaN in the carry forever.
+    On an f32 stack the write is exact and unfiltered — bit-parity with
+    the dense engine, including its NaN propagation."""
+    old = jnp.take(resident, idx, axis=0)
+    if resident.dtype == jnp.float32:
+        new = rows
+    else:
+        new = jnp.where(jnp.isfinite(rows), rows,
+                        old.astype(jnp.float32)).astype(resident.dtype)
+    w = write.reshape(write.shape + (1,) * (rows.ndim - write.ndim))
+    payload = jnp.where(w > 0, new, old)
+    return resident.at[idx].set(payload)

@@ -68,14 +68,26 @@ import jax.numpy as jnp
 
 from repro.core import tree_util as tu
 from repro.core.availability import AvailabilityCfg, probs_at, sample_active
-from repro.core.flatten import FlatSpec
+from repro.core.flatten import FlatSpec, resident_dtype
 from repro.core.strategies import Strategy, get_strategy
 
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
     """Static config of the federated optimization (hashable; closed over
-    by the jitted round function — changing any field retraces)."""
+    by the jitted round function — changing any field retraces).
+
+    ``sparse_cohort`` > 0 switches the flat engine to the cohort-centric
+    round path (core/cohort.py): the round's active client rows are
+    gathered into a ``[c_max, N]`` f32 working set, local SGD and
+    aggregation run on the working set, and results scatter back into the
+    resident ``[m, N]`` stack — O(cohort) round cost over an O(m) resident
+    footprint, with actives beyond the cap deterministically deferred
+    (``n_deferred`` metric).  Requires ``flat_state`` and a sampler built
+    with ``emit="cols"``.  ``resident_dtype`` stores the resident stacks
+    (client stack + model-shaped strategy memory) below accumulation
+    precision (``flatten.RESIDENT_DTYPES``; gather promotes to f32,
+    scatter demotes) — only meaningful on the sparse path."""
     m: int                      # number of clients
     s: int = 10                 # local steps per round
     eta_l: float = 0.05         # local lr (eta_0; 1/sqrt(t/10+1) schedule)
@@ -85,6 +97,21 @@ class FLConfig:
     use_kernel: bool = False    # fused Pallas echo-aggregate
     flat_state: bool = False    # flat [m, N] substrate (core/flatten.py)
     grad_clip: float = 0.5      # paper uses max-norm 0.5
+    sparse_cohort: int = 0      # cohort cap c_max (0 = dense rounds)
+    resident_dtype: str = "float32"   # [m, N] stack storage dtype
+
+    def __post_init__(self):
+        resident_dtype(self.resident_dtype)  # validate the name eagerly
+        if self.sparse_cohort:
+            assert self.sparse_cohort > 0, self.sparse_cohort
+            assert self.flat_state, \
+                "sparse_cohort needs the flat [m, N] substrate (flat_state)"
+        elif self.resident_dtype != "float32":
+            raise ValueError(
+                "resident_dtype below f32 needs sparse_cohort > 0: only "
+                "the cohort path has the gather-promote / accumulate-"
+                "demote boundary (core/cohort.py); the dense engine "
+                "reads the stack in place")
 
 
 class FLState(NamedTuple):
@@ -133,11 +160,26 @@ def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
         # f32 tree is a no-op view of the template, and the chunked
         # executor donates (invalidates) every state buffer
         g = jnp.array(spec.flatten(trainable_template), copy=True)
+        # sparse cohort residency: the resident stacks (client stack +
+        # model-shaped strategy memory) are born in the residency dtype;
+        # f32 residency is the identity and keeps the dense build
+        # byte-identical.  With a staleness carry the round path runs in
+        # dense lanes (the ring buffer is O(m·N) anyway), so the memory
+        # strategies keep their dense f32 extra structure there.
+        rdt = resident_dtype(cfg.resident_dtype)
+
+        def _init_extra(gg):
+            if cfg.sparse_cohort and stale is None and \
+                    strat.init_extra_cohort is not None:
+                return strat.init_extra_cohort(gg, cfg.m, rdt)
+            return strat.init_extra(gg, cfg.m)
+
         # stateless strategies never materialize the [m, N] client stack
         clients = None
         if strat.stateful_clients:
             clients = jax.jit(
-                lambda gg: jnp.broadcast_to(gg[None], (cfg.m, spec.size)),
+                lambda gg: jnp.broadcast_to(gg.astype(rdt)[None],
+                                            (cfg.m, spec.size)),
                 out_shardings=clients_sharding)(g)
         if clients_sharding is not None and \
                 hasattr(clients_sharding, "mesh"):
@@ -146,18 +188,16 @@ def init_fl_state(rng, cfg: FLConfig, trainable_template, *,
             # (everything not stack-shaped stays replicated)
             from jax.sharding import NamedSharding
             from jax.sharding import PartitionSpec as P
-            extra_sds = jax.eval_shape(
-                lambda gg: strat.init_extra(gg, cfg.m), g)
+            extra_sds = jax.eval_shape(_init_extra, g)
             out_sh = jax.tree.map(
                 lambda sds: clients_sharding
                 if tuple(sds.shape) == (cfg.m, spec.size)
                 else NamedSharding(clients_sharding.mesh,
                                    P(*([None] * len(sds.shape)))),
                 extra_sds)
-            extra = jax.jit(lambda gg: strat.init_extra(gg, cfg.m),
-                            out_shardings=out_sh)(g)
+            extra = jax.jit(_init_extra, out_shardings=out_sh)(g)
         else:
-            extra = strat.init_extra(g, cfg.m)
+            extra = _init_extra(g)
         return FLState(g, clients, tau, jnp.zeros((), jnp.int32), extra,
                        markov, rng, spec, fault, stale)
     clients = tu.tree_broadcast(trainable_template, cfg.m)
@@ -287,6 +327,14 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
         assert cfg.flat_state, \
             "staleness_cfg needs the flat [m, N] substrate (flat_state)"
         from repro.core import staleness as _stale
+    c_max = min(int(cfg.sparse_cohort), cfg.m) if cfg.sparse_cohort else 0
+    if c_max:
+        from repro.core import cohort as _cohort
+        from repro.data import federated as _fed
+        rdt = resident_dtype(cfg.resident_dtype)
+        if staleness_cfg is None:
+            assert strat.aggregate_cohort is not None, \
+                f"strategy {strat.name!r} has no aggregate_cohort path"
 
     def round_fn(state: FLState, frozen, batches):
         n_keys = 3 + (fault_cfg is not None) + (staleness_cfg is not None)
@@ -307,6 +355,15 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
             mask = mask * (1.0 - _stale.busy_mask(state.stale))
             delay = _stale.draw_delay(staleness_cfg, state.stale, k_delay,
                                       state.t, cfg.m)
+        if c_max:
+            # cohort selection AFTER every availability layer (trace,
+            # blackout, busy gating): a slot is never wasted on a client
+            # that could not compute anyway.  Actives beyond the cap are
+            # deferred BEFORE local work — the effective mask zeroes them,
+            # so no computed update is ever silently dropped.
+            idx, n_deferred = _cohort.cohort_select(mask, c_max)
+            mask_c = jnp.take(mask, idx)
+            mask = jnp.zeros_like(mask).at[idx].set(mask_c)
 
         eta_l = cfg.eta_l
         if cfg.lr_schedule:
@@ -315,9 +372,6 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
         loc_rngs = jax.random.split(k_loc, cfg.m)
         if cfg.flat_state:
             spec = state.spec
-            # stateless: a broadcast VIEW of the flat global, never a copy
-            start = state.clients_tr if strat.stateful_clients else \
-                jnp.broadcast_to(state.global_tr[None], (cfg.m, spec.size))
 
             def local(x0_flat, b, k):
                 xe, loss = local_sgd(spec.unflatten(x0_flat), frozen, b, k,
@@ -325,55 +379,144 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
                                      grad_clip=cfg.grad_clip)
                 return spec.flatten(xe), loss
 
-            x_end, losses = jax.vmap(local)(start, batches, loc_rngs)
-            G = start - x_end
-            if staleness_cfg is not None:
-                # delivery candidates: synchronous computes (drawn d = 0)
-                # plus ring-buffer arrivals — disjoint sets, since an
-                # arriving client was busy and did not compute this round
-                now = mask * (delay == 0).astype(jnp.float32)
-                defer = mask * (delay > 0).astype(jnp.float32)
-                deliver = now + arrived
-                G_eff = jnp.where(arrived[:, None] > 0, arr_buf,
-                                  jnp.where(now[:, None] > 0, G, 0.0))
-                x_end_eff = jnp.where(arrived[:, None] > 0,
-                                      start - arr_buf, x_end)
-                age_eff = jnp.where(arrived > 0, arr_age, 0.0)
+            if c_max:
+                # cohort-local work at O(c): gather the cohort's data rows
+                # and state rows only.  The sampler emitted per-client
+                # column draws over the FULL population (emit="cols") and
+                # loc_rngs split over the full [m], so every cohort row
+                # consumes bitwise the batch columns and rng stream the
+                # dense engine would give that client.
+                cols, store = batches["cols"], batches["store"]
+                q = cols.shape[1]
+                b_c = _fed.gather_batches_at(
+                    store, jnp.take(cols, idx, axis=0), idx, cfg.s,
+                    q // cfg.s)
+                if strat.stateful_clients:
+                    start_c = _cohort.cohort_gather(state.clients_tr, idx)
+                else:
+                    start_c = jnp.broadcast_to(state.global_tr[None],
+                                               (c_max, spec.size))
+                x_end_c, losses_c = jax.vmap(local)(
+                    start_c, b_c, jnp.take(loc_rngs, idx, axis=0))
+                G_c = start_c - x_end_c
+            if c_max and staleness_cfg is None:
+                # pure cohort round: aggregation, client/tau updates and
+                # the resident scatter all run at O(c·N)
+                tau_c = jnp.take(state.tau, idx)
+                mask_upload_c = None
+                if fault_cfg is not None:
+                    mask_upload_c, n_dropped, n_rejected = \
+                        _faults.upload_mask_cohort(fault_cfg, k_up, cfg.m,
+                                                   idx, mask_c, G_c)
+                    if fault_cfg.sanitize:
+                        keep = mask_upload_c[:, None] > 0
+                        x_end_c = jnp.where(keep, x_end_c, start_c)
+                        G_c = jnp.where(keep, G_c, 0.0)
+                mu_c = mask_c if mask_upload_c is None else mask_upload_c
+                mu_full = jnp.zeros((cfg.m,),
+                                    jnp.float32).at[idx].set(mu_c)
+                probs_c = jnp.take(probs_t, idx) \
+                    if getattr(probs_t, "ndim", 0) else probs_t
+                new_global, rows, write, new_extra = strat.aggregate_cohort(
+                    global_flat=state.global_tr, cohort_flat=start_c,
+                    x_end=x_end_c, G=G_c, mask=mask_c, t=state.t,
+                    tau_c=tau_c, probs_c=probs_c, extra=state.extra,
+                    eta_g=cfg.eta_g, m_total=cfg.m, idx=idx,
+                    mu_full=mu_full, use_kernel=cfg.use_kernel,
+                    mask_upload=mask_upload_c)
+                new_tau = jnp.where(mu_full > 0, state.t, state.tau)
+                new_clients = state.clients_tr
+                if rows is not None and new_clients is not None:
+                    new_clients = _cohort.cohort_scatter(
+                        state.clients_tr, idx, rows, write)
+                # full-[m] metric inputs (O(m) vectors, not O(m·N)) so the
+                # shared metrics blocks below apply unchanged: scattered
+                # lanes carry exact zeros wherever the mask does
+                losses = jnp.zeros((cfg.m,),
+                                   jnp.float32).at[idx].set(losses_c)
+                mask_upload = None if mask_upload_c is None else mu_full
             else:
-                deliver, G_eff, x_end_eff = mask, G, x_end
-            mask_upload = None
-            if fault_cfg is not None:
-                # under staleness the fault layer acts at DELIVERY time: a
-                # stale arrival can still drop mid-round or fail
-                # sanitization when it lands
-                mask_upload, n_dropped, n_rejected = _faults.upload_mask(
-                    fault_cfg, k_up, deliver, G_eff)
-                if fault_cfg.sanitize:
-                    # scrub demoted rows: a 0-weighted NaN still poisons a
-                    # w·G reduction (0 * NaN = NaN), so rejected clients'
-                    # rows must hold finite values, not just zero weight
-                    keep = mask_upload[:, None] > 0
-                    x_end_eff = jnp.where(keep, x_end_eff, start)
-                    G_eff = jnp.where(keep, G_eff, 0.0)
-            if staleness_cfg is not None:
-                mu0 = deliver if mask_upload is None else mask_upload
-                w_disc = mu0 if staleness_cfg.gamma >= 1.0 else \
-                    mu0 * jnp.power(jnp.float32(staleness_cfg.gamma),
-                                    age_eff)
-                agg_mask, agg_kwargs = mu0, dict(mask_upload=w_disc,
-                                                 ages=age_eff)
-            else:
-                agg_mask, agg_kwargs = mask, dict(mask_upload=mask_upload)
-            new_global, new_clients, new_tau, new_extra = strat.aggregate_flat(
-                global_flat=state.global_tr, clients_flat=start,
-                x_end=x_end_eff, G=G_eff, mask=agg_mask, t=state.t,
-                tau=state.tau, probs=probs_t, extra=state.extra,
-                eta_g=cfg.eta_g, use_kernel=cfg.use_kernel, **agg_kwargs)
-            if staleness_cfg is not None:
-                # raw (unsanitized, undiscounted) innovations enter the
-                # ring; faults and the gamma discount apply at delivery
-                new_stale = _stale.step_buffer(state.stale, state.t, defer,
-                                               delay, G)
+                if c_max:
+                    # sparse + staleness: the pending-update ring buffer
+                    # is O(m·N) per round regardless, so cohort results
+                    # scatter into dense lanes and the delivery / fault /
+                    # aggregation code below runs unchanged — non-cohort
+                    # lanes carry zero weight and G = 0 exactly
+                    if strat.stateful_clients:
+                        start = state.clients_tr.astype(jnp.float32)
+                    else:
+                        start = jnp.broadcast_to(state.global_tr[None],
+                                                 (cfg.m, spec.size))
+                    x_end = start.at[idx].set(x_end_c)
+                    losses = jnp.zeros((cfg.m,),
+                                       jnp.float32).at[idx].set(losses_c)
+                else:
+                    # stateless: a broadcast VIEW of the flat global,
+                    # never a copy
+                    start = state.clients_tr if strat.stateful_clients \
+                        else jnp.broadcast_to(state.global_tr[None],
+                                              (cfg.m, spec.size))
+                    x_end, losses = jax.vmap(local)(start, batches,
+                                                    loc_rngs)
+                G = start - x_end
+                if staleness_cfg is not None:
+                    # delivery candidates: synchronous computes (drawn
+                    # d = 0) plus ring-buffer arrivals — disjoint sets,
+                    # since an arriving client was busy and did not
+                    # compute this round
+                    now = mask * (delay == 0).astype(jnp.float32)
+                    defer = mask * (delay > 0).astype(jnp.float32)
+                    deliver = now + arrived
+                    G_eff = jnp.where(arrived[:, None] > 0, arr_buf,
+                                      jnp.where(now[:, None] > 0, G, 0.0))
+                    x_end_eff = jnp.where(arrived[:, None] > 0,
+                                          start - arr_buf, x_end)
+                    age_eff = jnp.where(arrived > 0, arr_age, 0.0)
+                else:
+                    deliver, G_eff, x_end_eff = mask, G, x_end
+                mask_upload = None
+                if fault_cfg is not None:
+                    # under staleness the fault layer acts at DELIVERY
+                    # time: a stale arrival can still drop mid-round or
+                    # fail sanitization when it lands
+                    mask_upload, n_dropped, n_rejected = \
+                        _faults.upload_mask(fault_cfg, k_up, deliver,
+                                            G_eff)
+                    if fault_cfg.sanitize:
+                        # scrub demoted rows: a 0-weighted NaN still
+                        # poisons a w·G reduction (0 * NaN = NaN), so
+                        # rejected clients' rows must hold finite values,
+                        # not just zero weight
+                        keep = mask_upload[:, None] > 0
+                        x_end_eff = jnp.where(keep, x_end_eff, start)
+                        G_eff = jnp.where(keep, G_eff, 0.0)
+                if staleness_cfg is not None:
+                    mu0 = deliver if mask_upload is None else mask_upload
+                    w_disc = mu0 if staleness_cfg.gamma >= 1.0 else \
+                        mu0 * jnp.power(jnp.float32(staleness_cfg.gamma),
+                                        age_eff)
+                    agg_mask, agg_kwargs = mu0, dict(mask_upload=w_disc,
+                                                     ages=age_eff)
+                else:
+                    agg_mask, agg_kwargs = mask, dict(
+                        mask_upload=mask_upload)
+                new_global, new_clients, new_tau, new_extra = \
+                    strat.aggregate_flat(
+                        global_flat=state.global_tr, clients_flat=start,
+                        x_end=x_end_eff, G=G_eff, mask=agg_mask,
+                        t=state.t, tau=state.tau, probs=probs_t,
+                        extra=state.extra, eta_g=cfg.eta_g,
+                        use_kernel=cfg.use_kernel, **agg_kwargs)
+                if staleness_cfg is not None:
+                    # raw (unsanitized, undiscounted) innovations enter
+                    # the ring; faults and the gamma discount apply at
+                    # delivery
+                    new_stale = _stale.step_buffer(state.stale, state.t,
+                                                   defer, delay, G)
+                if c_max and new_clients is not None:
+                    # demote the full stack back to residency (identity
+                    # for f32); the dense-lane aggregate ran in f32
+                    new_clients = new_clients.astype(rdt)
         else:
             start = state.clients_tr if strat.stateful_clients else \
                 tu.tree_broadcast(state.global_tr, cfg.m)
@@ -446,6 +589,8 @@ def make_round_fn_with_frozen(cfg: FLConfig, loss_fn: Callable,
                 n_dropped=n_dropped,
                 n_rejected=n_rejected,
             )
+        if c_max:
+            metrics["n_deferred"] = n_deferred
         new_state = state._replace(
             global_tr=new_global, clients_tr=new_clients, tau=new_tau,
             t=state.t + 1, extra=new_extra, markov=markov, rng=rng)

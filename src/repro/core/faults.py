@@ -173,6 +173,35 @@ def upload_mask(cfg: FaultCfg, rng, mask, G):
     return keep, dropped, rejected
 
 
+def upload_mask_cohort(cfg: FaultCfg, rng, m: int, idx, mask, G):
+    """Cohort-space ``upload_mask``: same per-client fates at O(c) compute.
+
+    The survival draw is still taken over the FULL ``[m]`` population and
+    then gathered at ``idx`` — a client's mid-round fate is a function of
+    ``(rng, client index)`` alone, bit-identical whether the round runs
+    dense or sparse, so the parity suite can compose faults with
+    ``sparse_cohort`` and still compare against the dense engine.
+    Sanitization runs on the ``[c, N]`` working set directly
+    (``update_norms_sq`` is leading-dim generic)."""
+    keep = mask
+    dropped = jnp.zeros((), jnp.float32)
+    rejected = jnp.zeros((), jnp.float32)
+    if cfg.mid_round:
+        u = jax.random.uniform(rng, (m,))
+        survive = (jnp.take(u, idx) < cfg.upload_survival).astype(jnp.float32)
+        dropped = jnp.sum(keep * (1.0 - survive))
+        keep = keep * survive
+    if cfg.sanitize:
+        n2 = update_norms_sq(G)
+        bad = ~jnp.isfinite(n2)
+        if cfg.norm_cap > 0.0:
+            bad = bad | (n2 > jnp.float32(cfg.norm_cap) ** 2)
+        badf = bad.astype(jnp.float32)
+        rejected = jnp.sum(keep * badf)
+        keep = keep * (1.0 - badf)
+    return keep, dropped, rejected
+
+
 def adversarial_probs_from_nu(nu, *, hot=0.9, cold=0.05):
     """Availability adversarially correlated with the client label
     distributions ν (the paper's Fig. 2 heterogeneity × unavailability

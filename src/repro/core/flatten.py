@@ -10,6 +10,15 @@ Accumulation dtype is f32 (the buffer); leaf dtypes are restored only at the
 unflatten boundary (eval, checkpoint, local-SGD entry), so I/O stays in the
 model's own precision while the hot aggregation loop runs flat.
 
+Residency dtype (sparse cohort path): the PERSISTENT ``[m, N]`` stacks —
+the client stack and model-shaped strategy memory — may be stored below
+accumulation precision (``resident_dtype``; bf16 halves resident bytes at
+m >= 1e5).  The working set is always promoted to f32 on gather and demoted
+on scatter (core/cohort.py), so every reduction still runs at accumulation
+precision; only what SLEEPS between rounds is compressed.  int8 residency
+is reserved (it needs per-row scale state the scatter path does not carry
+yet) and rejected explicitly rather than silently truncating.
+
 The spec is static metadata: it is registered as a leafless pytree node so it
 can ride inside ``FLState`` through ``jax.jit`` as part of the treedef
 (hashable, equality-compared for retracing) without ever becoming a tracer.
@@ -22,6 +31,29 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+
+#: dtypes a resident [m, N] stack may be stored in (FLConfig.resident_dtype)
+RESIDENT_DTYPES = ("float32", "bfloat16")
+
+
+def resident_dtype(name: str):
+    """Validate a residency dtype name -> ``jnp.dtype``.
+
+    f32 is the identity residency (bit-parity with the dense engine);
+    bf16 halves resident bytes with f32 gather-promote / demote round
+    trips that are exact on untouched rows.  int8 is recognized but
+    rejected with a clear error until the scatter path carries per-row
+    scales — a silent cast would truncate the model to garbage."""
+    if name == "int8":
+        raise NotImplementedError(
+            "resident_dtype='int8' is reserved: integer residency needs "
+            "per-row quantization scales alongside the stack; use "
+            "'bfloat16' for compressed residency today")
+    if name not in RESIDENT_DTYPES:
+        raise ValueError(
+            f"unknown resident_dtype {name!r}; expected one of "
+            f"{RESIDENT_DTYPES}")
+    return jnp.dtype(name)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,19 +10,37 @@ vector and its own auxiliary state.
   stateless (clients restart from the broadcast global): all baselines
   memory-aided (O(m·d) server memory):   MIFA, FedVARP
 
-Every strategy carries two aggregation paths:
+Every strategy carries three aggregation paths:
 
-  ``aggregate``       — pytree state (leaves keep their own shapes); the
-                        reference implementation, one reduction per leaf.
-  ``aggregate_flat``  — flat substrate (core/flatten.py): global is one
-                        [N] f32 vector, the client stack one [m, N] buffer,
-                        and every weighted sum / memory update is a single
-                        [m, N] reduction through ``flat_weighted_sum``.
-                        Selected via FLConfig.flat_state; stateless
-                        strategies return ``None`` clients (local SGD
-                        starts from a broadcast *view* of the flat global,
-                        so no per-client copy of the model is ever
-                        materialized).
+  ``aggregate``        — pytree state (leaves keep their own shapes); the
+                         reference implementation, one reduction per leaf.
+  ``aggregate_flat``   — flat substrate (core/flatten.py): global is one
+                         [N] f32 vector, the client stack one [m, N] buffer,
+                         and every weighted sum / memory update is a single
+                         [m, N] reduction through ``flat_weighted_sum``.
+                         Selected via FLConfig.flat_state; stateless
+                         strategies return ``None`` clients (local SGD
+                         starts from a broadcast *view* of the flat global,
+                         so no per-client copy of the model is ever
+                         materialized).
+  ``aggregate_cohort`` — sparse cohort path (core/cohort.py, selected via
+                         FLConfig.sparse_cohort): the round's math runs on
+                         the gathered f32 ``[c, N]`` working set only, with
+                         the ``[m, N]`` stacks (client state, MIFA/FedVARP/
+                         FedAR memory) touched O(c) rows at a time through
+                         cohort_gather / cohort_scatter.  Returns
+                         ``(new_global, cohort_rows, write, new_extra)``
+                         where ``cohort_rows``/``write`` tell the engine
+                         what to scatter into the resident client stack
+                         (None for stateless strategies); τ is advanced by
+                         the engine from the scattered delivery mask.
+                         Memory strategies keep an f32 ``[N]`` running
+                         column sum (``mem_sum``/``y_sum``, see
+                         ``init_extra_cohort``) updated from the delta of
+                         the rows ACTUALLY STORED (post-demote), so their
+                         full-population means cost O(c·N) per round and
+                         track the resident content exactly under reduced
+                         residency dtypes.
 
 All math follows the cited papers: FedAWE Alg. 1; FedAU (Wang & Ji 2024,
 interval-estimate reweighting with cutoff K); F3AST (Ribero et al., EMA rate
@@ -48,6 +66,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tree_util as tu
+from repro.core.cohort import cohort_gather, cohort_scatter
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +79,13 @@ class Strategy:
     # echoes the paper's grouping (Table 2)
     memory_aided: bool = False
     uses_true_probs: bool = False
+    # sparse cohort path (FLConfig.sparse_cohort; see module docstring):
+    # aggregate_cohort runs the round on the gathered [c, N] working set;
+    # init_extra_cohort(g, m, dtype) builds strategy state for that path
+    # (resident-dtype [m, N] memory + f32 [N] running sums) — None falls
+    # back to init_extra
+    aggregate_cohort: Optional[Callable[..., Any]] = None
+    init_extra_cohort: Optional[Callable[..., Any]] = None
 
 
 def flat_weighted_sum(w, G):
@@ -147,8 +173,35 @@ def _fedawe_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
     return new_global, new_clients, new_tau, extra
 
 
+def _fedawe_aggregate_cohort(*, global_flat, cohort_flat, x_end, G, mask, t,
+                             tau_c, probs_c, extra, eta_g, m_total, idx,
+                             mu_full, use_kernel=False, mask_upload=None,
+                             ages=None):
+    """Cohort-space FedAWE: the same two matvecs as the flat path, over
+    the [c, N] working set.  Every client outside the cohort carries zero
+    weight in the dense reduction, so the cohort sums equal the dense ones
+    term for term (the denominators too — μ is zero off-cohort)."""
+    mu = mask if mask_upload is None else mask_upload
+    echo = (t - tau_c).astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels.echo_aggregate import ops as ea_ops
+        # echo_aggregate_flat is m-agnostic: [c, N] operands lower the
+        # same fused pallas_call the dense path uses on [m, N]
+        new_global = ea_ops.echo_aggregate_flat(
+            cohort_flat, x_end, global_flat, mask, echo, eta_g,
+            upload=mask_upload)
+    else:
+        denom = jnp.maximum(jnp.sum(mu), 1.0)
+        acc = (flat_weighted_sum(mu, cohort_flat)
+               - eta_g * flat_weighted_sum(mu * echo, G)) / denom
+        new_global = jnp.where(jnp.sum(mu) > 0, acc, global_flat)
+    rows = jnp.where(mu[:, None] > 0, new_global[None], cohort_flat)
+    return new_global, rows, mu, extra
+
+
 FEDAWE = Strategy("fedawe", True, _fedawe_init, _fedawe_aggregate,
-                  aggregate_flat=_fedawe_aggregate_flat)
+                  aggregate_flat=_fedawe_aggregate_flat,
+                  aggregate_cohort=_fedawe_aggregate_cohort)
 
 
 # ---------------------------------------------------------------------------
@@ -193,8 +246,20 @@ def _mk_weighted_fedavg(weight_fn, name, uses_true_probs=False):
         new_global = global_flat - eta_g * flat_weighted_sum(w, G) / _denom(mu)
         return new_global, None, _stateless_tau(mu, t, tau), extra
 
+    def agg_cohort(*, global_flat, cohort_flat, x_end, G, mask, t, tau_c,
+                   probs_c, extra, eta_g, m_total, idx, mu_full,
+                   use_kernel=False, mask_upload=None, ages=None):
+        mu = mask if mask_upload is None else mask_upload
+        w = weight_fn(mu, probs_c) * mu
+        # /m baselines divide by the POPULATION, not the working-set size
+        denom = jnp.maximum(jnp.sum(mu), 1.0) if name == "fedavg_active" \
+            else jnp.float32(m_total)
+        new_global = global_flat - eta_g * flat_weighted_sum(w, G) / denom
+        return new_global, None, None, extra
+
     return Strategy(name, False, init, agg, aggregate_flat=agg_flat,
-                    uses_true_probs=uses_true_probs)
+                    uses_true_probs=uses_true_probs,
+                    aggregate_cohort=agg_cohort)
 
 
 FEDAVG_ACTIVE = _mk_weighted_fedavg(lambda mask, p: jnp.ones_like(mask),
@@ -261,8 +326,24 @@ def _fedau_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
     return new_global, None, _stateless_tau(mu, t, tau), new_extra
 
 
+def _fedau_aggregate_cohort(*, global_flat, cohort_flat, x_end, G, mask, t,
+                            tau_c, probs_c, extra, eta_g, m_total, idx,
+                            mu_full, use_kernel=False, mask_upload=None,
+                            ages=None):
+    # the interval estimates advance for EVERY client every round (an
+    # inactive round lengthens the open interval), so the scalar-state
+    # update stays dense [m] — O(m) ints, not O(m·N) — and only the
+    # weighted innovation sum runs in cohort space
+    w_full, new_extra = _fedau_weights(mu_full, extra)
+    w = jnp.take(w_full, idx)
+    new_global = global_flat - eta_g * flat_weighted_sum(w, G) \
+        / jnp.float32(m_total)
+    return new_global, None, None, new_extra
+
+
 FEDAU = Strategy("fedau", False, _fedau_init, _fedau_aggregate,
-                 aggregate_flat=_fedau_aggregate_flat)
+                 aggregate_flat=_fedau_aggregate_flat,
+                 aggregate_cohort=_fedau_aggregate_cohort)
 
 
 # ---------------------------------------------------------------------------
@@ -304,8 +385,22 @@ def _f3ast_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
     return new_global, None, _stateless_tau(mu, t, tau), new_extra
 
 
+def _f3ast_aggregate_cohort(*, global_flat, cohort_flat, x_end, G, mask, t,
+                            tau_c, probs_c, extra, eta_g, m_total, idx,
+                            mu_full, use_kernel=False, mask_upload=None,
+                            ages=None):
+    # EMA rate estimates decay for every client every round: dense [m]
+    # scalar state (like fedau), cohort-space innovation sum
+    w_full, new_extra = _f3ast_weights(mu_full, extra)
+    w = jnp.take(w_full, idx)
+    new_global = global_flat - eta_g * flat_weighted_sum(w, G) \
+        / jnp.float32(m_total)
+    return new_global, None, None, new_extra
+
+
 F3AST = Strategy("f3ast", False, _f3ast_init, _f3ast_aggregate,
-                 aggregate_flat=_f3ast_aggregate_flat)
+                 aggregate_flat=_f3ast_aggregate_flat,
+                 aggregate_cohort=_f3ast_aggregate_cohort)
 
 
 # ---------------------------------------------------------------------------
@@ -340,8 +435,35 @@ def _mifa_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
     return new_global, None, _stateless_tau(mu, t, tau), dict(mem=mem)
 
 
+def _mifa_init_cohort(g, m, dtype):
+    n = g.shape[0]
+    return dict(mem=jnp.zeros((m, n), dtype),
+                mem_sum=jnp.zeros((n,), jnp.float32))
+
+
+def _mifa_aggregate_cohort(*, global_flat, cohort_flat, x_end, G, mask, t,
+                           tau_c, probs_c, extra, eta_g, m_total, idx,
+                           mu_full, use_kernel=False, mask_upload=None,
+                           ages=None):
+    """Cohort MIFA: the full-population memory mean as a carried f32 [N]
+    running column sum — O(c·N) per round instead of a fresh [m, N]
+    reduction.  The delta is taken against the rows ACTUALLY STORED
+    (gathered back post-demote), so the sum tracks the resident content
+    exactly even when the memory lives in bf16."""
+    mu = mask if mask_upload is None else mask_upload
+    mem_c = cohort_gather(extra["mem"], idx)
+    new_rows = jnp.where(mu[:, None] > 0, G, mem_c)
+    new_mem = cohort_scatter(extra["mem"], idx, new_rows, mu)
+    stored = cohort_gather(new_mem, idx)
+    mem_sum = extra["mem_sum"] + jnp.sum(stored - mem_c, axis=0)
+    new_global = global_flat - eta_g * mem_sum / jnp.float32(m_total)
+    return new_global, None, None, dict(mem=new_mem, mem_sum=mem_sum)
+
+
 MIFA = Strategy("mifa", False, _mifa_init, _mifa_aggregate,
-                aggregate_flat=_mifa_aggregate_flat, memory_aided=True)
+                aggregate_flat=_mifa_aggregate_flat, memory_aided=True,
+                aggregate_cohort=_mifa_aggregate_cohort,
+                init_extra_cohort=_mifa_init_cohort)
 
 
 # ---------------------------------------------------------------------------
@@ -385,8 +507,35 @@ def _fedvarp_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
     return new_global, None, _stateless_tau(mu, t, tau), dict(y=new_y)
 
 
+def _fedvarp_init_cohort(g, m, dtype):
+    n = g.shape[0]
+    return dict(y=jnp.zeros((m, n), dtype),
+                y_sum=jnp.zeros((n,), jnp.float32))
+
+
+def _fedvarp_aggregate_cohort(*, global_flat, cohort_flat, x_end, G, mask,
+                              t, tau_c, probs_c, extra, eta_g, m_total, idx,
+                              mu_full, use_kernel=False, mask_upload=None,
+                              ages=None):
+    mu = mask if mask_upload is None else mask_upload
+    y_c = cohort_gather(extra["y"], idx)
+    denom = jnp.maximum(jnp.sum(mu), 1.0)
+    diff_mean = flat_weighted_sum(mu, G - y_c) / denom
+    # full-population mean of the OLD memory, from the running column sum
+    y_mean = extra["y_sum"] / jnp.float32(m_total)
+    any_active = (jnp.sum(mu) > 0).astype(jnp.float32)
+    new_global = global_flat - eta_g * (any_active * diff_mean + y_mean)
+    new_rows = jnp.where(mu[:, None] > 0, G, y_c)
+    new_y = cohort_scatter(extra["y"], idx, new_rows, mu)
+    stored = cohort_gather(new_y, idx)
+    y_sum = extra["y_sum"] + jnp.sum(stored - y_c, axis=0)
+    return new_global, None, None, dict(y=new_y, y_sum=y_sum)
+
+
 FEDVARP = Strategy("fedvarp", False, _fedvarp_init, _fedvarp_aggregate,
-                   aggregate_flat=_fedvarp_aggregate_flat, memory_aided=True)
+                   aggregate_flat=_fedvarp_aggregate_flat, memory_aided=True,
+                   aggregate_cohort=_fedvarp_aggregate_cohort,
+                   init_extra_cohort=_fedvarp_init_cohort)
 
 
 # ---------------------------------------------------------------------------
@@ -439,8 +588,27 @@ def _fedawe_m_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
     return new_global, new_clients, new_tau, dict(v=v, beta=beta)
 
 
+def _fedawe_m_aggregate_cohort(*, global_flat, cohort_flat, x_end, G, mask,
+                               t, tau_c, probs_c, extra, eta_g, m_total,
+                               idx, mu_full, use_kernel=False,
+                               mask_upload=None, ages=None):
+    mu = mask if mask_upload is None else mask_upload
+    gossip, _, _, _ = _fedawe_aggregate_cohort(
+        global_flat=global_flat, cohort_flat=cohort_flat, x_end=x_end, G=G,
+        mask=mask, t=t, tau_c=tau_c, probs_c=probs_c, extra=(), eta_g=eta_g,
+        m_total=m_total, idx=idx, mu_full=mu_full, use_kernel=use_kernel,
+        mask_upload=mask_upload)
+    beta = extra["beta"]
+    v = beta * extra["v"] + (gossip - global_flat)  # gossip is guarded
+    any_active = jnp.sum(mu) > 0
+    new_global = jnp.where(any_active, global_flat + v, global_flat)
+    rows = jnp.where(mu[:, None] > 0, new_global[None], cohort_flat)
+    return new_global, rows, mu, dict(v=v, beta=beta)
+
+
 FEDAWE_M = Strategy("fedawe_m", True, _fedawe_m_init, _fedawe_m_aggregate,
-                    aggregate_flat=_fedawe_m_aggregate_flat)
+                    aggregate_flat=_fedawe_m_aggregate_flat,
+                    aggregate_cohort=_fedawe_m_aggregate_cohort)
 
 
 # ---------------------------------------------------------------------------
@@ -501,8 +669,32 @@ def _fedar_aggregate_flat(*, global_flat, clients_flat, x_end, G, mask, t,
     return new_global, None, _stateless_tau(mu, t, tau), dict(mem=mem)
 
 
+def _fedar_init_cohort(g, m, dtype):
+    n = g.shape[0]
+    return dict(mem=jnp.zeros((m, n), dtype),
+                mem_sum=jnp.zeros((n,), jnp.float32))
+
+
+def _fedar_aggregate_cohort(*, global_flat, cohort_flat, x_end, G, mask, t,
+                            tau_c, probs_c, extra, eta_g, m_total, idx,
+                            mu_full, use_kernel=False, mask_upload=None,
+                            ages=None):
+    mu = mask if mask_upload is None else mask_upload
+    r = jnp.ones_like(mask) if ages is None else _fedar_rect(ages)
+    mem_c = cohort_gather(extra["mem"], idx)
+    new_rows = jnp.where(mu[:, None] > 0,
+                         mem_c + r[:, None] * (G - mem_c), mem_c)
+    new_mem = cohort_scatter(extra["mem"], idx, new_rows, mu)
+    stored = cohort_gather(new_mem, idx)
+    mem_sum = extra["mem_sum"] + jnp.sum(stored - mem_c, axis=0)
+    new_global = global_flat - eta_g * mem_sum / jnp.float32(m_total)
+    return new_global, None, None, dict(mem=new_mem, mem_sum=mem_sum)
+
+
 FEDAR = Strategy("fedar", False, _fedar_init, _fedar_aggregate,
-                 aggregate_flat=_fedar_aggregate_flat, memory_aided=True)
+                 aggregate_flat=_fedar_aggregate_flat, memory_aided=True,
+                 aggregate_cohort=_fedar_aggregate_cohort,
+                 init_extra_cohort=_fedar_init_cohort)
 
 
 REGISTRY = {s.name: s for s in

@@ -8,7 +8,9 @@ from repro.data.synthetic import (  # noqa: F401
 from repro.data.federated import (  # noqa: F401
     SAMPLING_MODES,
     FederatedDataset,
+    contiguous_client_index,
     device_store,
+    gather_batches_at,
     init_seed_sampler_states,
     make_device_sampler,
     padded_client_index,

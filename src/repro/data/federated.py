@@ -95,20 +95,38 @@ class FederatedDataset:
 def padded_client_index(client_indices) -> Dict[str, np.ndarray]:
     """Ragged per-client shards -> dense ``idx [m, cap] int32`` (rows padded
     by repeating the first element — never sampled past ``counts``) plus
-    ``counts [m] int32``."""
-    m = len(client_indices)
+    ``counts [m] int32``.
+
+    Fully vectorized: one concatenate + one fancy-index, no per-client
+    Python loop — at m >= 1e5 the loop body dominated init time."""
     counts = np.asarray([len(ix) for ix in client_indices], np.int32)
     assert counts.min() > 0, "every client needs at least one sample"
     cap = int(counts.max())
-    idx = np.empty((m, cap), np.int32)
-    for i, ix in enumerate(client_indices):
-        idx[i, :len(ix)] = np.asarray(ix, np.int32)
-        idx[i, len(ix):] = np.int32(ix[0])
+    flat = np.concatenate(
+        [np.asarray(ix, np.int32) for ix in client_indices])
+    starts = np.concatenate(
+        [[0], np.cumsum(counts[:-1], dtype=np.int64)])
+    ar = np.arange(cap, dtype=np.int64)
+    valid = ar[None, :] < counts[:, None]
+    pos = starts[:, None] + np.where(valid, ar[None, :], 0)
+    return dict(idx=flat[pos].astype(np.int32), counts=counts)
+
+
+def contiguous_client_index(m: int, n_per: int) -> Dict[str, np.ndarray]:
+    """Padded index for the contiguous layout where client ``i`` owns rows
+    ``[i * n_per, (i + 1) * n_per)`` — built without ever creating the m
+    per-client Python arrays, so huge-m stores (m >= 1e5 in the sparse
+    cohort bench) init in O(m * n_per) numpy, not O(m) interpreter work.
+    Feed the result to ``device_store(..., padded=...)``."""
+    assert n_per > 0, n_per
+    counts = np.full((m,), n_per, np.int32)
+    idx = (np.arange(m, dtype=np.int64)[:, None] * n_per
+           + np.arange(n_per, dtype=np.int64)[None, :]).astype(np.int32)
     return dict(idx=idx, counts=counts)
 
 
-def device_store(arrays: Dict[str, np.ndarray], client_indices,
-                 shardings=None):
+def device_store(arrays: Dict[str, np.ndarray], client_indices=None,
+                 shardings=None, *, padded=None):
     """Build the on-device store pytree consumed by ``make_device_sampler``:
 
       {'arrays': {k: [n, ...]}, 'idx': [m, cap] i32, 'counts': [m] i32}
@@ -116,11 +134,18 @@ def device_store(arrays: Dict[str, np.ndarray], client_indices,
     ``shardings``, when given, is a dict with optional ``'client'`` (for the
     [m, ...] index matrix and counts) and ``'data'`` (for the backing
     arrays) placements so the store is born on its final sharding.
+    ``padded`` short-circuits ``padded_client_index`` with a prebuilt
+    ``{'idx', 'counts'}`` dict (e.g. ``contiguous_client_index``) so huge-m
+    callers never hand over m ragged arrays.
     """
     import jax
     import jax.numpy as jnp
 
-    pad = padded_client_index(client_indices)
+    if padded is None:
+        assert client_indices is not None, \
+            "device_store needs client_indices or padded="
+        padded = padded_client_index(client_indices)
+    pad = padded
     cs = (shardings or {}).get("client")
     ds = (shardings or {}).get("data")
 
@@ -184,8 +209,27 @@ def _gather_batches(store, cols, m, s, b):
             for k, v in store["arrays"].items()}
 
 
+def gather_batches_at(store, cols, rows_idx, s, b):
+    """Cohort batch gather: ``cols [c, s*b]`` column draws for the cohort
+    rows ``rows_idx [c]`` -> ``{k: [c, s, b, ...]}`` batches.
+
+    Bitwise equal to rows ``rows_idx`` of the dense ``_gather_batches``
+    output for the full ``[m, s*b]`` draw — the sparse round path gathers
+    only O(c) data rows while consuming the identical per-client column
+    stream (how the dense-parity suite composes sampling with
+    ``sparse_cohort``)."""
+    import jax.numpy as jnp
+
+    c = rows_idx.shape[0]
+    rows = jnp.take_along_axis(jnp.take(store["idx"], rows_idx, axis=0),
+                               cols, axis=1)                 # [c, s*b]
+    flat = rows.reshape(-1)
+    return {k: jnp.take(v, flat, axis=0).reshape((c, s, b) + v.shape[1:])
+            for k, v in store["arrays"].items()}
+
+
 def make_device_sampler(m: int, s: int, b: int, mode: str = "uniform",
-                        min_count: int = 1):
+                        min_count: int = 1, emit: str = "batches"):
     """Stateful pure-jax round-batch sampler over a ``device_store`` pytree.
 
     Returns ``(init_sampler_state, sample)`` — the stateful sampler contract
@@ -200,6 +244,15 @@ def make_device_sampler(m: int, s: int, b: int, mode: str = "uniform",
     1 is always safe but materializes the worst case; passing the true
     minimum shrinks the per-round permutation stack.  The bound is checked
     against the store whenever ``init_sampler_state`` sees concrete counts.
+
+    ``emit`` selects the round-batch representation: ``"batches"`` (default)
+    gathers the full ``{k: [m, s, b, ...]}`` data rows; ``"cols"`` returns
+    ``{'cols': [m, s*b] i32, 'store': store}`` — the per-client column
+    draws plus a reference to the store — deferring the data gather to the
+    consumer.  The sparse cohort round path uses ``"cols"`` so the sampler
+    state still advances over the FULL population (identical draw stream to
+    a dense run) while only O(cohort) data rows are ever gathered
+    (``gather_batches_at``).
     """
     import jax
     import jax.numpy as jnp
@@ -207,7 +260,15 @@ def make_device_sampler(m: int, s: int, b: int, mode: str = "uniform",
     if mode not in SAMPLING_MODES:
         raise ValueError(f"unknown sampling mode {mode!r}; "
                          f"expected one of {SAMPLING_MODES}")
+    if emit not in ("batches", "cols"):
+        raise ValueError(f"unknown emit mode {emit!r}; "
+                         "expected 'batches' or 'cols'")
     q = s * b
+
+    def _emit(store, cols):
+        if emit == "cols":
+            return dict(cols=cols, store=store)
+        return _gather_batches(store, cols, m, s, b)
     # epoch offsets 0..n_off-1 can be touched within one round: the carried
     # permutation plus every reshuffle a cursor can wrap into (cursor < c,
     # so max_offset = (c - 1 + q) // c <= 1 + (q - 1) // min_count)
@@ -224,7 +285,7 @@ def make_device_sampler(m: int, s: int, b: int, mode: str = "uniform",
             # precision once counts push the f32 mantissa past 2^24)
             r = jax.random.randint(key, (m, q), 0,
                                    store["counts"][:, None])
-            return _gather_batches(store, r, m, s, b), sampler_state
+            return _emit(store, r), sampler_state
 
         return init_sampler_state, sample
 
@@ -292,7 +353,7 @@ def make_device_sampler(m: int, s: int, b: int, mode: str = "uniform",
         stack = jnp.concatenate([sampler_state["perm"][None], new], axis=0)
 
         cols = stack[d, jnp.arange(m)[:, None], r]              # [m, q]
-        batches = _gather_batches(store, cols, m, s, b)
+        batches = _emit(store, cols)
 
         total = cursor + q
         wraps = total // counts                                 # [m]

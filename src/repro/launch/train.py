@@ -143,6 +143,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="K>0: scan-chunked executor — K rounds per "
                          "dispatch, device-resident batch sampling, "
                          "donated FLState, eval/ckpt at chunk boundaries")
+    ap.add_argument("--sparse-cohort", type=int, default=0,
+                    metavar="C_MAX",
+                    help="O(cohort) rounds (core/cohort.py): gather the "
+                         "round's active clients — capped at C_MAX, "
+                         "overflow defers deterministically to later "
+                         "rounds — into a [C_MAX, N] f32 working set, run "
+                         "local updates and aggregation there, scatter "
+                         "the touched rows back; the resident [m, N] "
+                         "stack is never touched O(m*N) per round "
+                         "(0 = dense rounds, the default; implies "
+                         "--flat-state)")
+    ap.add_argument("--resident-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="storage dtype of the resident [m, N] client "
+                         "stack under --sparse-cohort: bfloat16 halves "
+                         "residency; the cohort gather promotes rows to "
+                         "f32, the scatter-back demote confines "
+                         "non-finite rows (int8 is reserved — see "
+                         "core/flatten.py)")
     ap.add_argument("--sampling", default=None,
                     choices=list(SAMPLING_MODES),
                     help="device-sampler mode (default: uniform): i.i.d. "
@@ -263,8 +282,10 @@ def main(argv=None):
             gamma=s0.gamma if args.stale_gamma is None else args.stale_gamma)
     if stale_cfg is not None and stale_cfg.tau_max == 0:
         stale_cfg = None
-    # the pending-update ring buffer rides the flat [m, N] substrate
-    args.flat_state = args.flat_state or stale_cfg is not None
+    # the pending-update ring buffer and the cohort gather/scatter both
+    # ride the flat [m, N] substrate
+    args.flat_state = (args.flat_state or stale_cfg is not None
+                       or args.sparse_cohort > 0)
 
     rng = jax.random.PRNGKey(args.seed)
     build = build_image_task if args.preset == "image" else build_lm_task
@@ -272,7 +293,9 @@ def main(argv=None):
 
     fl = FLConfig(m=args.m, s=args.s, eta_l=args.eta_l, eta_g=args.eta_g,
                   strategy=args.strategy, use_kernel=args.use_kernel,
-                  flat_state=args.flat_state)
+                  flat_state=args.flat_state,
+                  sparse_cohort=args.sparse_cohort,
+                  resident_dtype=args.resident_dtype)
     if scenario:
         import dataclasses
         # registry availability knobs, with any explicit CLI winner on top
@@ -327,16 +350,19 @@ def main(argv=None):
         def ckpt_fn(st, t):
             save_fl_state(args.ckpt, st, round_t=t)
 
-    if args.chunk_rounds or args.sampling == "epoch" or args.resume:
+    if args.chunk_rounds or args.sampling == "epoch" or args.resume \
+            or args.sparse_cohort:
         # device sampler (always for the chunked executor; also for the
         # host loop under epoch sampling, whose carried cursor state lives
-        # on device, and for --resume, whose artifact carries the sampler):
-        # the dataset is resident and the SamplerState is threaded through
-        # whichever executor runs
+        # on device, for --resume, whose artifact carries the sampler, and
+        # for --sparse-cohort, whose round gathers the cohort's batches
+        # from emitted column draws): the dataset is resident and the
+        # SamplerState is threaded through whichever executor runs
         store = ds.device_store()
         init_sampler_fn, sample_fn = make_device_sampler(
             args.m, args.s, args.batch, mode=args.sampling,
-            min_count=min(len(ix) for ix in ds.client_indices))
+            min_count=min(len(ix) for ix in ds.client_indices),
+            emit="cols" if args.sparse_cohort else "batches")
         data_key = jax.random.PRNGKey(args.seed + 1)
         sampler_state = init_sampler_fn(store, data_key)
         rounds_left = args.rounds

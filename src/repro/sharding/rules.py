@@ -206,6 +206,27 @@ def flat_pspecs(mesh, state_sds, *, multi_pod=False):
     )
 
 
+def cohort_pspecs(mesh, c_max, *, multi_pod=False):
+    """PartitionSpecs for the sparse cohort working set (core/cohort.py).
+
+    Returns ``dict(rows=P(ca, None), idx=P(ca), mask=P(ca))``: the
+    gathered ``[c_max, N]`` f32 working rows shard their cohort axis over
+    the client mesh axes exactly like the resident ``[m, N]`` stack — the
+    gather/scatter is then a client-axis all-to-all and the cohort-local
+    reductions lower to the same implicit-gossip all-reduce as the dense
+    flat path — while ``[c_max]`` index/mask vectors follow along.
+    ``c_max`` must divide the client mesh extent or the working set stays
+    replicated (always correct, just unsharded)."""
+    ax = _axis_sizes(mesh)
+    ca = _client_axes(ax, multi_pod)
+    extent = 1
+    for a in ca:
+        extent *= ax.get(a, 1)
+    if not _div(int(c_max), extent):
+        return dict(rows=P(None, None), idx=P(None), mask=P(None))
+    return dict(rows=P(ca, None), idx=P(ca), mask=P(ca))
+
+
 def sampler_pspecs(mesh, sampler_sds, m, *, multi_pod=False):
     """SamplerState-shaped PartitionSpec tree for the stateful device
     sampler (data/federated.make_device_sampler).

@@ -32,13 +32,14 @@ pytestmark = pytest.mark.strict_rails
 M, S, B, DIM, SEEDS = 6, 3, 4, 4, 2
 
 
-def _problem(sampling="uniform"):
+def _problem(sampling="uniform", emit="batches"):
     rng = np.random.default_rng(0)
     n = 48
     arrays = dict(x=rng.normal(size=(n, DIM)).astype(np.float32),
                   y=rng.normal(size=(n, DIM)).astype(np.float32))
     idx = [np.arange(i, n, M) for i in range(M)]
-    init_fn, sample_fn = make_device_sampler(M, S, B, mode=sampling)
+    init_fn, sample_fn = make_device_sampler(M, S, B, mode=sampling,
+                                             emit=emit)
     return device_store(arrays, idx), init_fn, sample_fn
 
 
@@ -50,10 +51,13 @@ def _tr0():
     return {"w": jnp.ones((DIM, DIM)) * 0.1}
 
 
-def _cfg_rf(sampling="uniform"):
-    store, init_fn, sample_fn = _problem(sampling)
+def _cfg_rf(sampling="uniform", sparse=0, rdt="float32"):
+    store, init_fn, sample_fn = _problem(sampling,
+                                         emit="cols" if sparse else
+                                         "batches")
     cfg = FLConfig(m=M, s=S, eta_l=0.03, strategy="fedawe",
-                   lr_schedule=False, grad_clip=0.0, flat_state=True)
+                   lr_schedule=False, grad_clip=0.0, flat_state=True,
+                   sparse_cohort=sparse, resident_dtype=rdt)
     rf = make_round_fn(cfg, _loss_fn, {}, AvailabilityCfg(kind="sine"),
                        jnp.full((M,), 0.6))
     return cfg, rf, store, init_fn, sample_fn
@@ -145,6 +149,30 @@ def test_grid_executor_compiles_once():
         packed(tuple(st_t), tuple(ss_t), store_t, tuple(dk_t))
     assert packed._cache_size() == 1, (
         "packed grid executor retraced between dispatches")
+
+
+@pytest.mark.parametrize("rdt", ["float32", "bfloat16"])
+def test_sparse_cohort_executor_compiles_once(rdt):
+    """The sparse cohort tier holds the same O(1)-dispatch contract: the
+    cohort gather/scatter round path (emit="cols" sampler, [c_max, N]
+    working set, residency demote) keeps ONE compiled signature across
+    chunks, and its warm dispatches run under the same
+    transfer_guard('disallow') rail as the dense tiers (the guard wraps
+    warm calls inside engine._run_rounds_chunked)."""
+    K, T = 4, 12
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf(sparse=4, rdt=rdt)
+    chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K)
+    dk = jax.random.PRNGKey(42)
+    state = init_fl_state(jax.random.PRNGKey(0), cfg, _tr0())
+    state, hist = run_rounds(state, rf, None, T, chunk_rounds=K,
+                             chunk_fn=chunk_fn, sample_fn=sample_fn,
+                             store=store, data_key=dk,
+                             sampler_state=init_fn(store, dk))
+    assert len(hist) == T
+    assert all("n_deferred" in r for r in hist)
+    assert chunk_fn._cache_size() == 1, (
+        "sparse cohort executor retraced: the cohort gather/scatter carry "
+        "must round-trip with stable shapes and dtypes")
 
 
 def test_tail_executor_is_a_second_executable_not_a_retrace():

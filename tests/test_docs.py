@@ -156,6 +156,24 @@ def test_readme_shows_semi_async_quickstart():
         assert needle in text, f"README lost {needle}"
 
 
+def test_readme_shows_sparse_cohort_quickstart():
+    """The sparse cohort substrate stays documented: the README must keep
+    the cohort train flags, the parity-harness pointer, and the bench
+    rows; ARCHITECTURE.md must keep its Sparse cohort rounds section."""
+    text = open(README).read()
+    for needle in ("--sparse-cohort", "--resident-dtype",
+                   "tests/test_sparse_cohort.py",
+                   "rounds_per_sec/sparse_cohort",
+                   "resident_bytes/sparse_cohort"):
+        assert needle in text, f"README lost {needle}"
+    arch = open(os.path.join(REPO, "docs", "ARCHITECTURE.md")).read()
+    for needle in ("Sparse cohort rounds", "cohort_select",
+                   "cohort_gather", "cohort_scatter", "n_deferred",
+                   "emit=\"cols\"", "cohort_pspecs",
+                   "resident_bytes/sparse_cohort"):
+        assert needle in arch, f"ARCHITECTURE.md lost {needle}"
+
+
 def test_readme_flcheck_quickstart_runs_clean():
     """The README's static-invariants quickstart (`python -m tools.flcheck
     src/`) is a real fenced command AND exits 0 against the committed

@@ -278,6 +278,51 @@ def test_r3_rebind_revives_the_name():
     assert _findings(files, "R3") == []
 
 
+def test_r3_cohort_scatter_consumes_the_resident_stack():
+    # scatter-back must not read the passed resident stack again: inside
+    # the donating executor the engine donates it, so the buffer the
+    # caller still holds is dead — rebind the returned stack instead
+    files = {"src/a.py": """
+        from repro.core import cohort_scatter
+
+        def agg(resident, idx, rows, write):
+            new = cohort_scatter(resident, idx, rows, write)
+            return new + resident.mean()
+        """}
+    vs = _findings(files, "R3")
+    assert len(vs) == 1 and vs[0].line == 6
+    assert "`resident` read after being donated to `cohort_scatter`" \
+        in vs[0].message
+
+
+def test_r3_cohort_scatter_rebind_idiom_is_clean():
+    # the repo idiom: rebind (same name or a new one) and only read the
+    # returned stack; a later rebind of the consumed name also revives it
+    files = {"src/a.py": """
+        from repro.core import cohort_scatter
+
+        def agg(resident, idx, rows, write, fresh):
+            resident = cohort_scatter(resident, idx, rows, write)
+            got = resident.mean()
+            resident = fresh
+            return got + resident.mean()
+        """}
+    assert _findings(files, "R3") == []
+
+
+def test_r3_cohort_scatter_attribute_arg_is_not_tracked():
+    # only bare Names can die — `state.clients_tr` (the engine's own call
+    # shape) is an Attribute, and the linear pass cannot alias-track it
+    files = {"src/a.py": """
+        from repro.core import cohort_scatter
+
+        def agg(state, idx, rows, write):
+            new = cohort_scatter(state.clients_tr, idx, rows, write)
+            return new + state.clients_tr.mean()
+        """}
+    assert _findings(files, "R3") == []
+
+
 # ---------------------------------------------------------------------------
 # R4 — registry contract
 # ---------------------------------------------------------------------------
@@ -394,6 +439,43 @@ def test_r5_division_outside_where_is_not_its_business():
 
         def f(x, n):
             return x / n
+        """}
+    assert _findings(files, "R5") == []
+
+
+def test_r5_flags_unguarded_scatter_payload():
+    # .at[idx].set(payload) computes the payload for every indexed row
+    # BEFORE any masking — an unguarded division lands in the resident
+    # stack (the bf16 demote path writes exactly through this op)
+    files = {"src/a.py": """
+        import jax.numpy as jnp
+
+        def scatter(resident, idx, rows, n):
+            bad = resident.at[idx].set(rows / n)
+            worse = resident.at[idx].add(jnp.log(n))
+            return bad + worse
+        """}
+    vs = _findings(files, "R5")
+    assert len(vs) == 2
+    assert "division by unguarded `n`" in vs[0].message
+    assert "payload of `.at[...].set`" in vs[0].message
+    assert "`log` of unguarded `n`" in vs[1].message
+    assert "payload of `.at[...].add`" in vs[1].message
+
+
+def test_r5_confined_scatter_payload_is_clean():
+    # the cohort demote idiom: payload is a bare name or a jnp.where
+    # selection (isfinite-confined rows) — nothing to flag, and a nested
+    # where inside the payload is the where-scan's own occurrence
+    files = {"src/a.py": """
+        import jax.numpy as jnp
+
+        def scatter(resident, idx, rows, old, n):
+            payload = jnp.where(jnp.isfinite(rows), rows, old)
+            a = resident.at[idx].set(payload)
+            b = resident.at[idx].set(rows / jnp.maximum(n, 1.0))
+            c = resident.at[idx].add(jnp.where(n > 0, rows, old))
+            return a + b + c
         """}
     assert _findings(files, "R5") == []
 

@@ -14,8 +14,9 @@ populated:
 measurement is compared row-by-row against the committed baseline (or
 ``--baseline PATH``) and the process exits non-zero when any row's
 us_per_call regressed by more than ``--threshold`` (default 25%) — so the
-rounds_per_sec/{host_loop,chunked[_epoch|_faults],chunked_seeds[_mesh]}
-executor numbers and the kernel micro-benches are guarded.  Thresholds are
+rounds_per_sec/{host_loop,chunked[_epoch|_faults],chunked_seeds[_mesh],
+sparse_cohort} executor numbers, the resident_bytes/sparse_cohort
+residency footprint, and the kernel micro-benches are guarded.  Thresholds are
 ratio-based against the committed number and the bench itself is
 min-of-reps, because container wall-clock is 2-3x noisy — never gate on
 absolute times.  The ``compile_count/*`` rows ride the same gate with
@@ -95,6 +96,14 @@ REQUIRED_ROWS = (
     "rounds_per_sec/chunked_seeds_mesh",
     "rounds_per_sec/chunked_faults",
     "rounds_per_sec/chunked_staleness",
+    # sparse cohort tier at m = 1e5: per-round wall clock of the
+    # O(cohort) gather/scatter path, plus the resident client-stack bytes
+    # actually held (us_per_call = bytes; derived = dense-f32 bytes over
+    # resident bytes, the bf16 residency saving) — the bytes row gates
+    # the residency dtype itself: a silent bf16 -> f32 fallback doubles
+    # us_per_call and fails the 25% ratio check outright
+    "rounds_per_sec/sparse_cohort",
+    "resident_bytes/sparse_cohort",
     # compile-count gate: us_per_call IS the jit signature-cache size of
     # the executor after warmup + all timed reps (expected 1.0 — one
     # compile per shape signature), so the ratio check turns any 1 -> 2

@@ -19,6 +19,14 @@ The rule tracks, per function scope and in source order:
   * any later read of a dead name — a violation, until a rebind revives
     it.
 
+Beyond jit-donated carries, a small set of library calls CONSUME one of
+their buffer arguments by contract: ``cohort_scatter(resident, ...)``
+feeds ``resident`` to ``.at[idx].set`` inside a jit where the engine
+donates the resident stack, so the caller must treat the passed stack as
+dead and rebind the returned one (``_CONSUMERS`` maps callee name ->
+consumed positions; the same read-after-death / rebind-revives machinery
+applies).
+
 Reads inside nested defs/lambdas are skipped (they happen at *call*
 time, which a linear pass cannot place), and callables threaded through
 function parameters are invisible here — the donation-alias tier-1 tests
@@ -35,6 +43,10 @@ RULE = "R3"
 
 _FACTORIES = {"make_chunk_fn": (0, 1), "make_seeds_chunk_fn": (0, 1),
               "make_grid_chunk_fn": (0, 1)}
+
+# library calls that consume a buffer argument by API contract: the
+# named positions die after the call exactly like donated jit args
+_CONSUMERS = {"cohort_scatter": (0,)}
 
 
 def _literal_argnums(node):
@@ -153,6 +165,12 @@ class _Scope:
                             for name in binds:
                                 self.donators[name] = pos
                             continue
+                        term = terminal(call_name(node))
+                        cpos = _CONSUMERS.get(term) if term else None
+                        if cpos is not None:
+                            for i, arg in enumerate(node.args):
+                                if i in cpos and isinstance(arg, ast.Name):
+                                    self.dead[arg.id] = (end, term)
                         if isinstance(node.func, ast.Name):
                             dpos = self.donators.get(node.func.id)
                             if dpos is not None:

@@ -1,4 +1,4 @@
-"""R5 — NaN confinement in ``jnp.where`` branches.
+"""R5 — NaN confinement in ``jnp.where`` branches and scatter payloads.
 
 ``jnp.where(cond, a, b)`` evaluates BOTH branches: a division, ``log``
 or ``sqrt`` of an unguarded operand in the not-selected branch still
@@ -8,6 +8,13 @@ trap.  The staleness ring buffer (PR 7) and the fault sanitizer (PR 6)
 both had to engineer around exactly this (selection-only writes, rows
 scrubbed to finite values before any ``w*G`` reduction), so new code
 gets machine-checked.
+
+``resident.at[idx].set(payload)`` / ``.add(payload)`` scatters have the
+same shape of hazard: the payload is computed for EVERY indexed row
+before masking can intervene, and whatever it produces lands in the
+resident stack — the sparse-cohort demote path (core/cohort.py) must
+confine non-finite rows with ``jnp.where(isfinite(...))`` before the
+write, so scatter payloads are scanned with the same operand rules.
 
 Guarded means the dangerous operand visibly bounds itself away from the
 singular point: it contains a ``maximum`` / ``clip`` / ``clamp`` /
@@ -34,6 +41,15 @@ def _is_where(call: ast.Call) -> bool:
     lt = last_two(call_name(call))
     return len(lt) >= 1 and lt[-1] == "where" and \
         lt[0] in ("jnp", "numpy", "np", "where")
+
+
+def _is_at_update(call: ast.Call) -> bool:
+    """``x.at[...].set(payload)`` / ``.add(payload)`` scatter update."""
+    f = call.func
+    return isinstance(f, ast.Attribute) and f.attr in ("set", "add") and \
+        isinstance(f.value, ast.Subscript) and \
+        isinstance(f.value.value, ast.Attribute) and \
+        f.value.value.attr == "at"
 
 
 def _guarded(node) -> bool:
@@ -64,16 +80,17 @@ def _walk_branch(node):
     return out
 
 
-def _scan_branch(sf, branch, which, out):
+def _scan_branch(sf, branch, ctx, out):
     for node in _walk_branch(branch):
         if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
             if not _guarded(node.right):
                 out.append(Violation(
                     sf.path, node.lineno, RULE,
                     f"division by unguarded `{ast.unparse(node.right)}` "
-                    f"in the {which} branch of jnp.where — both branches "
-                    "evaluate; guard the denominator (jnp.maximum/clip) "
-                    "or select AFTER the division input is safe"))
+                    f"in {ctx} — evaluated for every element regardless "
+                    "of selection; guard the denominator "
+                    "(jnp.maximum/clip) or select AFTER the division "
+                    "input is safe"))
         elif isinstance(node, ast.Call):
             fname = terminal(call_name(node))
             if fname in _DANGEROUS_CALLS and node.args and \
@@ -81,8 +98,8 @@ def _scan_branch(sf, branch, which, out):
                 out.append(Violation(
                     sf.path, node.lineno, RULE,
                     f"`{fname}` of unguarded "
-                    f"`{ast.unparse(node.args[0])}` in the {which} branch "
-                    "of jnp.where — both branches evaluate (and the "
+                    f"`{ast.unparse(node.args[0])}` in {ctx} — evaluated "
+                    "for every element regardless of selection (and the "
                     "where-grad re-enters the dead branch); clamp the "
                     "operand first"))
 
@@ -91,8 +108,16 @@ def check(project: Project):
     out = []
     for sf in project.files:
         for node in ast.walk(sf.tree):
-            if isinstance(node, ast.Call) and _is_where(node) and \
-                    len(node.args) == 3:
-                _scan_branch(sf, node.args[1], "selected", out)
-                _scan_branch(sf, node.args[2], "unselected", out)
+            if not isinstance(node, ast.Call):
+                continue
+            if _is_where(node) and len(node.args) == 3:
+                _scan_branch(sf, node.args[1],
+                             "the selected branch of jnp.where", out)
+                _scan_branch(sf, node.args[2],
+                             "the unselected branch of jnp.where", out)
+            elif _is_at_update(node) and node.args:
+                _scan_branch(
+                    sf, node.args[0],
+                    f"the payload of `.at[...].{node.func.attr}` (it "
+                    "lands in the scattered-to buffer)", out)
     return out
