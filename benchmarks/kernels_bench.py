@@ -26,6 +26,17 @@ def _time(f, *args, iters=20):
     return (time.time() - t0) / iters * 1e6
 
 
+def _count_calls(fn):
+    """Dispatch-count probe: hand the WRAPPER to the driver and read
+    ``wrapper.calls`` afterwards — ``fn`` itself stays the jit object the
+    compile_count rows read ``_cache_size`` from."""
+    def wrapper(*args, **kwargs):
+        wrapper.calls += 1
+        return fn(*args, **kwargs)
+    wrapper.calls = 0
+    return wrapper
+
+
 def _bench_tree_vs_flat(quick):
     """Many-leaf FedAWE aggregation: per-leaf pytree path vs the flat
     [m, N] substrate (core/flatten.py). The tiny-config transformer supplies
@@ -93,7 +104,8 @@ def _bench_round_executor(quick):
     multi-seed grid would otherwise cost, measured explicitly as the
     chunked_seeds_seq row with the same per-seed init and fold_in keys),
     plus the S-batched executor with the live ('seed','pod','data')-mesh
-    shardings threaded through its jit (chunked_seeds_mesh), plus the
+    shardings threaded through its jit (chunked_seeds_mesh, fresh carries
+    committed onto the shardings so it compiles ONCE), plus the
     chunked executor with fault injection live (chunked_faults: the
     mid-round dropout draw + sanitization norm scan of core/faults.py in
     every round — its cost shows up directly against the chunked row),
@@ -108,7 +120,11 @@ def _bench_round_executor(quick):
     wins).  Each executor additionally emits a ``compile_count/<name>``
     row whose us_per_call is its jit signature-cache size after all reps
     (the retrace gate — see tools/bench_record.py) and whose derived is
-    the warmup trace+compile wall time in us."""
+    the warmup trace+compile wall time in us, a ``compile_time_s/<name>``
+    row (warmup wall seconds; derived = persistent-cache hits during
+    warmup, launch/compilecache) and a ``dispatch_count/<name>`` row
+    (measured dispatches per T-round run; derived = rounds per
+    dispatch)."""
     from repro.core import (AvailabilityCfg, FaultCfg, FLConfig,
                             StalenessCfg, init_fl_state, make_round_fn,
                             run_rounds)
@@ -119,10 +135,10 @@ def _bench_round_executor(quick):
     # the round cost, not the math
     m, s, b, d, h, K = 128, 2, 4, 32, 16, 16
     T = 32 if quick else 64
-    # min-of-5: the seeds-batched vs sequential margin is ~5-10% on a
-    # 1-device CPU (the win is dispatch amortization, not FLOPs), which
-    # min-of-3 resolves only on a quiet machine
-    reps = 5
+    # min-of-7: the seeds-batched vs sequential margin is only a few
+    # percent on a 1-device CPU (the win is dispatch amortization, not
+    # FLOPs), which smaller rep counts resolve only on a quiet machine
+    reps = 7
     rng = np.random.default_rng(0)
     n = 1024
     arrays = dict(x=rng.normal(size=(n, d)).astype(np.float32),
@@ -172,6 +188,7 @@ def _bench_round_executor(quick):
         # dispatch, not compilation
         rf_jit = jax.jit(rf)
         chunk_fn = make_chunk_fn(cfg, rf, sample_fn, K) if chunked else None
+        counted = _count_calls(chunk_fn if chunked else rf_jit)
 
         def batch_fn(t):
             return {k: jnp.asarray(v)
@@ -182,15 +199,17 @@ def _bench_round_executor(quick):
                                   stale=make_stale())
             if chunked:
                 return run_rounds(state, rf, None, rounds, chunk_rounds=K,
-                                  chunk_fn=chunk_fn, sample_fn=sample_fn,
+                                  chunk_fn=counted, sample_fn=sample_fn,
                                   store=store, data_key=data_key,
                                   sampler_state=init_sampler(store,
                                                              data_key))
-            return run_rounds(state, rf_jit, batch_fn, rounds, jit=False)
+            return run_rounds(state, counted, batch_fn, rounds, jit=False)
 
         # the jitted executable behind this exec — the compile_count rows
-        # read its signature-cache size after the timed reps
+        # read its signature-cache size after the timed reps; the counting
+        # wrapper around it feeds the dispatch_count rows
         once.compiled = chunk_fn if chunked else rf_jit
+        once.dispatches = counted
         return once
 
     n_seeds = 4
@@ -204,11 +223,16 @@ def _bench_round_executor(quick):
         the live ('seed','pod','data')-mesh shardings
         (launch/mesh.make_seed_mesh + experiments.seed_chunk_shardings)
         threaded through its jit, proving the placement machinery adds no
-        dispatch-path overhead.  All include per-seed state init, as a
-        real cell does."""
+        dispatch-path overhead.  Every row pays its own per-run setup
+        inside the timed region — one batched init (plus the ~0.3 ms
+        place_seed_batch commit for the mesh row) vs S per-seed inits —
+        exactly the cost profile a real grid cell has, and the accounting
+        the committed trajectory was recorded under."""
         from repro.core import make_chunk_fn, make_seeds_chunk_fn
-        from repro.launch.experiments import build_seed_batch, \
-            build_seed_executor, run_seed_rounds
+        from repro.launch.experiments import (build_seed_batch,
+                                              build_seed_executor,
+                                              place_seed_batch,
+                                              run_seed_rounds)
         from repro.launch.mesh import make_seed_mesh
 
         cfg = FLConfig(m=m, s=s, eta_l=0.05, strategy="fedawe",
@@ -221,21 +245,34 @@ def _bench_round_executor(quick):
         mesh = make_seed_mesh(S)   # auto-sizes to this host's devices
         probe = build_seed_batch(cfg, tr0, jax.random.PRNGKey(0), data_key,
                                  init_sampler, store, S)
-        mesh_fn = build_seed_executor(
+        mesh_builder = build_seed_executor(
             cfg, rf, sample_fn, S, mesh=mesh, states=probe[0],
-            sampler_states=probe[1], store=store, data_keys=probe[2])(K)
+            sampler_states=probe[1], store=store, data_keys=probe[2])
+        mesh_fn = mesh_builder(K)
 
-        def make_once_batched(chunk_fn):
+        def make_once_batched(chunk_fn, in_shardings=None):
+            counted = _count_calls(chunk_fn)
+
             def once(rounds):
+                # fresh per run: the donated dispatch consumes the carries
                 states, sss, dks = build_seed_batch(
                     cfg, tr0, jax.random.PRNGKey(0), data_key,
                     init_sampler, store, S)
+                # commit the fresh carries onto the mesh shardings (no-op
+                # without them): every dispatch, the warm-up included,
+                # must share the steady-state jit signature — see
+                # place_seed_batch
+                states, sss, store_, dks = place_seed_batch(
+                    in_shardings, states, sss, store, dks)
                 states, hists = run_seed_rounds(
-                    states, chunk_fn, rounds, K, sampler_states=sss,
-                    store=store, data_keys=dks, n_seeds=S)
+                    states, counted, rounds, K, sampler_states=sss,
+                    store=store_, data_keys=dks, n_seeds=S)
                 return states, hists[0]
             once.compiled = chunk_fn
+            once.dispatches = counted
             return once
+
+        counted_single = _count_calls(single_fn)
 
         def once_seq(rounds):
             hists = []
@@ -244,15 +281,17 @@ def _bench_round_executor(quick):
                     jax.random.fold_in(jax.random.PRNGKey(0), j), cfg, tr0)
                 dk = jax.random.fold_in(data_key, j)
                 st, h_ = run_rounds(st, rf, None, rounds, chunk_rounds=K,
-                                    chunk_fn=single_fn, sample_fn=sample_fn,
+                                    chunk_fn=counted_single,
+                                    sample_fn=sample_fn,
                                     store=store, data_key=dk,
                                     sampler_state=init_sampler(store, dk))
                 hists.append(h_)
             return st, hists[0]
 
         once_seq.compiled = single_fn
+        once_seq.dispatches = counted_single
         return make_once_batched(batched_fn), once_seq, \
-            make_once_batched(mesh_fn)
+            make_once_batched(mesh_fn, mesh_builder.in_shardings)
 
     seeds_batched, seeds_seq, seeds_mesh = make_seeds_execs()
 
@@ -283,11 +322,21 @@ def _bench_round_executor(quick):
             True, chunked=True,
             staleness_cfg=StalenessCfg(tau_max=2, kind="det", delay=1)),
     }
-    warm_us = {}
+    # persistent compilation cache (launch/compilecache): the warmup
+    # compiles below hit it on re-records — compile_time_s/* rows carry
+    # the per-exec hit count in their derived column
+    from repro.launch import compilecache
+    compilecache.enable()
+    warm_us, warm_hits = {}, {}
     for name, once in execs.items():
+        h0 = compilecache.counters()["hits"]
         t0 = time.time()
         once(K)                        # warmup: compile round/chunk
         warm_us[name] = (time.time() - t0) * 1e6
+        warm_hits[name] = compilecache.counters()["hits"] - h0
+    for once in execs.values():
+        # warmup dispatches don't count toward dispatch_count/* rows
+        once.dispatches.calls = 0
     best = {name: None for name in execs}
     # min-of-reps filters machine load; reps INTERLEAVE across executors
     # so a load spike hits every row, not one — the recorded numbers are
@@ -314,22 +363,42 @@ def _bench_round_executor(quick):
             rows.append((f"rounds_per_sec/{name}", round(t / T * 1e6, 1),
                          round(T / t, 1)))
     # compile-count gate: after warmup + reps*T rounds every executor's
-    # jit cache must hold its CONVERGED signature count — 1 for every
-    # single-placement executor; 2 for chunked_seeds_mesh, whose first
-    # call sees unsharded seed batches and whose steady state carries the
-    # mesh-sharded donation round-trip.  More entries than that means a
-    # call path retraces per chunk/round, the regression the
-    # one-dispatch-per-chunk design exists to prevent.  us_per_call IS
-    # the signature count (exact and noise-free: the record gate's 25%
-    # ratio threshold turns any 1 -> 2 drift into a hard failure);
-    # derived is the warmup (trace+compile) wall time in us, recorded for
-    # trend-watching but never gated.
+    # jit cache must hold exactly ONE signature — including
+    # chunked_seeds_mesh, whose freshly built seed batches are committed
+    # onto the executor's in_shardings before the first dispatch
+    # (experiments.place_seed_batch), so the warm-up call and the
+    # mesh-sharded donation round-trip share a single signature (it used
+    # to record 2: uncommitted first inputs vs committed donated
+    # outputs).  More entries means a call path retraces per chunk/round,
+    # the regression the one-dispatch-per-chunk design exists to prevent.
+    # us_per_call IS the signature count (exact and noise-free: the
+    # record gate's 25% ratio threshold turns any 1 -> 2 drift into a
+    # hard failure); derived is the warmup (trace+compile) wall time in
+    # us, recorded for trend-watching but never gated.
     for name, once in execs.items():
         fn = getattr(once, "compiled", None)
         if fn is None or not hasattr(fn, "_cache_size"):
             continue
         rows.append((f"compile_count/{name}", float(fn._cache_size()),
                      round(warm_us[name], 1)))
+    # persistent-cache + dispatch accounting rows:
+    #   compile_time_s/<exec>: us_per_call = the warmup (trace+compile)
+    #   wall time in SECONDS; derived = persistent compilation-cache hits
+    #   served during that warmup (0 = cold cache, >= 1 = executables
+    #   deserialized from disk instead of compiled).  Absolute container
+    #   wall-clock is 2-3x noisy, so bench_record gates only the row's
+    #   PRESENCE, never the ratio.
+    #   dispatch_count/<exec>: us_per_call = measured executor dispatches
+    #   per T-round run (counting wrapper, exact and noise-free; gated);
+    #   derived = rounds advanced per dispatch.  host_loop dispatches T
+    #   times, the chunked tiers ceil(T/K), chunked_seeds_seq S*ceil(T/K).
+    for name, once in execs.items():
+        rows.append((f"compile_time_s/{name}",
+                     round(max(warm_us[name] / 1e6, 1e-6), 3),
+                     float(warm_hits[name])))
+        per_run = once.dispatches.calls / reps
+        rows.append((f"dispatch_count/{name}", round(per_run, 2),
+                     round(T / per_run, 2)))
     return rows
 
 

@@ -778,12 +778,20 @@ def make_grid_chunk_fn(cells, chunk_rounds, n_seeds, *, donate=True,
     body (``make_seeds_chunk_fn``) is unrolled INSIDE a single jit.  The
     cells are independent subgraphs, so XLA schedules them concurrently
     and the whole group costs one dispatch per chunk — the grid-packing
-    layer (``launch/experiments.run_packed_grid``) groups registry cells
-    with identical array shapes and drives one of these per group, so a
-    Section 7 grid completes in a handful of dispatch streams instead of
-    one per cell.  Per-cell, per-seed results stay bit-identical to the
-    unpacked ``make_seeds_chunk_fn`` runs (each cell's subgraph is the
-    same expression; packing changes scheduling, not math).
+    layer (``launch/experiments.run_packed_grid``) bucket-pads near-miss
+    cells, merges groups per (S, K, T) and drives one of these per group,
+    so a Section 7 grid completes in one or two dispatch streams instead
+    of one per cell.  Per-cell, per-seed results stay bit-identical to
+    the unpacked ``make_seeds_chunk_fn`` runs (each cell's subgraph is
+    the same expression; packing changes scheduling, not math).
+
+    ``in_shardings``/``out_shardings`` compose the packed jit with a live
+    seed mesh: ``launch/experiments.grid_chunk_shardings`` zips the
+    per-cell ``seed_chunk_shardings`` trees into this function's C-tuple
+    argument structure, so every cell keeps the exact placement its
+    unpacked executor would use — and the SAME builder must be reused
+    for any ``T % K`` tail, or the tail dispatch silently reverts to
+    default placement.
 
     Returned callable::
 

@@ -13,6 +13,7 @@ from repro.data.federated import (  # noqa: F401
     gather_batches_at,
     init_seed_sampler_states,
     make_device_sampler,
+    pad_store,
     padded_client_index,
     seed_data_keys,
 )

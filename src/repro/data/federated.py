@@ -159,6 +159,34 @@ def device_store(arrays: Dict[str, np.ndarray], client_indices=None,
     )
 
 
+def pad_store(store, *, m: int = 0, cap: int = 0):
+    """Pad a device store's client axis to ``m`` rows and/or its
+    sample-index capacity to ``cap`` columns (the bucket-padding substrate
+    of the packed grid layer, ``launch/experiments.pack_cells``).
+
+    Cap padding is FREE for the uniform sampler: its draws are
+    ``randint(0, counts)`` — cap-independent — and the gather only ever
+    touches columns below each row's count, so padded columns are never
+    read and the sampled stream stays bit-identical.  Row padding appends
+    clients that own a single dummy sample (index 0, count 1 so sampler
+    invariants hold) — callers give them zero availability mass
+    (``base_p`` padding) so they never enter an aggregate.  The epoch
+    sampler's per-row permutation draws ARE cap-shaped, so neither
+    padding preserves its stream; callers restrict padding to
+    uniform-mode cells.
+    """
+    import jax.numpy as jnp
+
+    idx, counts = store["idx"], store["counts"]
+    m0, cap0 = int(idx.shape[0]), int(idx.shape[1])
+    m, cap = max(int(m), m0), max(int(cap), cap0)
+    if (m, cap) == (m0, cap0):
+        return store
+    idx = jnp.pad(idx, ((0, m - m0), (0, cap - cap0)))
+    counts = jnp.pad(counts, (0, m - m0), constant_values=1)
+    return dict(store, idx=idx, counts=counts)
+
+
 SAMPLING_MODES = ("uniform", "epoch")
 
 

@@ -25,12 +25,14 @@ that grid a one-command, one-dispatch-per-chunk answer:
     model init, seeds vary the stochastic draws) or **full**
     (``--replicate full``: per-seed model re-init keyed
     ``fold_in(model_rng, j)``, the paper's fully independent replicates);
-  * a **grid-packing layer** (``--packed``): cells with identical array
-    shapes (same model/m/N/strategy-memory/sampler-state shapes) group
-    into one donated dispatch stream each
-    (``engine.make_grid_chunk_fn``), so a whole Section 7 grid advances
-    as a handful of C-cells x S-seeds x K-rounds dispatches instead of
-    one stream per cell;
+  * a **grid-packing layer** (``--packed``): cells group into donated
+    dispatch streams (``engine.make_grid_chunk_fn``) — near-miss shapes
+    are bucket-padded bit-exactly (sampler-cap columns; see
+    ``pack_cells``) and the groups merge to ONE stream per (S, K, T), so
+    a whole Section 7 grid advances as C-cells x S-seeds x K-rounds
+    dispatches in a single stream.  Composes with ``--seed-mesh``: the
+    per-cell shardings zip into the packed jit's C-tuple signature
+    (``grid_chunk_shardings``), bit-identical to the unpacked mesh runs;
   * a **reporting layer**: per-seed histories aggregate into mean±std
     curves and a paper-style results table under ``results/``
     (``launch/analysis.aggregate_seed_histories`` / ``seed_summary`` /
@@ -445,16 +447,60 @@ def build_seed_executor(fl: FLConfig, round_fn, sample_fn, n_seeds, *,
     ``k`` (the same builder serves the full-K chunks and the ``T % K``
     tail, so the tail keeps the caller's placement).  With ``mesh``, the
     executor jit carries ``seed_chunk_shardings``' in/out shardings on top
-    of the usual donation; without, it is the plain donated executor."""
+    of the usual donation; without, it is the plain donated executor.
+
+    The builder exposes the resolved input shardings as
+    ``builder.in_shardings`` (None without a mesh) — feed them to
+    ``place_seed_batch`` so the FIRST dispatch already sees mesh-committed
+    carries.  A freshly built (default-placement) carry and the donated
+    mesh-sharded output of the previous chunk are two distinct jit input
+    signatures, so skipping the placement compiles the same executor twice
+    (the old ``compile_count/chunked_seeds_mesh = 2``)."""
     if mesh is None:
-        return lambda k: make_seeds_chunk_fn(fl, round_fn, sample_fn, k,
-                                             n_seeds)
+        def builder(k):
+            return make_seeds_chunk_fn(fl, round_fn, sample_fn, k, n_seeds)
+        builder.in_shardings = None
+        return builder
     in_sh, out_sh = seed_chunk_shardings(
         mesh, fl, round_fn, sample_fn, n_seeds, states, sampler_states,
         store, data_keys)
-    return lambda k: make_seeds_chunk_fn(fl, round_fn, sample_fn, k,
-                                         n_seeds, in_shardings=in_sh,
-                                         out_shardings=out_sh)
+
+    def builder(k):
+        return make_seeds_chunk_fn(fl, round_fn, sample_fn, k, n_seeds,
+                                   in_shardings=in_sh,
+                                   out_shardings=out_sh)
+    builder.in_shardings = in_sh
+    return builder
+
+
+def place_seed_batch(in_shardings, states, sampler_states, store,
+                     data_keys):
+    """Commit a freshly built seed batch onto the executor's input
+    shardings (``build_seed_executor``'s ``builder.in_shardings``) BEFORE
+    the first dispatch.  ``jnp.stack``-built carries are uncommitted
+    default-placement arrays; dispatching them as-is keys a second jit
+    signature next to the steady-state one whose donated inputs carry the
+    mesh sharding.  ``device_put`` is bitwise-preserving, so parity is
+    untouched.  No-op when ``in_shardings`` is None (mesh-less builder)."""
+    if in_shardings is None:
+        return states, sampler_states, store, data_keys
+    return jax.device_put((states, sampler_states, store, data_keys),
+                          in_shardings)
+
+
+def _resolve_chunk_rounds(chunk_rounds, rounds):
+    """Validated dispatch chunk length: ``chunk_rounds`` clamped to the
+    run length.  Zero or negative values raise — the multi-seed and
+    packed drivers are ALWAYS chunked, and the old ``int(chunk_rounds)
+    or 8`` fallback silently turned an explicit ``--chunk-rounds 0`` into
+    K=8 (CLIs that want an auto default resolve it before calling)."""
+    K = int(chunk_rounds)
+    if K <= 0:
+        raise ValueError(
+            f"chunk_rounds={chunk_rounds} must be >= 1: the multi-seed "
+            "drivers are always chunked (0 used to silently become 8; "
+            "resolve any auto default at the CLI layer instead)")
+    return min(K, int(rounds))
 
 
 def _append_seed_records(histories, metrics, k, done, n_seeds):
@@ -545,16 +591,20 @@ def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
     and ``train.py --seeds``): device store + stateful sampler + stacked
     per-seed carry + S-batched executor, end to end.
 
-    ``chunk_rounds`` of 0 defaults to K=8; K is clamped to ``rounds`` and
-    a ``T % K`` tail executor is built automatically.  ``mesh`` (e.g.
+    ``chunk_rounds`` must be >= 1 (``_resolve_chunk_rounds`` raises on
+    the old silent 0 -> 8 fallback); K is clamped to ``rounds`` and a
+    ``T % K`` tail executor is built automatically.  ``mesh`` (e.g.
     ``launch/mesh.make_seed_mesh``'s ``('seed','pod','data')``) threads
-    the live ``seed_chunk_shardings`` through the executor jit;
+    the live ``seed_chunk_shardings`` through the executor jit and
+    commits the initial carries onto them (``place_seed_batch``) so the
+    warm-up dispatch compiles the same program as steady state;
     ``template_fn`` switches shared-template replication to paper-style
     per-seed model re-init (see ``build_seed_batch``).  Returns
     ``(states, histories, finals)`` — the seed-stacked final ``FLState``,
     one metric history per seed, and (when ``eval_fn`` is given) one
     final-eval dict per seed via ``index_seed``.
     """
+    K = _resolve_chunk_rounds(chunk_rounds, rounds)
     store = ds.device_store()
     init_fn, sample_fn = make_device_sampler(
         fl.m, fl.s, batch, mode=sampling,
@@ -563,11 +613,12 @@ def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
     states, sampler_states, data_keys = build_seed_batch(
         fl, template, rng, data_key, init_fn, store, seeds,
         template_fn=template_fn, fault=fault, stale=stale)
-    K = min(int(chunk_rounds) or 8, int(rounds))
     builder = build_seed_executor(fl, round_fn, sample_fn, seeds,
                                   mesh=mesh, states=states,
                                   sampler_states=sampler_states,
                                   store=store, data_keys=data_keys)
+    states, sampler_states, store, data_keys = place_seed_batch(
+        builder.in_shardings, states, sampler_states, store, data_keys)
     states, histories = run_seed_rounds(
         states, builder(K), rounds, K, sampler_states=sampler_states,
         store=store, data_keys=data_keys, n_seeds=seeds,
@@ -578,8 +629,54 @@ def run_multi_seed(fl: FLConfig, round_fn, template, ds, *, sampling,
     return states, histories, finals
 
 
+def _pad_m_config(sc: Scenario, fl: FLConfig, base_p, pad_m: int, *,
+                  has_fault, has_stale):
+    """Widen a cell's client axis from ``fl.m`` to ``pad_m`` with
+    zero-availability-mass padding rows (the ``m`` half of bucket
+    padding).
+
+    Padded clients carry ``base_p = 0``: every non-Markov availability
+    kind draws ``mask = uniform < p`` so they NEVER activate, and the
+    Markov chain's turn-on rate scales with ``base_p`` so once off they
+    stay off (``build_cell`` zeroes their all-on init rows).  Inactive
+    clients aggregate to exactly zero through the existing mask path —
+    every strategy weight clips its denominator, so ``p = 0`` rows are
+    inert, not NaN.  Eligibility is strict because the parity contract
+    is conservative: uniform sampling only (epoch permutations are
+    m-shaped draws), no Assumption-1 floor (``delta_floor`` would
+    resurrect the padding rows), no fault/staleness carries (their
+    traces and ring buffers are sized to the real ``m``), flat substrate
+    only.  NOTE: padding ``m`` changes the cell's rng stream shapes
+    (``split(key, m)`` etc.), so a padded cell is bit-identical to the
+    UNPADDED-DRIVER run of the same padded config — not to the original
+    ``m``-client cell.  Cap-only padding (``data.federated.pad_store``)
+    is the stronger, draw-preserving tier.
+    """
+    if pad_m == fl.m:
+        return fl, base_p
+    assert pad_m > fl.m, (pad_m, fl.m)
+    if sc.sampling != "uniform":
+        raise ValueError(
+            f"pad_m: cell {sc.name!r} uses {sc.sampling!r} sampling; "
+            "only uniform-mode cells can absorb padded clients")
+    if sc.delta_floor > 0:
+        raise ValueError(
+            f"pad_m: cell {sc.name!r} has delta_floor={sc.delta_floor}; "
+            "the Assumption-1 clamp would give padded clients non-zero "
+            "availability mass")
+    if has_fault or has_stale:
+        raise ValueError(
+            f"pad_m: cell {sc.name!r} carries fault/staleness state "
+            "sized to the real client count; padding is not supported")
+    if not fl.flat_state:
+        raise ValueError(f"pad_m: cell {sc.name!r} needs flat_state")
+    base_p = jnp.concatenate(
+        [base_p, jnp.zeros((pad_m - fl.m,), base_p.dtype)])
+    return dataclasses.replace(fl, m=pad_m), base_p
+
+
 def _cell_task(sc: Scenario, *, m, s, batch, n_samples, preset, seed,
-               use_kernel, rounds=0):
+               use_kernel, rounds=0, pad_m=0):
     """Materialize one cell's task + round function: ``(fl, round_fn,
     ds, eval_fn, init_fn, fault_state, stale_state)``.
 
@@ -591,7 +688,10 @@ def _cell_task(sc: Scenario, *, m, s, batch, n_samples, preset, seed,
     fault-free cells.  Semi-async knobs resolve here too: ``stale_max>0``
     builds the ``[tau_max, m, N]`` pending-update ring buffer (and, for
     ``stale_kind='trace'``, a staircase delay trace keyed ``seed + 3``);
-    ``stale_state`` is None for synchronous cells.
+    ``stale_state`` is None for synchronous cells.  ``pad_m > m`` widens
+    the client axis with zero-availability padding rows BEFORE the round
+    function closes over ``base_p`` (see ``_pad_m_config``) — the data
+    partition keeps ``m`` real clients.
     """
     # lazy import: train.py imports this module for --scenario/--seeds
     from repro.core import faults, staleness
@@ -633,6 +733,10 @@ def _cell_task(sc: Scenario, *, m, s, batch, n_samples, preset, seed,
                 jax.random.PRNGKey(seed + 3), m, rounds)
         stale_state = staleness.init_staleness_state(
             stcfg, FlatSpec.from_tree(params).size, m, dtrace=dtrace)
+    if pad_m:
+        fl, base_p = _pad_m_config(sc, fl, base_p, pad_m,
+                                   has_fault=fault_state is not None,
+                                   has_stale=stale_state is not None)
     rf = make_round_fn(fl, loss_fn, {}, sc.availability(), base_p,
                        fault_cfg=fc, staleness_cfg=stcfg)
     return fl, rf, params, ds, eval_fn, init_fn, fault_state, stale_state
@@ -663,11 +767,11 @@ def run_scenario(sc: Scenario, *, seeds=4, rounds=24, chunk_rounds=8,
     record: per-seed final evals, their mean±std (``final``), mean±std
     metric curves (``curves``), and the raw per-seed ``histories``.
     """
+    K = _resolve_chunk_rounds(chunk_rounds, rounds)   # fail BEFORE task build
     fl, rf, params, ds, eval_fn, init_fn, fault_state, stale_state = \
         _cell_task(
             sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
             seed=seed, use_kernel=use_kernel, rounds=rounds)
-    K = min(int(chunk_rounds) or 8, int(rounds))
     states, histories, finals = run_multi_seed(
         fl, rf, params, ds, sampling=sc.sampling, batch=batch, seeds=seeds,
         rounds=rounds, chunk_rounds=K, rng=jax.random.PRNGKey(seed),
@@ -685,16 +789,29 @@ def run_scenario(sc: Scenario, *, seeds=4, rounds=24, chunk_rounds=8,
 
 def build_cell(sc: Scenario, *, seeds, rounds, chunk_rounds, m, s, batch,
                n_samples, preset, seed, use_kernel=False,
-               replicate="shared"):
+               replicate="shared", pad_m=0):
     """Build everything one PACKED grid cell needs — task, round/sample
     fns, device store, and the stacked per-seed carry — without running
     it.  The returned dict is the unit ``pack_cells`` groups and
-    ``run_packed_grid`` drives."""
+    ``run_packed_grid`` drives.
+
+    ``pad_m > m`` widens the client axis with zero-availability padding
+    rows so a smaller cell can share a bucket shape with an ``m = pad_m``
+    one (``_pad_m_config`` documents the eligibility rules and the parity
+    contract); the padded store rows own one dummy sample each
+    (``data.federated.pad_store``) and padded Markov chains start (and
+    stay) off.  ``cap_paddable`` in the returned dict marks cells whose
+    sampler-cap column ``pack_cells(pad=True)`` may pad bit-exactly.
+    """
+    K = _resolve_chunk_rounds(chunk_rounds, rounds)   # fail BEFORE task build
     fl, rf, params, ds, eval_fn, init_fn, fault_state, stale_state = \
         _cell_task(
             sc, m=m, s=s, batch=batch, n_samples=n_samples, preset=preset,
-            seed=seed, use_kernel=use_kernel, rounds=rounds)
+            seed=seed, use_kernel=use_kernel, rounds=rounds, pad_m=pad_m)
     store = ds.device_store()
+    if fl.m > m:
+        from repro.data.federated import pad_store
+        store = pad_store(store, m=fl.m)
     init_sampler, sample_fn = make_device_sampler(
         fl.m, fl.s, batch, mode=sc.sampling,
         min_count=min(len(ix) for ix in ds.client_indices),
@@ -704,11 +821,16 @@ def build_cell(sc: Scenario, *, seeds, rounds, chunk_rounds, m, s, batch,
         init_sampler, store, seeds,
         template_fn=init_fn if replicate == "full" else None,
         fault=fault_state, stale=stale_state)
-    K = min(int(chunk_rounds) or 8, int(rounds))
+    if fl.m > m and sc.kind == "markov":
+        # padded clients must START off: base_p = 0 zeroes their turn-on
+        # rate, but init_fl_state births the whole chain all-on
+        states = states._replace(
+            markov=states.markov.at[:, m:].set(0.0))
     return dict(sc=sc, fl=fl, round_fn=rf, sample_fn=sample_fn,
                 store=store, states=states, sampler_states=sampler_states,
                 data_keys=data_keys, eval_fn=eval_fn, seeds=seeds,
-                rounds=rounds, K=K)
+                rounds=rounds, K=K,
+                cap_paddable=(sc.sampling == "uniform"))
 
 
 def _shape_sig(tree):
@@ -720,48 +842,139 @@ def _shape_sig(tree):
          str(x.dtype)) for kp, x in flat)
 
 
-def pack_cells(cells):
+def pack_cells(cells, *, pad=False):
     """Group built cells by array-shape signature — same model/m/N
     shapes, same strategy-memory shapes, same sampler-state shapes, same
     S/K/T — preserving input order within and across groups.  Every group
-    runs as ONE donated dispatch stream (``engine.make_grid_chunk_fn``):
-    the Section 7 grid packs to one group per strategy family instead of
-    one dispatch stream per cell."""
+    runs as ONE donated dispatch stream (``engine.make_grid_chunk_fn``).
+
+    ``pad=True`` widens the packing with bucket padding + stream merging:
+
+      * near-miss cells — identical signatures except the sampler-cap
+        column of the store's ``[m, cap]`` index matrix (per-cell
+        Dirichlet partitions: a heterogeneity ablation changes the max
+        client shard and nothing else) — are padded in place up to their
+        bucket's max cap (``data.federated.pad_store``).  Cap padding is
+        bit-exact for uniform-mode cells (the sampler's draws are
+        count-bounded and the gather never reads a padded column), so a
+        padded cell's results are identical to its unpadded run; cells
+        without ``cap_paddable`` are left untouched.
+      * groups are then merged down to ONE stream per (seeds, K, rounds):
+        ``make_grid_chunk_fn`` takes C-tuples of per-cell carries and
+        never requires cells to share shapes, so the whole Section 7 grid
+        (one shape signature per strategy family) advances as a single
+        dispatch stream.  Padding still matters on top of the merge — it
+        collapses near-miss cells onto one subgraph shape, so XLA (and
+        the persistent compilation cache, ``launch/compilecache``) sees
+        one program where it would otherwise compile one per alpha.
+
+    Client-axis (``m``) padding enters upstream through
+    ``build_cell(pad_m=...)`` — it has to rebuild the round function with
+    zero-mass ``base_p`` rows, which only the cell builder can do; cells
+    padded there group here by their padded signature like any other.
+    """
+    if pad:
+        from repro.data.federated import pad_store
+        buckets: dict = {}
+        for c in cells:
+            if not c.get("cap_paddable"):
+                continue
+            # bucket key = full signature with the cap column abstracted
+            # away (idx[:, :1] keeps treedef/dtype/m, normalizes cap)
+            key = (_shape_sig(c["states"]), _shape_sig(c["sampler_states"]),
+                   _shape_sig(dict(c["store"],
+                                   idx=c["store"]["idx"][:, :1])),
+                   c["seeds"], c["K"], c["rounds"])
+            buckets.setdefault(key, []).append(c)
+        for bucket in buckets.values():
+            cap = max(c["store"]["idx"].shape[1] for c in bucket)
+            for c in bucket:
+                short = cap - c["store"]["idx"].shape[1]
+                if short:
+                    c["store"] = pad_store(c["store"], cap=cap)
+                    c["padded_cap"] = short
     groups: dict = {}
     for c in cells:
-        sig = (_shape_sig(c["states"]), _shape_sig(c["sampler_states"]),
-               _shape_sig(c["store"]), c["seeds"], c["K"], c["rounds"])
+        sig = ((c["seeds"], c["K"], c["rounds"]) if pad else
+               (_shape_sig(c["states"]), _shape_sig(c["sampler_states"]),
+                _shape_sig(c["store"]), c["seeds"], c["K"], c["rounds"]))
         groups.setdefault(sig, []).append(c)
     return list(groups.values())
 
 
-def run_packed_group(cells, *, eval_every=0, log_every=0):
-    """Drive one shape-compatible group: ceil(T/K) packed dispatches, each
+def grid_chunk_shardings(mesh, cells):
+    """Per-cell ``seed_chunk_shardings`` assembled into the C-tuple
+    argument structure of ``make_grid_chunk_fn``: the packed jit takes
+    ``(states_t, sampler_states_t, stores_t, data_keys_t)`` — each a
+    C-tuple over cells — so its in/out shardings are the per-cell
+    sharding trees zipped the same way.  Every cell gets the SAME mesh
+    placement it would get unpacked (``seed_pspecs`` over
+    ``('seed','pod','data')``), which is what makes packed × mesh runs
+    bit-identical to their unpacked counterparts."""
+    per = [seed_chunk_shardings(mesh, c["fl"], c["round_fn"],
+                                c["sample_fn"], c["seeds"], c["states"],
+                                c["sampler_states"], c["store"],
+                                c["data_keys"]) for c in cells]
+    in_sh = tuple(zip(*(p[0] for p in per)))
+    out_sh = tuple(zip(*(p[1] for p in per)))
+    return in_sh, out_sh
+
+
+def run_packed_group(cells, *, mesh=None, eval_every=0, log_every=0):
+    """Drive one packed group: ceil(T/K) packed dispatches, each
     advancing every cell x seed x round in the group.  Per-cell results
     are identical to the unpacked ``run_seed_rounds`` drive (the packed
-    jit unrolls the same per-cell subgraphs).  Returns ``(states_t,
+    jit unrolls the same per-cell subgraphs).  ``mesh`` threads per-cell
+    seed-mesh shardings through the packed jit
+    (``grid_chunk_shardings``) and commits the freshly built carries onto
+    them before the first dispatch — one jit signature, warm-up included
+    (same placement rule as ``place_seed_batch``).  Returns ``(states_t,
     histories_t)`` — per-cell seed-stacked states and per-cell, per-seed
     metric histories."""
     assert cells
     seeds, K, T = cells[0]["seeds"], cells[0]["K"], cells[0]["rounds"]
+    assert all(c["seeds"] == seeds and c["K"] == K and c["rounds"] == T
+               for c in cells), "pack_cells groups cells by (S, K, T)"
     pairs = [(c["round_fn"], c["sample_fn"]) for c in cells]
     states_t = tuple(c["states"] for c in cells)
     sampler_t = tuple(c["sampler_states"] for c in cells)
     stores_t = tuple(c["store"] for c in cells)
     keys_t = tuple(c["data_keys"] for c in cells)
-    packed = make_grid_chunk_fn(pairs, K, seeds)
+    in_sh = out_sh = None
+    if mesh is not None:
+        in_sh, out_sh = grid_chunk_shardings(mesh, cells)
+        states_t, sampler_t, stores_t, keys_t = jax.device_put(
+            (states_t, sampler_t, stores_t, keys_t), in_sh)
+
+    def make_packed(k):
+        # ONE builder for the full-K chunks AND the T % K tail: the tail
+        # used to be rebuilt without shardings, silently dropping the
+        # mesh placement for the last dispatch
+        return make_grid_chunk_fn(pairs, k, seeds, in_shardings=in_sh,
+                                  out_shardings=out_sh)
+
+    packed = make_packed(K)
     tail_fn = None
     histories = [[[] for _ in range(seeds)] for _ in cells]
     done = 0
+    warmed = set()
     while done < T:
         k = min(K, T - done)
         if k == K:
             f = packed
         else:
-            tail_fn = tail_fn or make_grid_chunk_fn(pairs, k, seeds)
+            tail_fn = tail_fn or make_packed(k)
             f = tail_fn
-        states_t, sampler_t, metrics_t = f(states_t, sampler_t, stores_t,
-                                           keys_t)
+        if id(f) in warmed:
+            # warm packed dispatch is transfer-free (same rail as
+            # run_seed_rounds): every carry is device resident
+            with jax.transfer_guard("disallow"):
+                states_t, sampler_t, metrics_t = f(states_t, sampler_t,
+                                                   stores_t, keys_t)
+        else:
+            states_t, sampler_t, metrics_t = f(states_t, sampler_t,
+                                               stores_t, keys_t)
+            warmed.add(id(f))
         metrics_t = jax.device_get(metrics_t)  # ONE host sync per dispatch
         for ci, metrics in enumerate(metrics_t):
             _append_seed_records(histories[ci], metrics, k, done, seeds)
@@ -782,22 +995,28 @@ def run_packed_group(cells, *, eval_every=0, log_every=0):
 def run_packed_grid(names, *, seeds=4, rounds=24, chunk_rounds=8, m=16,
                     s=3, batch=8, n_samples=4000, preset="image", seed=0,
                     eval_every=0, use_kernel=False, log_every=0,
-                    replicate="shared"):
+                    replicate="shared", mesh=None, pad=True):
     """The packed grid driver behind ``--packed``: build every named
-    cell, group shape-compatible cells (``pack_cells``), advance each
-    group as one donated dispatch stream, and return the per-cell records
-    in input order (same shape as ``run_scenario``'s)."""
+    cell, group cells (``pack_cells`` — with ``pad=True``, bucket-padded
+    and merged to one stream per (S, K, T)), advance each group as one
+    donated dispatch stream, and return the per-cell records in input
+    order (same shape as ``run_scenario``'s).  ``mesh`` threads per-cell
+    seed-mesh shardings through every packed jit
+    (``grid_chunk_shardings``)."""
     cells = [build_cell(get_scenario(n), seeds=seeds, rounds=rounds,
                         chunk_rounds=chunk_rounds, m=m, s=s, batch=batch,
                         n_samples=n_samples, preset=preset, seed=seed,
                         use_kernel=use_kernel, replicate=replicate)
              for n in names]
-    groups = pack_cells(cells)
+    groups = pack_cells(cells, pad=pad)
+    padded = sum(1 for c in cells if c.get("padded_cap"))
     print(f"packed {len(cells)} cells into {len(groups)} dispatch "
-          f"stream(s)", flush=True)
+          f"stream(s)"
+          + (f" ({padded} cap-padded)" if padded else ""), flush=True)
     recs = {}
     for group in groups:
-        states_t, hists = run_packed_group(group, eval_every=eval_every,
+        states_t, hists = run_packed_group(group, mesh=mesh,
+                                           eval_every=eval_every,
                                            log_every=log_every)
         for c, st, hs in zip(group, states_t, hists):
             finals = ([c["eval_fn"](index_seed(st, j))
@@ -863,7 +1082,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="grid packing: group shape-compatible cells and "
                          "advance each group as ONE donated dispatch per "
                          "chunk (C cells x S seeds x K rounds), instead "
-                         "of one dispatch stream per cell")
+                         "of one dispatch stream per cell; composes with "
+                         "--seed-mesh (per-cell shardings thread through "
+                         "the packed jit)")
+    ap.add_argument("--no-pad-buckets", action="store_true",
+                    help="with --packed: disable bucket padding + stream "
+                         "merging and pack strictly shape-identical cells "
+                         "only (one stream per shape signature — the "
+                         "pre-padding behaviour)")
+    ap.add_argument("--compile-cache", default="", metavar="DIR",
+                    help="enable jax's persistent compilation cache in "
+                         "DIR ('auto' resolves to ~/.cache/repro-jax/"
+                         "<jax+backend tag>, see launch/compilecache); "
+                         "warm grid re-runs then skip XLA compilation "
+                         "entirely")
     ap.add_argument("--replicate", default="shared",
                     choices=["shared", "full"],
                     help="seed-replication mode: 'shared' starts every "
@@ -876,7 +1108,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "(launch/mesh.make_seed_mesh, auto-sized from "
                          "--seeds and the device count) and thread the "
                          "seed_pspecs shardings through the live "
-                         "executor jit (unpacked cells)")
+                         "executor jit — per-cell for unpacked runs, "
+                         "zipped into C-tuples for --packed groups")
     ap.add_argument("--out-dir", default="results",
                     help="per-cell JSON + the results table land here")
     ap.add_argument("--no-save", action="store_true")
@@ -905,18 +1138,13 @@ def main(argv=None):
 
     mesh = None
     if args.seed_mesh:
-        if args.packed:
-            # refuse rather than silently run the packed executor
-            # unsharded while claiming a seed mesh (threading per-cell
-            # mesh shardings through make_grid_chunk_fn is a ROADMAP
-            # follow-up)
-            raise SystemExit(
-                "--seed-mesh is not yet wired into --packed: the packed "
-                "executor would run without the mesh shardings; drop one "
-                "of the two flags")
         from repro.launch.mesh import make_seed_mesh
         mesh = make_seed_mesh(args.seeds)
         print(f"seed mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}",
+              flush=True)
+    if args.compile_cache:
+        from repro.launch import compilecache
+        print(f"compilation cache: {compilecache.enable(args.compile_cache)}",
               flush=True)
 
     if args.packed:
@@ -926,7 +1154,8 @@ def main(argv=None):
             batch=args.batch, n_samples=args.n_samples,
             preset=args.preset, seed=args.seed,
             eval_every=args.eval_every, use_kernel=args.use_kernel,
-            log_every=max(1, args.rounds // 4), replicate=args.replicate)
+            log_every=max(1, args.rounds // 4), replicate=args.replicate,
+            mesh=mesh, pad=not args.no_pad_buckets)
     else:
         recs = []
         for name in names:

@@ -96,3 +96,14 @@ def mesh_axis_sizes(mesh):
 
 def n_chips(mesh):
     return int(mesh.devices.size)
+
+
+def backend_cache_tag() -> str:
+    """Key of the persistent compilation-cache directory (and of CI's
+    cache restore step): serialized XLA executables are only reusable
+    within one (jax version, backend, device kind), so the cache lives
+    under a tag naming exactly those — e.g. ``jax0.4.37-cpu-cpu`` or
+    ``jax0.4.37-tpu-TPU-v5e``.  See ``launch/compilecache``."""
+    import re
+    kind = re.sub(r"[^A-Za-z0-9_.-]+", "-", jax.devices()[0].device_kind)
+    return f"jax{jax.__version__}-{jax.default_backend()}-{kind}"

@@ -142,7 +142,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--chunk-rounds", type=int, default=0,
                     help="K>0: scan-chunked executor — K rounds per "
                          "dispatch, device-resident batch sampling, "
-                         "donated FLState, eval/ckpt at chunk boundaries")
+                         "donated FLState, eval/ckpt at chunk boundaries "
+                         "(0 = host-loop single-seed, auto K=8 with "
+                         "--seeds > 1)")
+    ap.add_argument("--compile-cache", default="", metavar="DIR",
+                    help="enable jax's persistent compilation cache in "
+                         "DIR ('auto' resolves to ~/.cache/repro-jax/"
+                         "<jax+backend tag>, see launch/compilecache); "
+                         "warm re-runs skip XLA compilation entirely")
     ap.add_argument("--sparse-cohort", type=int, default=0,
                     metavar="C_MAX",
                     help="O(cohort) rounds (core/cohort.py): gather the "
@@ -246,6 +253,11 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv=None):
     ap = build_parser()
     args = ap.parse_args(argv)
+
+    if args.compile_cache:
+        from repro.launch import compilecache
+        print(f"compilation cache: {compilecache.enable(args.compile_cache)}",
+              flush=True)
 
     scenario = None
     if args.scenario:
@@ -432,7 +444,9 @@ def _main_multi_seed(args, fl, round_fn, params, ds, eval_fn, rng, init_fn,
     states, hists, finals = run_multi_seed(
         fl, round_fn, params, ds, sampling=args.sampling, batch=args.batch,
         seeds=args.seeds, rounds=args.rounds,
-        chunk_rounds=args.chunk_rounds, rng=rng,
+        # the CLI's 0 is the documented auto sentinel; the driver itself
+        # now REJECTS chunk_rounds <= 0 instead of silently assuming 8
+        chunk_rounds=args.chunk_rounds or 8, rng=rng,
         data_key=jax.random.PRNGKey(args.seed + 1), eval_fn=eval_fn,
         eval_every=args.eval_every, log_every=max(1, args.rounds // 10),
         template_fn=init_fn if args.replicate == "full" else None,

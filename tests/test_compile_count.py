@@ -175,6 +175,79 @@ def test_sparse_cohort_executor_compiles_once(rdt):
         "must round-trip with stable shapes and dtypes")
 
 
+def test_seeds_mesh_executor_compiles_once():
+    """The mesh-sharded S-batched executor holds ONE signature INCLUDING
+    its first dispatch: place_seed_batch commits the freshly built
+    carries onto builder.in_shardings, so warm-up and the donated
+    steady state share a signature.  This tier used to pin 2 — an
+    uncommitted jnp.stack-built carry and the mesh-committed donated
+    output were two distinct jit input signatures."""
+    from repro.launch.experiments import (build_seed_executor,
+                                          place_seed_batch)
+    from repro.launch.mesh import make_seed_mesh
+
+    K, T = 4, 12
+    cfg, rf, store, init_fn, sample_fn = _cfg_rf()
+    mesh = make_seed_mesh(SEEDS)
+
+    def fresh():
+        return build_seed_batch(cfg, _tr0(), jax.random.PRNGKey(0),
+                                jax.random.PRNGKey(42), init_fn, store,
+                                SEEDS)
+
+    states, sss, dks = fresh()
+    builder = build_seed_executor(cfg, rf, sample_fn, SEEDS, mesh=mesh,
+                                  states=states, sampler_states=sss,
+                                  store=store, data_keys=dks)
+    assert builder.in_shardings is not None
+    fn = builder(K)
+    for _ in range(2):   # donated carries -> rebuild fresh ones per run
+        states, sss, dks = fresh()
+        states, sss, st, dks = place_seed_batch(builder.in_shardings,
+                                                states, sss, store, dks)
+        states, hists = run_seed_rounds(states, fn, T, K,
+                                        sampler_states=sss, store=st,
+                                        data_keys=dks, n_seeds=SEEDS)
+    assert all(len(h) == T for h in hists)
+    assert fn._cache_size() == 1, (
+        "mesh-sharded executor keyed a second signature: fresh carries "
+        "must be committed to builder.in_shardings before dispatch")
+
+
+def test_padded_grid_executor_compiles_once():
+    """A cap-padded 2-shape grid compiles ONCE: bucket padding collapses
+    two alpha ablations (different Dirichlet partitions -> different
+    sampler caps) onto one program shape, so the packed executor holds a
+    single signature across dispatches."""
+    from repro.launch.experiments import build_cell, get_scenario, \
+        pack_cells
+
+    kw = dict(seeds=SEEDS, rounds=4, chunk_rounds=2, m=6, s=2, batch=4,
+              n_samples=600, preset="image", seed=0)
+    names = ("fedawe/sine", "fedawe/sine@iid")
+
+    def built():
+        cells = [build_cell(get_scenario(n), **kw) for n in names]
+        groups = pack_cells(cells, pad=True)
+        assert len(groups) == 1 and len(groups[0]) == 2
+        assert any(c.get("padded_cap") for c in cells), \
+            "the alpha ablation pair must need cap padding"
+        return groups[0]
+
+    group = built()
+    packed = make_grid_chunk_fn([(c["round_fn"], c["sample_fn"])
+                                 for c in group], 2, SEEDS)
+    for i in range(2):   # donated carries -> rebuild the cells per call
+        g = group if i == 0 else built()
+        packed(tuple(c["states"] for c in g),
+               tuple(c["sampler_states"] for c in g),
+               tuple(c["store"] for c in g),
+               tuple(c["data_keys"] for c in g))
+    assert packed._cache_size() == 1, (
+        "padded grid executor retraced: cap padding must yield one "
+        "stable packed signature")
+
+
 def test_tail_executor_is_a_second_executable_not_a_retrace():
     """A T % K tail compiles its own (shorter-scan) executable; the main
     chunk executable still holds exactly one signature."""

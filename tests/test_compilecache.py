@@ -1,0 +1,85 @@
+"""Persistent XLA compilation-cache wiring (launch/compilecache).
+
+The grid's short runs are warm-up dominated, so ``--compile-cache``
+points jax's persistent compilation cache at a KEYED directory
+(``launch.mesh.backend_cache_tag`` — jax version + backend + device
+kind) with the min-compile-time floor dropped to zero.  Under test:
+
+  * the tag keys everything a serialized executable depends on and is
+    path-safe (it names the CI ``actions/cache`` key and the directory);
+  * ``enable`` creates the directory, a fresh program populates it, and
+    recompiling the same program after dropping the in-memory caches is
+    served FROM DISK — observed through the module's hit/miss counters,
+    the same numbers the bench surfaces as ``compile_time_s/*``'s
+    derived column.
+
+The enable test snapshots and restores the jax config (and resets the
+in-process cache handle) so the rest of the suite never writes cache
+files or pays lookup overhead.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import compilecache
+from repro.launch.mesh import backend_cache_tag
+
+
+def test_backend_cache_tag_keys_version_and_backend():
+    tag = backend_cache_tag()
+    assert tag.startswith(f"jax{jax.__version__}-")
+    assert jax.default_backend() in tag
+    # the tag names a directory AND a CI cache key: path-safe chars only
+    assert "/" not in tag and " " not in tag and os.sep not in tag
+
+
+def test_default_cache_dir_is_keyed_and_base_overridable(monkeypatch,
+                                                         tmp_path):
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_BASE", str(tmp_path / "base"))
+    d = compilecache.default_cache_dir()
+    assert d == os.path.join(str(tmp_path / "base"), backend_cache_tag())
+
+
+def test_enable_persists_and_serves_from_disk(tmp_path):
+    """``enable`` -> fresh program persisted (a miss, files on disk);
+    same program after ``jax.clear_caches()`` -> deserialized from disk
+    (a hit).  The counters are how the bench's ``compile_time_s/*``
+    derived column distinguishes a warm-from-disk run from a cold one."""
+    from jax.experimental.compilation_cache import \
+        compilation_cache as cc
+
+    old_dir = jax.config.jax_compilation_cache_dir
+    old_min_t = jax.config.jax_persistent_cache_min_compile_time_secs
+    old_min_b = jax.config.jax_persistent_cache_min_entry_size_bytes
+    target = tmp_path / "cc"
+    try:
+        path = compilecache.enable(str(target))
+        assert path == str(target) and os.path.isdir(path)
+        assert compilecache.cache_dir() == path
+        # idempotent re-point
+        assert compilecache.enable(str(target)) == path
+
+        # an odd shape + odd constants: a program no other test compiles
+        f = jax.jit(lambda x: (x * 3.125 + 0.625).sum())
+        x = jnp.arange(97, dtype=jnp.float32)
+        before = compilecache.counters()
+        f(x).block_until_ready()
+        assert os.listdir(path), "compile must persist an executable"
+        mid = compilecache.counters()
+        assert mid["misses"] >= before["misses"] + 1, \
+            "a never-seen program must count as a cache miss"
+
+        jax.clear_caches()   # drop the in-memory executable cache
+        g = jax.jit(lambda x: (x * 3.125 + 0.625).sum())
+        g(x).block_until_ready()
+        after = compilecache.counters()
+        assert after["hits"] >= mid["hits"] + 1, \
+            "recompiling the same program must be served from disk"
+    finally:
+        jax.config.update("jax_compilation_cache_dir", old_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          old_min_t)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes",
+                          old_min_b)
+        cc.reset_cache()

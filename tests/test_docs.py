@@ -145,6 +145,25 @@ def test_readme_shows_seed_axis_flags():
         assert needle in text, f"README lost {needle}"
 
 
+def test_readme_shows_packed_mesh_and_compile_cache():
+    """The whole-grid single-program features stay documented: the
+    README must keep the --packed --seed-mesh composition quickstart,
+    the bucket-padding opt-out, the persistent-compilation-cache flag,
+    and the new bench row families; BENCHMARKS.md must keep their
+    glossary rows and the cache-keying/CI-restore semantics."""
+    text = open(README).read()
+    for needle in ("--packed --seed-mesh", "--compile-cache",
+                   "--no-pad-buckets", "--grid paper-sec7",
+                   "compile_time_s/", "dispatch_count/"):
+        assert needle in text, f"README lost {needle}"
+    bench = open(os.path.join(REPO, "docs", "BENCHMARKS.md")).read()
+    for needle in ("compile_count/<exec>", "dispatch_count/<exec>",
+                   "compile_time_s/<exec>", "Persistent compilation cache",
+                   "backend_cache_tag", "actions/cache",
+                   "REPRO_COMPILE_CACHE_BASE", "--compile-cache"):
+        assert needle in bench, f"BENCHMARKS.md lost {needle}"
+
+
 def test_readme_shows_semi_async_quickstart():
     """The semi-async substrate stays documented: the README must keep
     the staleness train flags, the +staleness dry-run variant, the

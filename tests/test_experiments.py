@@ -19,6 +19,8 @@ Guarantees under test:
   * seed aggregation — mean±std curves, final summaries and the
     paper-style results table.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -287,6 +289,55 @@ def test_seed_summary_and_results_table(tmp_path):
     assert "| scenario |" in text and "fedawe/sine" in text
     import json
     assert json.load(open(str(tmp_path / "table.json"))) == rows
+
+
+def test_chunk_rounds_zero_or_negative_rejected():
+    """``chunk_rounds=0`` used to silently become K=8 inside the drivers
+    (``int(chunk_rounds) or 8``); it now raises loudly, BEFORE the cell's
+    task is built, in both the unpacked and packed entry points (the
+    CLIs resolve their auto default themselves)."""
+    from repro.launch.experiments import (_resolve_chunk_rounds,
+                                          build_cell, run_scenario)
+
+    assert _resolve_chunk_rounds(8, 5) == 5      # still clamps to T
+    assert _resolve_chunk_rounds(2, 5) == 2
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="must be >= 1"):
+            _resolve_chunk_rounds(bad, 8)
+    kw = dict(seeds=2, rounds=4, m=6, s=2, batch=4, n_samples=600,
+              preset="image", seed=0)
+    with pytest.raises(ValueError, match="chunk_rounds=0"):
+        run_scenario(get_scenario("fedawe/sine"), chunk_rounds=0, **kw)
+    with pytest.raises(ValueError, match="chunk_rounds=0"):
+        build_cell(get_scenario("fedawe/sine"), chunk_rounds=0, **kw)
+
+
+def test_pad_m_eligibility_is_strict():
+    """Client-axis padding only applies where zero-mass rows are provably
+    inert: uniform sampling, no Assumption-1 floor, no fault/staleness
+    carries, flat substrate.  Everything else must refuse loudly rather
+    than corrupt a padded cell's draws."""
+    from repro.launch.experiments import _pad_m_config
+
+    fl = FLConfig(m=M, s=S_, eta_l=0.05, strategy="fedawe",
+                  flat_state=True)
+    p = jnp.full((M,), 0.5)
+    ok = Scenario(name="ok", strategy="fedawe")
+    fl2, p2 = _pad_m_config(ok, fl, p, 8, has_fault=False,
+                            has_stale=False)
+    assert fl2.m == 8 and p2.shape == (8,)
+    assert float(p2[M:].sum()) == 0.0, "padded rows carry zero mass"
+    with pytest.raises(ValueError, match="sampling"):
+        _pad_m_config(Scenario(name="e", sampling="epoch"), fl, p, 8,
+                      has_fault=False, has_stale=False)
+    with pytest.raises(ValueError, match="delta_floor"):
+        _pad_m_config(Scenario(name="f", delta_floor=0.05), fl, p, 8,
+                      has_fault=False, has_stale=False)
+    with pytest.raises(ValueError, match="fault"):
+        _pad_m_config(ok, fl, p, 8, has_fault=True, has_stale=False)
+    with pytest.raises(ValueError, match="flat_state"):
+        _pad_m_config(ok, dataclasses.replace(fl, flat_state=False), p,
+                      8, has_fault=False, has_stale=False)
 
 
 # ---------------------------------------------------------------------------

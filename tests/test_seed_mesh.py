@@ -260,7 +260,10 @@ def test_packed_grid_bit_identical_to_unpacked_cells():
 
 def test_pack_cells_groups_by_shape_signature():
     """Cells whose state shapes differ (stateful MIFA memory vs stateless
-    fedavg) land in different groups; same-shape cells share one."""
+    fedavg) land in different groups; same-shape cells share one.  With
+    ``pad=True`` the shape split stops mattering: ``make_grid_chunk_fn``
+    never required cells to share shapes, so the groups merge down to ONE
+    dispatch stream per (seeds, K, rounds)."""
     from repro.launch.experiments import build_cell, get_scenario, \
         pack_cells
 
@@ -272,3 +275,128 @@ def test_pack_cells_groups_by_shape_signature():
     sizes = sorted(len(g) for g in groups)
     assert sizes == [1, 2], [
         [c["sc"].name for c in g] for g in groups]
+    merged = pack_cells(cells, pad=True)
+    assert [len(g) for g in merged] == [3], \
+        "pad=True must merge same-(S,K,T) cells into one stream"
+    # same alpha everywhere -> same sampler cap -> nothing to pad
+    assert not any(c.get("padded_cap") for c in cells)
+
+
+# ---------------------------------------------------------------------------
+# packed x seed-mesh composition + bucket padding
+# ---------------------------------------------------------------------------
+
+def test_packed_mesh_bit_parity_including_tail():
+    """run_packed_group under the seed mesh == each cell's own
+    mesh-sharded S-batched drive (build_seed_executor +
+    place_seed_batch), to the bit — final states AND per-seed history
+    records — with T=5/K=2 so the T % K tail goes through the packed
+    builder too (the tail used to be rebuilt WITHOUT the caller's
+    shardings, silently dropping the mesh placement for the last
+    dispatch)."""
+    from repro.launch.experiments import place_seed_batch, run_packed_group
+
+    T, K = 5, 2
+    mesh = make_seed_mesh(SEEDS)
+    rng, dkey = jax.random.PRNGKey(0), jax.random.PRNGKey(42)
+
+    def build(kind):
+        cfg, rf, store, init_fn, sample_fn = _cfg_rf("uniform", kind)
+        states, sss, dks = build_seed_batch(cfg, _tr0(), rng, dkey,
+                                            init_fn, store, SEEDS)
+        return dict(fl=cfg, round_fn=rf, sample_fn=sample_fn, store=store,
+                    states=states, sampler_states=sss, data_keys=dks,
+                    eval_fn=None, seeds=SEEDS, rounds=T, K=K)
+
+    kinds = ("sine", "markov")
+    refs = []
+    for kind in kinds:
+        c = build(kind)
+        builder = build_seed_executor(
+            c["fl"], c["round_fn"], c["sample_fn"], SEEDS, mesh=mesh,
+            states=c["states"], sampler_states=c["sampler_states"],
+            store=c["store"], data_keys=c["data_keys"])
+        states, sss, store, dks = place_seed_batch(
+            builder.in_shardings, c["states"], c["sampler_states"],
+            c["store"], c["data_keys"])
+        st, hists = run_seed_rounds(states, builder(K), T, K,
+                                    sampler_states=sss, store=store,
+                                    data_keys=dks, n_seeds=SEEDS,
+                                    make_tail_fn=builder)
+        refs.append((st, hists))
+
+    states_t, hists_t = run_packed_group([build(k) for k in kinds],
+                                         mesh=mesh)
+    for ci in range(len(kinds)):
+        ref_st, ref_h = refs[ci]
+        for a, b in zip(jax.tree.leaves(ref_st._replace(spec=None)),
+                        jax.tree.leaves(states_t[ci]._replace(spec=None))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert hists_t[ci] == ref_h
+
+
+@pytest.mark.slow
+def test_bucket_cap_padding_bit_parity():
+    """Two alpha ablations of one cell (different Dirichlet partitions ->
+    different sampler caps) bucket-pad into ONE packed stream whose
+    per-cell records are IDENTICAL to their unpadded ``run_scenario``
+    drives: cap padding never changes a draw (the sampler's picks are
+    count-bounded and the gather never reads a padded column)."""
+    import json
+
+    from repro.launch.experiments import (build_cell, get_scenario,
+                                          pack_cells, run_packed_grid,
+                                          run_scenario)
+
+    kw = dict(seeds=2, rounds=5, chunk_rounds=2, m=6, s=2, batch=4,
+              n_samples=600, preset="image", seed=0)
+    names = ("fedawe/sine", "fedawe/sine@iid")
+    cells = [build_cell(get_scenario(n), **kw) for n in names]
+    caps = [c["store"]["idx"].shape[1] for c in cells]
+    assert caps[0] != caps[1], "ablation pair must differ in cap"
+    groups = pack_cells(cells, pad=True)
+    assert len(groups) == 1 and len(groups[0]) == 2
+    assert sum(bool(c.get("padded_cap")) for c in cells) == 1
+
+    refs = [run_scenario(get_scenario(n), **kw) for n in names]
+    got = run_packed_grid(list(names), pad=True, **kw)
+    assert json.dumps(got, default=str) == json.dumps(refs, default=str)
+
+
+@pytest.mark.slow
+def test_pad_m_parity_and_padded_rows_inert():
+    """A client-axis-padded cell (``build_cell(pad_m=...)``) driven
+    packed == the SAME padded config under the plain S-batched executor,
+    to the bit — and its padded clients are provably inert: their
+    participation clocks never tick and their Markov chains stay off.
+    (Padding m changes the rng stream shapes, so the contract is parity
+    with the padded config's own unpacked drive, not with the original
+    m-client cell — see _pad_m_config.)"""
+    from repro.launch.experiments import (build_cell, get_scenario,
+                                          run_packed_group)
+
+    kw = dict(seeds=2, rounds=4, chunk_rounds=2, m=6, s=2, batch=4,
+              n_samples=600, preset="image", seed=0)
+    PAD = 8
+    cell = build_cell(get_scenario("fedawe/markov"), pad_m=PAD, **kw)
+    assert cell["fl"].m == PAD
+    assert cell["store"]["idx"].shape[0] == PAD
+
+    ref = build_cell(get_scenario("fedawe/markov"), pad_m=PAD, **kw)
+    chunk_fn = make_seeds_chunk_fn(ref["fl"], ref["round_fn"],
+                                   ref["sample_fn"], 2, 2)
+    ref_st, ref_h = run_seed_rounds(
+        ref["states"], chunk_fn, 4, 2,
+        sampler_states=ref["sampler_states"], store=ref["store"],
+        data_keys=ref["data_keys"], n_seeds=2)
+
+    states_t, hists_t = run_packed_group([cell])
+    for a, b in zip(jax.tree.leaves(ref_st._replace(spec=None)),
+                    jax.tree.leaves(states_t[0]._replace(spec=None))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hists_t[0] == ref_h
+    st = states_t[0]
+    assert (np.asarray(st.tau)[:, 6:] == -1).all(), \
+        "padded clients must never participate"
+    assert (np.asarray(st.markov)[:, 6:] == 0.0).all(), \
+        "padded Markov chains must start (and stay) off"

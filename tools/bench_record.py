@@ -23,7 +23,14 @@ absolute times.  The ``compile_count/*`` rows ride the same gate with
 exact semantics: their us_per_call is the executor's jit signature-cache
 size after the full bench (expected 1.0 — one compile per shape
 signature), so a change that makes any executor retrace per chunk fails
-the ratio check outright, noise-free:
+the ratio check outright, noise-free.  ``dispatch_count/*`` rows gate the
+same way (measured dispatches per bench run — exact integers).
+``compile_time_s/*`` rows are the one exception: their us_per_call is a
+warmup wall-clock in SECONDS (absolute, so 2-3x container-noisy) and
+their derived column is the persistent compilation-cache hit count
+during that warmup (launch/compilecache) — ``--check`` gates only their
+presence (a LOST row still fails) and prints the trend without judging
+it:
 
     python tools/bench_record.py --check
 
@@ -112,6 +119,24 @@ REQUIRED_ROWS = (
     "compile_count/host_loop",
     "compile_count/chunked",
     "compile_count/chunked_seeds",
+    # ... including the mesh tier: place_seed_batch commits fresh carries
+    # onto the executor's in_shardings before the first dispatch, so this
+    # row is 1.0 like every other (it used to be a pinned 2.0)
+    "compile_count/chunked_seeds_mesh",
+    # warmup wall seconds per executor; derived = persistent
+    # compilation-cache hits during that warmup (launch/compilecache).
+    # Presence-gated only — absolute wall-clock is never ratio-gated.
+    "compile_time_s/host_loop",
+    "compile_time_s/chunked",
+    "compile_time_s/chunked_seeds",
+    "compile_time_s/chunked_seeds_mesh",
+    # measured executor dispatches per T-round bench run (exact, gated):
+    # host_loop = T, the chunked tiers = ceil(T/K) — the
+    # one-dispatch-per-chunk contract as a recorded number
+    "dispatch_count/host_loop",
+    "dispatch_count/chunked",
+    "dispatch_count/chunked_seeds",
+    "dispatch_count/chunked_seeds_mesh",
 )
 
 
@@ -175,6 +200,12 @@ def check(baseline_path=None, threshold=0.25, rows=None):
             print(f"  LOST {name}: baseline {old:.1f} us but fresh run "
                   f"has {new!r}")
             regressed.append(name)
+            continue
+        if name.startswith("compile_time_s/"):
+            # absolute warmup wall-clock (2-3x container noise): presence
+            # is gated above, the trend is informational only
+            print(f"  INFO      {name}: {old:.3f} -> {new:.3f} s "
+                  "(not ratio-gated)")
             continue
         ratio = new / old
         flag = "REGRESSED" if ratio > 1.0 + threshold else "ok"
